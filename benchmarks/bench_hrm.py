@@ -1,0 +1,85 @@
+"""Paper Figs. 4/5 (HRM turning/balance points) and Fig. 10 (policy vs
+hardware sweep).
+
+Fig. 4/5: for Mixtral decode on L4/T4/v5e, report the attention and FFN
+operational intensities, the P1/P2 critical intensities and the balance
+point — the quantities the paper reads off its HRM plots.
+
+Fig. 10: sweep CPU→GPU bandwidth × CPU scaling ratio on the 2×A100 setup
+and report the chosen policy (attention device, r_w, r_c), reproducing
+the paper's directional findings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import hrm as H
+from repro.core import policy as P
+
+
+def turning_points(csv=True):
+    cfg = get_config("mixtral-8x7b")
+    rows = []
+    for preset in ("l4", "t4", "v5e"):
+        hw = H.preset(preset)
+        lw = H.LayerWorkload.decode(cfg, batch=128, ctx=576)
+        ia = lw.intensity_attn_vs_kv()
+        p1a = H.turning_point_p1(hw, "gpu", "cpu", ia)
+        at_cpu = ia < p1a
+        rows.append((preset, "attention", ia, p1a, at_cpu))
+        if csv:
+            emit(f"fig4_{preset}_attention_I", ia,
+                 f"P1={p1a:.1f},compute_at_data={at_cpu}")
+        for n in (32, 128, 512, 2048):
+            lwn = H.LayerWorkload.decode(cfg, batch=n, ctx=576)
+            i_f = lwn.intensity_ffn_vs_weights()
+            p2 = H.turning_point_p2(hw, "gpu", "cpu",
+                                    i_exec_local=lwn.flops_ffn
+                                    / max(lwn.bytes_w, 1))
+            if csv:
+                emit(f"fig5_{preset}_ffn_I_N{n}", i_f, f"P2crit={p2:.1f}")
+    return rows
+
+
+def fig10_sweep(csv=True):
+    cfg = get_config("mixtral-8x7b")
+    base = H.preset("a100x2")
+    wl = P.Workload(prompt_len=512, gen_len=32)
+    rows = []
+    for bw_g in (100, 200, 300, 400, 500):
+        for cpu_scale in (1, 2, 4):
+            levels = (base.levels[0],
+                      H.Level("cpu", 1.6e12 * cpu_scale,
+                              100e9 * cpu_scale, 200e9 * cpu_scale))
+            hw = H.Hardware(levels=levels,
+                            links={("cpu", "gpu"): bw_g * 1e9}, name="sweep")
+            try:
+                best = P.search(cfg, hw, wl)["best"]
+            except RuntimeError:
+                continue
+            pol = best["policy"]
+            rows.append((bw_g, cpu_scale, pol))
+            if csv:
+                emit(f"fig10_bw{bw_g}_cpux{cpu_scale}",
+                     1e6 / best["throughput"],
+                     f"attn_cpu={not pol.attn_on_gpu},rw={pol.w_gpu_ratio},"
+                     f"rc={pol.kv_gpu_ratio},N={pol.batch}")
+    # directional check: offloaded weight fraction grows with link bw
+    lo = [p for b, c, p in rows if b == 100 and c == 1][0]
+    hi = [p for b, c, p in rows if b == 500 and c == 1][0]
+    if csv:
+        emit("fig10_direction", 0.0,
+             f"rw_at_100GBps={lo.w_gpu_ratio},rw_at_500GBps={hi.w_gpu_ratio},"
+             f"more_offload_with_faster_link={hi.w_gpu_ratio <= lo.w_gpu_ratio}")
+    return rows
+
+
+def run():
+    turning_points()
+    fig10_sweep()
+
+
+if __name__ == "__main__":
+    run()

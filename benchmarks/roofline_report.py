@@ -1,0 +1,72 @@
+"""§Roofline deliverable: aggregate the dry-run JSON records into the
+per-(arch × shape × mesh) roofline table (terms in seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, roofline fraction).
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--md] [--mesh ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(dryrun_dir=DRYRUN_DIR):
+    recs = []
+    for p in sorted(dryrun_dir.glob("*.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def fmt_ms(x):
+    return f"{x * 1e3:.2f}"
+
+
+def table(recs, mesh=None, md=False):
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            if mesh is None or r["mesh"] == mesh:
+                rows.append((r["arch"], r["shape"], r["mesh"], "skip",
+                             r.get("reason", "")))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r["mesh"], "FAIL",
+                         r.get("error", "")))
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], r["dominant"],
+            f"tc={fmt_ms(r['t_compute'])} tm={fmt_ms(r['t_memory'])} "
+            f"tx={fmt_ms(r['t_collective'])} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"roofline={r['roofline_fraction'] * 100:.1f}%"))
+    if md:
+        print("| arch | shape | mesh | bottleneck | terms |")
+        print("|---|---|---|---|---|")
+        for row in rows:
+            print("| " + " | ".join(str(c) for c in row) + " |")
+    else:
+        for row in rows:
+            print(",".join(str(c) for c in row))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--dir", default=str(DRYRUN_DIR))
+    args = ap.parse_args()
+    recs = load_records(Path(args.dir))
+    table(recs, mesh=args.mesh, md=args.md)
+
+
+if __name__ == "__main__":
+    main()

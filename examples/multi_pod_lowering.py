@@ -1,0 +1,44 @@
+"""Programmatic multi-pod lowering + roofline readout for one cell —
+the public API the dry-run harness is built on.
+
+NOTE: must run in a fresh process (device count is fixed at jax init).
+
+  PYTHONPATH=src python examples/multi_pod_lowering.py \
+      [--arch deepseek-v3-671b] [--shape decode_32k] [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v3-671b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    name = "multi_pod_2x16x16" if args.multi_pod else "single_pod_16x16"
+    print(f"mesh: {name} ({mesh.size} chips), cell: "
+          f"{args.arch} x {args.shape}")
+    compiled, rep, plan = lower_cell(args.arch, args.shape, mesh, name)
+    print(f"plan: dp={plan.dp_axes} kv={plan.kv_axes} "
+          f"experts={plan.expert_axes} moe={plan.moe_variant}")
+    m = compiled.memory_analysis()
+    print(f"memory/chip: args={m.argument_size_in_bytes / 1e9:.2f}GB "
+          f"temp={m.temp_size_in_bytes / 1e9:.2f}GB")
+    print(f"roofline terms: compute={rep.t_compute * 1e3:.2f}ms "
+          f"memory={rep.t_memory * 1e3:.2f}ms "
+          f"collective={rep.t_collective * 1e3:.2f}ms "
+          f"-> bound: {rep.dominant}")
+    print(f"useful-FLOPs ratio {rep.useful_flops_ratio:.2f}, "
+          f"roofline fraction {rep.roofline_fraction * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

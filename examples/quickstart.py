@@ -1,0 +1,45 @@
+"""Quickstart: train a tiny MoE LM for 40 steps, checkpoint it, reload it,
+and generate a few tokens with the batching engine.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.runtime.checkpoint import CheckpointManager
+from repro.serving.engine import Engine, EngineConfig
+from repro.training.trainer import Trainer, TrainConfig
+
+
+def main():
+    cfg = get_config("mixtral-8x7b").smoke()
+    print(f"model: {cfg.name}  layers={cfg.num_layers} d={cfg.d_model} "
+          f"experts={cfg.num_experts} top{cfg.top_k}")
+
+    with tempfile.TemporaryDirectory() as d:
+        trainer = Trainer(cfg, TrainConfig(
+            steps=40, batch_size=4, seq_len=64, ckpt_dir=d, ckpt_every=20,
+            log_every=10))
+        final = trainer.run()
+        print("training done:", {k: round(v, 3) for k, v in final.items()})
+        for m in trainer.metrics_log:
+            print(f"  step {m['step']:>3} loss {m['loss']:.3f}")
+
+        # resume from checkpoint (fault-tolerance path) and serve
+        ckpt = CheckpointManager(d)
+        step, tree, _ = ckpt.restore()
+        print(f"restored checkpoint @ step {step}")
+
+        eng = Engine(cfg, tree["params"],
+                     EngineConfig(ubatch=4, num_ubs=2, max_seq=96))
+        rng = np.random.default_rng(0)
+        for i in range(6):
+            eng.submit(rng.integers(2, cfg.vocab_size, 8 + i), 8)
+        out = eng.run_until_idle()
+        print("generated:", {rid: toks for rid, toks in sorted(out.items())})
+
+
+if __name__ == "__main__":
+    main()

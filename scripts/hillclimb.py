@@ -1,0 +1,66 @@
+"""Perf-iteration driver: run one dry-run cell with explicit overrides and
+log (hypothesis, change, before/after terms) to experiments/perf_log.jsonl.
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch gemma2-2b \
+      --shape train_4k --tag mb16 --hypothesis "..." \
+      --override num_micro=16 --override remat=True
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+import argparse
+import ast
+import json
+import time
+from pathlib import Path
+
+
+def parse_override(s):
+    k, v = s.split("=", 1)
+    try:
+        v = ast.literal_eval(v)
+    except Exception:
+        pass
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell, OUT_DIR
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    mesh_name = ("multi_pod_2x16x16" if args.mesh == "multi"
+                 else "single_pod_16x16")
+    overrides = dict(parse_override(s) for s in args.override)
+    rec = run_cell(args.arch, args.shape, mesh, mesh_name,
+                   out_dir=OUT_DIR.parent / "hillclimb",
+                   plan_overrides=overrides, tag=args.tag)
+    entry = {"t": time.strftime("%H:%M:%S"), "arch": args.arch,
+             "shape": args.shape, "mesh": mesh_name, "tag": args.tag,
+             "hypothesis": args.hypothesis, "overrides": overrides,
+             "status": rec.get("status")}
+    if rec.get("status") == "ok":
+        entry.update({k: rec[k] for k in
+                      ("t_compute", "t_memory", "t_collective", "dominant",
+                       "useful_flops_ratio", "roofline_fraction")})
+        entry["mem_gb"] = round((rec["memory_per_chip"]["argument"]
+                                 + rec["memory_per_chip"]["temp"]) / 1e9, 2)
+    log = Path("experiments/perf_log.jsonl")
+    log.parent.mkdir(exist_ok=True)
+    with log.open("a") as f:
+        f.write(json.dumps(entry) + "\n")
+    print(json.dumps(entry, indent=1))
+
+
+if __name__ == "__main__":
+    main()

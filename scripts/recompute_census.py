@@ -1,0 +1,66 @@
+"""Recompute census-based roofline terms for existing dry-run JSON records
+(the compiled HLO facts — memory_analysis, collective cross-checks — are
+unchanged; only the analytic terms are re-derived)."""
+import ast
+import json
+import sys
+from pathlib import Path
+from types import SimpleNamespace
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config, get_shape
+from repro.core.census import census
+from repro.core.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops_for
+
+MESHES = {"single_pod_16x16": {"data": 16, "model": 16},
+          "multi_pod_2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def parse_rule(v):
+    if v == "None":
+        return None
+    if v.startswith("("):
+        return ast.literal_eval(v)
+    return v
+
+
+def main(dirname="experiments/dryrun"):
+    n = 0
+    for p in sorted(Path(dirname).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or r["mesh"] not in MESHES:
+            continue
+        cfg = get_config(r["arch"])
+        shape = get_shape(r["shape"])
+        mesh_shape = MESHES[r["mesh"]]
+        plan = SimpleNamespace(
+            dp_axes=tuple(r["plan"]["dp_axes"]),
+            kv_axes=tuple(r["plan"]["kv_axes"]),
+            expert_axes=tuple(r["plan"]["expert_axes"]),
+            moe_variant=r["plan"]["moe_variant"],
+            rules={k: parse_rule(v) for k, v in r["plan"]["rules"].items()})
+        c = census(cfg, shape, mesh_shape, plan)
+        chips = r["chips"]
+        mf = model_flops_for(cfg, shape)
+        r["flops_per_chip"] = c.flops / chips
+        r["bytes_per_chip"] = c.hbm_bytes
+        r["collective_bytes"] = c.coll_total
+        r["collectives"] = dict(c.coll_bytes)
+        r["t_compute"] = c.flops / chips / PEAK_FLOPS
+        r["t_memory"] = c.hbm_bytes / HBM_BW
+        r["t_collective"] = c.coll_total / ICI_BW
+        terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": r["t_collective"]}
+        r["dominant"] = max(terms, key=terms.get)
+        r["model_flops"] = mf
+        r["useful_flops_ratio"] = mf / max(c.flops, 1.0)
+        tb = max(terms.values())
+        r["roofline_fraction"] = (mf / chips / tb) / PEAK_FLOPS if tb else 0.0
+        p.write_text(json.dumps(r, indent=1))
+        n += 1
+    print(f"recomputed {n} records")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

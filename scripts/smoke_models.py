@@ -1,0 +1,46 @@
+"""Dev script: run every smoke config through forward/prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, get_shape
+from repro.models import forward, unembed
+from repro.models.inputs import concrete_inputs
+from repro.models.params import count_params, init_params
+
+ok = True
+for arch in ALL_ARCHS:
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    na = count_params(cfg, active_only=True)
+    smoke = cfg.smoke()
+    try:
+        params = init_params(smoke, jax.random.key(0))
+        # train forward
+        tr = concrete_inputs(smoke, get_shape("train_4k").smoke())
+        kw = {k: v for k, v in tr.items() if k not in ("tokens", "targets")}
+        out = forward(smoke, params, tr["tokens"], mode="train", **kw)
+        logits = unembed(smoke, params, out["hidden"])
+        assert logits.shape == (*tr["tokens"].shape, smoke.vocab_size)
+        assert not bool(jnp.isnan(logits).any()), "NaN in train logits"
+        # prefill + decode
+        from repro.models import kvcache
+        B, S = 4, 32
+        cache = kvcache.init_cache(smoke, B, 64)
+        toks = jnp.ones((B, S), jnp.int32)
+        kw2 = {k: (v[:B] if hasattr(v, 'shape') else v) for k, v in kw.items()}
+        out = forward(smoke, params, toks, cache=cache, mode="prefill", **kw2)
+        cache = out["cache"]
+        assert int(cache["pos"][0]) == S
+        out = forward(smoke, params, toks[:, :1], cache=cache, mode="decode", **kw2)
+        lg = unembed(smoke, params, out["hidden"][:, -1])
+        assert lg.shape == (B, smoke.vocab_size)
+        assert not bool(jnp.isnan(lg).any()), "NaN in decode logits"
+        print(f"OK   {arch:24s} params={n/1e9:8.3f}B active={na/1e9:8.3f}B")
+    except Exception as e:  # noqa
+        ok = False
+        import traceback
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc()
+sys.exit(0 if ok else 1)

@@ -1,0 +1,47 @@
+"""Architecture registry: ``get_config("gemma2-2b")`` etc.
+
+The 10 assigned architectures plus the paper's own model (mixtral-8x7b).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                shape_applicable)
+
+_ARCH_MODULES = {
+    "gemma2-2b": "gemma2_2b",
+    "olmo-1b": "olmo_1b",
+    "glm4-9b": "glm4_9b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "paligemma-3b": "paligemma_3b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-small": "whisper_small",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _ARCH_MODULES if a != "mixtral-8x7b"]
+ALL_ARCHS: List[str] = list(_ARCH_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _cache:
+        if arch not in _ARCH_MODULES:
+            raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+        _cache[arch] = mod.CONFIG
+    return _cache[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config", "get_shape",
+           "shape_applicable", "ASSIGNED_ARCHS", "ALL_ARCHS"]

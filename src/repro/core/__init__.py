@@ -1,0 +1,1 @@
+from repro.core import batching, cgopipe, hrm, offload, paging, policy  # noqa: F401

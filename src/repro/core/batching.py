@@ -1,0 +1,67 @@
+"""Request batching (paper Algorithm 2, Appendix A.2).
+
+Balanced token distribution: requests sorted by input length descending,
+each placed into the micro-batch with the fewest tokens, subject to a KV
+cache budget; full micro-batches are sealed.  Returns the sealed
+micro-batches plus the requests deferred to the next round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    input_len: int
+    gen_len: int = 0
+
+
+@dataclass
+class MicroBatch:
+    requests: List[Request] = field(default_factory=list)
+
+    @property
+    def tokens(self) -> int:
+        return sum(r.input_len for r in self.requests)
+
+    def __len__(self):
+        return len(self.requests)
+
+
+def batch_requests(req_queue: List[Request], n_ub: int, ubs: int,
+                   gen_len: int, cache_size: int
+                   ) -> Tuple[List[MicroBatch], List[Request]]:
+    """Algorithm 2 verbatim.
+
+    req_queue: queue of requests; n_ub: number of micro-batches;
+    ubs: max requests per micro-batch; gen_len: generation length;
+    cache_size: max cache tokens per micro-batch.
+    Returns (micro_batches, aborted_requests)."""
+    partitions: List[MicroBatch] = [MicroBatch() for _ in range(n_ub)]
+    partition_sums: List[int] = [0] * n_ub
+    micro_batches: List[MicroBatch] = []
+    aborted: List[Request] = []
+
+    for req in sorted(req_queue, key=lambda r: r.input_len, reverse=True):
+        if not partitions:
+            aborted.append(req)
+            continue
+        idx = min(range(len(partitions)), key=lambda i: partition_sums[i])
+        projected = (partition_sums[idx] + req.input_len
+                     + (1 + len(partitions[idx])) * gen_len)
+        if projected > cache_size:
+            aborted.append(req)
+            continue
+        partitions[idx].requests.append(req)
+        partition_sums[idx] += req.input_len
+        if len(partitions[idx]) == ubs:
+            micro_batches.append(partitions.pop(idx))
+            partition_sums.pop(idx)
+    # remaining (non-empty, unsealed) partitions are emitted too — they are
+    # simply smaller; the engine pads them to the policy's μ
+    for p in partitions:
+        if len(p):
+            micro_batches.append(p)
+    return micro_batches, aborted

@@ -1,0 +1,252 @@
+"""Hierarchical Roofline Model (paper §3).
+
+Extends the classical roofline (Williams et al.) to a hierarchy of memory
+levels, each optionally coupled to a processor, with cross-level bandwidth
+links.  Implements Eqs. (1)–(11) of the paper:
+
+  * per-level compute roof          P_x^i <= P_peak^i                  (4)
+  * per-level memory roof           P_x^i <= B_peak^i * I_x^i          (5)
+  * cross-level memory roof         P_x^i <= B_peak^{j,i} * I_x^j      (6)
+  * attainable perf w/ fetch        min of the three                   (7)
+  * attainable perf local           min(P_peak, B*I)                   (8)
+  * turning point P1 (don't move)   Ī = min(P_j, B_j I_j) / B_{j,i}    (9)
+  * turning point P2 (xfer-bound)   Ī = min(P_i, B_i I_i) / B_{j,i}    (10)
+  * balance point                   B_i I_i == B_{j,i} I_j             (11)
+
+Levels are identified by name ("gpu", "cpu", "hbm", "host", ...).  The same
+code produces the paper's L4/T4 analysis (Figs. 4/5/10) and the TPU-v5e
+analysis used by the launch-time policy search.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Hardware description
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Level:
+    name: str
+    p_peak: float            # FLOP/s of the processor at this level (0: none)
+    b_peak: float            # local memory bandwidth, bytes/s
+    capacity: float          # bytes
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """A hierarchy: levels ordered fast->slow, plus cross-level links."""
+    levels: Tuple[Level, ...]
+    links: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    name: str = "custom"
+
+    def level(self, name: str) -> Level:
+        for l in self.levels:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def link_bw(self, src: str, dst: str) -> float:
+        if (src, dst) in self.links:
+            return self.links[(src, dst)]
+        if (dst, src) in self.links:
+            return self.links[(dst, src)]
+        raise KeyError((src, dst))
+
+
+# Hardware presets.  GPU/CPU numbers follow the paper's Fig. 3 / §6.3 (L4
+# instance; T4 from public specs); TPU v5e numbers are the task-assigned
+# constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, plus an
+# assumed 16 GB/s/host PCIe (8 chips/host -> 2 GB/s/chip) for host offload.
+
+def preset(name: str) -> Hardware:
+    G = 1e9
+    presets = {
+        "t4": Hardware(
+            levels=(Level("gpu", 65e12, 300 * G, 16 * G),
+                    Level("cpu", 1.6e12, 80 * G, 192 * G)),
+            links={("cpu", "gpu"): 12 * G}, name="t4"),
+        "l4": Hardware(
+            levels=(Level("gpu", 121e12, 300 * G, 24 * G),
+                    Level("cpu", 1.6e12, 80 * G, 192 * G)),
+            links={("cpu", "gpu"): 25 * G}, name="l4"),
+        "a100x2": Hardware(
+            levels=(Level("gpu", 2 * 312e12, 2 * 2039 * G, 160 * G),
+                    Level("cpu", 1.6e12, 200 * G, 1000 * G)),
+            links={("cpu", "gpu"): 100 * G}, name="a100x2"),
+        # TPU v5e: "gpu" = one chip; "ici" = a PEER chip's HBM (the peer has
+        # its own MXU — computing where the KV shard lives is the
+        # sequence-sharded decode attention of collectives.py); "cpu" = the
+        # weak host over PCIe.  Task constants: 197 TF bf16, 819 GB/s HBM,
+        # ~50 GB/s/link ICI; host assumed 16 GB/s per 8-chip host.
+        "v5e": Hardware(
+            levels=(Level("gpu", 197e12, 819 * G, 16 * G),
+                    Level("ici", 197e12, 819 * G, 255 * 16 * G),
+                    Level("cpu", 0.4e12, 50 * G, 256 * G)),
+            links={("cpu", "gpu"): 2 * G, ("ici", "gpu"): 50 * G},
+            name="v5e"),
+    }
+    return presets[name]
+
+
+# ---------------------------------------------------------------------------
+# Roofline math
+# ---------------------------------------------------------------------------
+
+def attainable_local(hw: Hardware, level: str, intensity: float) -> float:
+    """Eq. (8): performance of a computation resident at `level`."""
+    l = hw.level(level)
+    return min(l.p_peak, l.b_peak * intensity)
+
+
+def attainable_cross(hw: Hardware, exec_level: str, data_level: str,
+                     i_exec: float, i_data: float) -> float:
+    """Eq. (7): executed at exec_level, data fetched from data_level."""
+    l = hw.level(exec_level)
+    bw = hw.link_bw(data_level, exec_level)
+    return min(l.p_peak, l.b_peak * i_exec, bw * i_data)
+
+
+def turning_point_p1(hw: Hardware, exec_level: str, data_level: str,
+                     i_data_local: float) -> float:
+    """Eq. (9): critical I below which it is better to compute at
+    data_level than to move the data up to exec_level."""
+    bw = hw.link_bw(data_level, exec_level)
+    return attainable_local(hw, data_level, i_data_local) / bw
+
+
+def turning_point_p2(hw: Hardware, exec_level: str, data_level: str,
+                     i_exec_local: float) -> float:
+    """Eq. (10): critical I below which the cross-level link binds."""
+    bw = hw.link_bw(data_level, exec_level)
+    return attainable_local(hw, exec_level, i_exec_local) / bw
+
+
+def balance_point_intensity(hw: Hardware, exec_level: str, data_level: str,
+                            i_exec: float) -> float:
+    """Eq. (11): the I_x^j at which local and cross-level bandwidth bind
+    simultaneously: B_i I_i = B_{j,i} I_j  ->  I_j = B_i I_i / B_{j,i}."""
+    bw = hw.link_bw(data_level, exec_level)
+    return hw.level(exec_level).b_peak * i_exec / bw
+
+
+def should_compute_at_data(hw: Hardware, exec_level: str, data_level: str,
+                           i_data: float) -> bool:
+    """The paper's CPU-attention criterion: if the task's intensity w.r.t.
+    the data level is below P1's critical intensity, don't move the data."""
+    return i_data < turning_point_p1(hw, exec_level, data_level, i_data)
+
+
+# ---------------------------------------------------------------------------
+# LLM decode-layer workload model (paper §4.2, Table 1 notation)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LayerWorkload:
+    """Theoretical per-layer flops/bytes for one decode step of a batch.
+
+    All quantities are for ONE transformer layer processing N tokens
+    (batch) with average context length `ctx`.
+    """
+    flops_attn: float        # attention score+value flops (excl. qkvo proj)
+    bytes_kv: float          # KV cache bytes touched
+    flops_ffn: float         # FFN (MoE) flops incl. router+shared
+    bytes_w: float           # layer weight bytes (experts + attn proj)
+    bytes_hidden: float      # D1/D2-class transfers: activations per ub hop
+    flops_proj: float        # qkvo projection flops
+
+    @classmethod
+    def decode(cls, cfg, batch: int, ctx: float, dtype_bytes: int = 2,
+               experts_hit: Optional[float] = None):
+        h1 = cfg.d_model
+        hd = cfg.head_dim or 1
+        nq = max(cfg.num_heads, 1)
+        nkv = max(cfg.num_kv_heads, 1)
+        if cfg.kv_lora_rank:               # MLA: latent cache
+            kv_row = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            flops_attn = 2 * batch * ctx * nq * (cfg.kv_lora_rank
+                                                 + cfg.qk_rope_head_dim) * 2
+        else:
+            kv_row = 2 * nkv * hd
+            flops_attn = 2 * batch * ctx * nq * hd * 2
+        bytes_kv = batch * ctx * kv_row * dtype_bytes
+
+        if cfg.is_moe:
+            k = cfg.top_k + cfg.num_shared_experts
+            f_flops = 2 * 3 * h1 * cfg.d_ff * k * batch
+            n_hit = experts_hit if experts_hit is not None else min(
+                cfg.num_experts, batch * cfg.top_k)
+            w_ffn = (n_hit + cfg.num_shared_experts) * 3 * h1 * cfg.d_ff
+        else:
+            f_flops = 2 * 3 * h1 * (cfg.d_ff or cfg.ssm_expand * h1) * batch
+            w_ffn = 3 * h1 * (cfg.d_ff or cfg.ssm_expand * h1)
+        w_attn = (2 * h1 * nq * hd + 2 * h1 * nkv * hd) if nq else 0
+        flops_proj = 2 * w_attn * batch
+        return cls(flops_attn=flops_attn, bytes_kv=bytes_kv, flops_ffn=f_flops,
+                   bytes_w=(w_ffn + w_attn) * dtype_bytes,
+                   bytes_hidden=2 * batch * h1 * dtype_bytes,
+                   flops_proj=flops_proj)
+
+    # Operational intensities (paper Definition 3.1)
+    def intensity_attn_vs_kv(self) -> float:
+        return self.flops_attn / max(self.bytes_kv, 1.0)
+
+    def intensity_ffn_vs_weights(self) -> float:
+        return self.flops_ffn / max(self.bytes_w, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Paper-style per-layer latency estimate (Eqs. 12–14)
+# ---------------------------------------------------------------------------
+
+def time_comp(flops: float, p_peak: float) -> float:
+    return flops / p_peak if p_peak > 0 else float("inf")
+
+
+def time_comm(bytes_: float, bw: float) -> float:
+    return bytes_ / bw if bw > 0 else float("inf")
+
+
+def layer_latency(hw: Hardware, wl: LayerWorkload, policy) -> Dict[str, float]:
+    """T = max(comm_cpu_to_gpu, T_cpu, T_gpu) — Eq. (12) with Eq. (13)/(14).
+
+    `policy` needs fields: attn_on_gpu (A_g), ffn_on_gpu (F_g),
+    w_gpu_ratio (r_w), kv_gpu_ratio (r_c).
+    """
+    gpu, cpu = hw.level("gpu"), hw.level("cpu")
+    b_cg = hw.link_bw("cpu", "gpu")
+
+    comm_ctg = 0.0           # CPU->GPU transferred bytes per layer
+    t_gpu = t_cpu = 0.0
+
+    # ---- attention ----
+    if policy.attn_on_gpu:
+        kv_from_cpu = wl.bytes_kv * (1 - policy.kv_gpu_ratio)
+        comm_ctg += kv_from_cpu
+        t_attn = max(time_comp(wl.flops_attn, gpu.p_peak),
+                     time_comm(wl.bytes_kv * policy.kv_gpu_ratio, gpu.b_peak)
+                     + time_comm(kv_from_cpu, b_cg))
+        t_gpu += t_attn
+    else:
+        t_attn = max(time_comp(wl.flops_attn, cpu.p_peak),
+                     time_comm(wl.bytes_kv, cpu.b_peak))
+        t_cpu += t_attn
+        comm_ctg += wl.bytes_hidden      # D2: hidden states back to GPU
+
+    # ---- FFN ----
+    if policy.ffn_on_gpu:
+        w_from_cpu = wl.bytes_w * (1 - policy.w_gpu_ratio)
+        comm_ctg += w_from_cpu
+        t_ffn = max(time_comp(wl.flops_ffn + wl.flops_proj, gpu.p_peak),
+                    time_comm(wl.bytes_w, gpu.b_peak))
+        t_gpu += t_ffn
+    else:
+        t_ffn = max(time_comp(wl.flops_ffn + wl.flops_proj, cpu.p_peak),
+                    time_comm(wl.bytes_w, cpu.b_peak))
+        t_cpu += t_ffn
+
+    t_io = time_comm(comm_ctg, b_cg)
+    return {"t_layer": max(t_io, t_cpu, t_gpu), "t_io": t_io,
+            "t_cpu": t_cpu, "t_gpu": t_gpu, "comm_bytes": comm_ctg}

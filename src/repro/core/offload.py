@@ -1,0 +1,93 @@
+"""Placement plans: which tensors live where (paper policy → execution).
+
+A `PlacementPlan` realizes the policy tuple's r_w/r_c fractions as a
+per-leaf assignment of weights (and the KV cache) to memory levels, and —
+on backends that support it — produces shardings with an explicit
+``memory_kind`` so XLA keeps offloaded tensors in host DRAM and streams
+them on use.  The CPU validation backend has a single memory space; there
+the plan is exercised logically (page store + engine double buffer) and
+its timing modeled by core.cgopipe / core.hrm — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import Policy, kv_bytes_per_token_layer, model_bytes
+
+
+def backend_memory_kinds() -> List[str]:
+    try:
+        dev = jax.devices()[0]
+        return [m.kind for m in dev.addressable_memories()]
+    except Exception:
+        return []
+
+
+def supports_host_offload() -> bool:
+    return "pinned_host" in backend_memory_kinds()
+
+
+@dataclass
+class PlacementPlan:
+    """Per-leaf device residency for the offloaded-serving engine."""
+    device_leaves: List[Tuple[str, ...]]
+    host_leaves: List[Tuple[str, ...]]
+    kv_on_device: bool
+    w_device_bytes: float
+    w_host_bytes: float
+
+    @property
+    def host_fraction(self) -> float:
+        tot = self.w_device_bytes + self.w_host_bytes
+        return self.w_host_bytes / tot if tot else 0.0
+
+
+def _leaf_sizes(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out += _leaf_sizes(tree[k], prefix + (k,))
+        return out
+    size = int(np.prod(tree.shape)) * np.dtype(tree.dtype).itemsize
+    return [(prefix, size)]
+
+
+def plan_from_policy(cfg: ModelConfig, abstract_params, pol: Policy
+                     ) -> PlacementPlan:
+    """Greedy knapsack: keep the hottest (non-expert first, then experts)
+    leaves on device until the r_w budget is spent.  Expert weights are the
+    paper's primary offload target (largest, least intensity per byte)."""
+    sizes = _leaf_sizes(abstract_params)
+    total = sum(s for _, s in sizes)
+    budget = pol.w_gpu_ratio * total
+
+    def priority(path):                       # lower = keep on device first
+        if "moe" in path and path[-1] in ("wi", "wo"):
+            return 2                           # experts offload first
+        if path[0] in ("embed", "lm_head"):
+            return 1
+        return 0
+
+    ordered = sorted(sizes, key=lambda e: (priority(e[0]), -e[1]))
+    device, host, spent = [], [], 0.0
+    for path, size in ordered:
+        if spent + size <= budget:
+            device.append(path)
+            spent += size
+        else:
+            host.append(path)
+    return PlacementPlan(device, host, kv_on_device=pol.kv_gpu_ratio >= 1.0,
+                         w_device_bytes=spent, w_host_bytes=total - spent)
+
+
+def host_sharding(mesh, spec) -> Optional[jax.sharding.NamedSharding]:
+    """NamedSharding pinned to host memory when the backend supports it."""
+    s = jax.sharding.NamedSharding(mesh, spec)
+    if supports_host_offload():
+        return s.with_memory_kind("pinned_host")
+    return s

@@ -1,0 +1,172 @@
+"""Paged weights (paper Appendix A.1, Fig. 11).
+
+Layer weights are chunked into fixed-size *pages*; a page table maps
+(layer, leaf) → page span.  The serving engine keeps a 2×W_L double
+buffer: while layer i computes out of buffer (i % 2), the pages of layer
+i+1 stream into buffer ((i+1) % 2), interleaved with hidden-state
+transfers per CGOPipe.  On TPU the backing store lives in host memory
+(``memory_kind='pinned_host'``) and pages move with device_put; on the
+CPU-only validation platform the same code paths run with plain arrays.
+
+The page pool layout is (num_pages, page_elems) so a layer fetch is a
+single contiguous gather — the TPU analogue of the paper's paged
+cudaMemcpyAsync batches, and the unit the Pallas MoE-FFN kernel's page
+table indexes into.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LeafEntry:
+    path: Tuple[str, ...]
+    shape: Tuple[int, ...]       # per-layer shape (stack dim removed)
+    dtype: str
+    offset: int                  # element offset within the layer's flat span
+
+
+@dataclass
+class PageManifest:
+    page_elems: int
+    layer_elems: int             # padded flat elements per layer
+    pages_per_layer: int
+    num_layers: int
+    leaves: List[LeafEntry]
+    dtype: str
+
+    def layer_pages(self, layer: int) -> np.ndarray:
+        start = layer * self.pages_per_layer
+        return np.arange(start, start + self.pages_per_layer)
+
+
+def _flatten_with_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out += _flatten_with_paths(tree[k], prefix + (k,))
+        return out
+    return [(prefix, tree)]
+
+
+def pack_layer_stack(stacked: Dict, page_elems: int = 1 << 20
+                     ) -> Tuple[jax.Array, PageManifest]:
+    """stacked: pytree whose every leaf has a leading `layers` dim L.
+    Returns (pages (P, page_elems), manifest)."""
+    leaves = _flatten_with_paths(stacked)
+    L = leaves[0][1].shape[0]
+    dtype = leaves[0][1].dtype
+    entries: List[LeafEntry] = []
+    offset = 0
+    for path, leaf in leaves:
+        assert leaf.shape[0] == L, f"stack dim mismatch at {path}"
+        per_layer = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        entries.append(LeafEntry(path, tuple(leaf.shape[1:]), str(leaf.dtype),
+                                 offset))
+        offset += per_layer
+    pages_per_layer = math.ceil(offset / page_elems)
+    layer_elems = pages_per_layer * page_elems
+
+    flat = jnp.concatenate(
+        [leaf.reshape(L, -1).astype(dtype) for _, leaf in leaves], axis=1)
+    pad = layer_elems - flat.shape[1]
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    pages = flat.reshape(L * pages_per_layer, page_elems)
+    manifest = PageManifest(page_elems, layer_elems, pages_per_layer, L,
+                            entries, str(dtype))
+    return pages, manifest
+
+
+def fetch_layer(pages: jax.Array, manifest: PageManifest, layer) -> Dict:
+    """Gather one layer's pages and rebuild its parameter pytree.
+    `layer` may be a traced index (used inside lax.scan/fori loops)."""
+    start = layer * manifest.pages_per_layer
+    span = jax.lax.dynamic_slice_in_dim(pages, start,
+                                        manifest.pages_per_layer, axis=0)
+    flat = span.reshape(-1)
+    out: Dict = {}
+    for e in manifest.leaves:
+        n = int(np.prod(e.shape)) if e.shape else 1
+        leaf = jax.lax.dynamic_slice_in_dim(flat, e.offset, n, axis=0)
+        leaf = leaf.reshape(e.shape) if e.shape else leaf[0]
+        node = out
+        for p in e.path[:-1]:
+            node = node.setdefault(p, {})
+        node[e.path[-1]] = leaf
+    return out
+
+
+def fetch_pages(pages: jax.Array, page_ids) -> jax.Array:
+    return pages[jnp.asarray(page_ids)]
+
+
+def unflatten_span(span: jax.Array, manifest: PageManifest) -> Dict:
+    """Rebuild one layer's parameter pytree from its page span
+    (pages_per_layer, page_elems) — static offsets, reshape-only (used
+    inside lax.scan where the span arrives as a scan slice)."""
+    flat = span.reshape(-1)
+    out: Dict = {}
+    for e in manifest.leaves:
+        n = int(np.prod(e.shape)) if e.shape else 1
+        leaf = flat[e.offset:e.offset + n]
+        leaf = leaf.reshape(e.shape) if e.shape else leaf[0]
+        node = out
+        for p in e.path[:-1]:
+            node = node.setdefault(p, {})
+        node[e.path[-1]] = leaf
+    return out
+
+
+def pack_block_groups(blocks: Dict, page_elems: int = 1 << 20):
+    """Pack every period-position group ('p0', 'p1', ...) of a model's
+    stacked block params into page pools.  Returns (pages_dict, manifests):
+    pages_dict[key] has shape (L, pages_per_layer, page_elems) — sliceable
+    by the layer scan — and manifests[key] rebuilds the layer pytree."""
+    pages_dict, manifests = {}, {}
+    for key, group in blocks.items():
+        pages, manifest = pack_layer_stack(group, page_elems)
+        L = manifest.num_layers
+        pages_dict[key] = pages.reshape(L, manifest.pages_per_layer,
+                                        manifest.page_elems)
+        manifests[key] = manifest
+    return pages_dict, manifests
+
+
+# ---------------------------------------------------------------------------
+# Transfer scheduling (which page moves during which micro-batch)
+# ---------------------------------------------------------------------------
+
+def transfer_plan(pages_per_layer: int, n_ubs: int) -> List[List[int]]:
+    """Split a layer's pages into n_ubs groups; group j is transferred
+    while micro-batch j computes (CGOPipe interleaving: the small, urgent
+    hidden-state transfer for ub j+1 slots between groups)."""
+    groups: List[List[int]] = [[] for _ in range(n_ubs)]
+    for p in range(pages_per_layer):
+        groups[p * n_ubs // pages_per_layer].append(p)
+    return groups
+
+
+@dataclass
+class DoubleBuffer:
+    """The 2×W_L weight buffer of Appendix A.1 (logical model; the JAX
+    engine realizes it as two donated page buffers)."""
+    n_slots: int = 2
+    resident: List[int] = field(default_factory=lambda: [-1, -1])
+
+    def slot_for(self, layer: int) -> int:
+        return layer % self.n_slots
+
+    def load(self, layer: int) -> int:
+        s = self.slot_for(layer)
+        self.resident[s] = layer
+        return s
+
+    def is_resident(self, layer: int) -> bool:
+        return self.resident[self.slot_for(layer)] == layer

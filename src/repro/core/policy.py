@@ -1,0 +1,147 @@
+"""Policy search (paper §4.2).
+
+Searches the 6-tuple P = (N, μ, A_g, F_g, r_w, r_c) minimizing estimated
+per-layer decode latency T(M, H, W, P) = max(comm_cpu→gpu, T_cpu, T_gpu)
+subject to GPU and CPU memory capacities — i.e. drives the system to the
+HRM balance point (Eq. 11).  The paper solves a MILP; the space is small
+enough for exact enumeration (no solver dependency offline), finishing in
+well under the paper's "less than a minute".
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import hrm as H
+
+
+@dataclass(frozen=True)
+class Policy:
+    """The paper's Table-1 policy tuple (+ derived batching plan)."""
+    batch: int               # N — tokens per model pass
+    ubatch: int              # μ — tokens per kernel execution
+    attn_on_gpu: bool        # A_g
+    ffn_on_gpu: bool         # F_g
+    w_gpu_ratio: float       # r_w — weights resident on GPU
+    kv_gpu_ratio: float      # r_c — KV cache resident on GPU
+
+    @property
+    def num_ubs(self) -> int:
+        return max(1, self.batch // self.ubatch)
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Paper Table 1: s (avg prompt len), n (generation length)."""
+    prompt_len: int
+    gen_len: int
+
+    @property
+    def avg_ctx(self) -> float:
+        return self.prompt_len + self.gen_len / 2
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting
+# ---------------------------------------------------------------------------
+
+def model_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    from repro.models.params import count_params
+    return count_params(cfg) * dtype_bytes
+
+
+def kv_bytes_per_token_layer(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    if cfg.kv_lora_rank:
+        return (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * dtype_bytes
+    if cfg.num_kv_heads == 0:      # SSM: O(1) state, charge nothing per token
+        return 0.0
+    return 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+
+
+def memory_usage(cfg: ModelConfig, wl: Workload, pol: Policy,
+                 dtype_bytes: int = 2) -> Dict[str, float]:
+    W_total = model_bytes(cfg, dtype_bytes)
+    W_layer = W_total / max(cfg.num_layers, 1)
+    kv_total = (kv_bytes_per_token_layer(cfg, dtype_bytes) * cfg.num_layers
+                * pol.batch * (wl.prompt_len + wl.gen_len))
+    act = pol.ubatch * cfg.d_model * dtype_bytes
+    gpu = (pol.w_gpu_ratio * W_total
+           + pol.kv_gpu_ratio * kv_total
+           + 2 * (1 - pol.w_gpu_ratio) * W_layer       # 2x page buffer (A.1)
+           + 8 * act)                                  # in-flight activations
+    if pol.attn_on_gpu:
+        gpu += (1 - pol.kv_gpu_ratio) * kv_total / max(cfg.num_layers, 1) * 2
+    cpu = ((1 - pol.w_gpu_ratio) * W_total
+           + (1 - pol.kv_gpu_ratio) * kv_total
+           + 4 * (1 - pol.w_gpu_ratio) * W_layer       # pinned staging
+           + 8 * act)
+    return {"gpu": gpu, "cpu": cpu, "kv_total": kv_total, "w_total": W_total}
+
+
+# ---------------------------------------------------------------------------
+# Throughput estimate
+# ---------------------------------------------------------------------------
+
+def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
+             dtype_bytes: int = 2) -> Dict[str, float]:
+    """Per-layer decode latency (Eq. 12) and end-to-end generation
+    throughput (tokens/s) including prefill amortization."""
+    lw = H.LayerWorkload.decode(cfg, pol.batch, wl.avg_ctx, dtype_bytes)
+    lat = H.layer_latency(hw, lw, pol)
+    t_layer = lat["t_layer"]
+    # prefill: compute-bound on the accelerator, overlapped with weight
+    # streaming (paper §4: zig-zag order, no extra optimization)
+    gpu = hw.level("gpu")
+    from repro.models.params import count_params
+    n_active = count_params(cfg, active_only=True)
+    pf_flops = 2 * n_active * pol.batch * wl.prompt_len
+    w_stream = (1 - pol.w_gpu_ratio) * model_bytes(cfg, dtype_bytes)
+    t_prefill = max(pf_flops / gpu.p_peak,
+                    w_stream / hw.link_bw("cpu", "gpu"))
+    t_decode = wl.gen_len * cfg.num_layers * t_layer
+    thr = pol.batch * wl.gen_len / (t_prefill + t_decode)
+    return {"throughput": thr, "t_layer": t_layer, "t_prefill": t_prefill,
+            **{k: v for k, v in lat.items() if k != "t_layer"}}
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
+           dtype_bytes: int = 2,
+           ub_grid=(4, 8, 16, 32, 36, 64, 100, 128, 256),
+           mult_grid=(1, 2, 4, 8, 15, 16, 26, 32, 61, 64, 92, 128, 256),
+           ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0)) -> Dict:
+    """Exact enumeration over the 6-tuple.  Returns the best feasible
+    policy and its estimate; also the best with attention forced to each
+    device (for the §6.3-style case study)."""
+    gpu_cap = hw.level("gpu").capacity
+    cpu_cap = hw.level("cpu").capacity
+    best: Optional[Dict] = None
+    best_by_ag = {0: None, 1: None}
+
+    for ub, mult, ag, fg in itertools.product(
+            ub_grid, mult_grid, (False, True), (True, False)):
+        N = ub * mult
+        for rw in (ratio_grid if fg else (0.0,)):
+            for rc in (ratio_grid if ag else (0.0,)):
+                pol = Policy(N, ub, ag, fg, rw, rc)
+                mem = memory_usage(cfg, wl, pol, dtype_bytes)
+                if mem["gpu"] > gpu_cap or mem["cpu"] > cpu_cap:
+                    continue
+                est = estimate(cfg, hw, wl, pol, dtype_bytes)
+                cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
+                        "mem_cpu": mem["cpu"]}
+                if best is None or cand["throughput"] > best["throughput"]:
+                    best = cand
+                key = int(ag)
+                if (best_by_ag[key] is None
+                        or cand["throughput"] > best_by_ag[key]["throughput"]):
+                    best_by_ag[key] = cand
+    if best is None:
+        raise RuntimeError("no feasible policy (model too large for CPU+GPU)")
+    return {"best": best, "best_gpu_attn": best_by_ag[1],
+            "best_cpu_attn": best_by_ag[0]}

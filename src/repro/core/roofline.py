@@ -1,0 +1,192 @@
+"""Roofline analysis of compiled XLA artifacts (deliverable §Roofline).
+
+Derives the three roofline terms for a lowered+compiled step:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_chip / HBM_bandwidth
+    collective = collective_bytes_per_chip / ICI_link_bandwidth
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition under
+SPMD).  Collective bytes are NOT in cost_analysis — we parse the compiled
+HLO text and sum operand sizes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute ops.
+
+Hardware constants (task-assigned, TPU v5e): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "bf16[8,128,2048]{2,1,0}" or "f32[128]"
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum the *output* shape bytes of every collective op instance.
+
+    For all-reduce/all-to-all the output size equals the input; for
+    all-gather it is the gathered (larger) size and for reduce-scatter the
+    pre-reduce input is larger — we use the max of output and operand
+    shapes on the line as the per-chip wire-bytes proxy.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # instruction lines look like:  %x = bf16[..] all-gather(bf16[..] %y), ...
+        m = re.search(r"=\s*[\w\[\],{}\s()]*?\b(" + "|".join(_COLLECTIVES) +
+                      r")(-start|-done)?\(", s)
+        if not m:
+            continue
+        kind, phase = m.group(1), m.group(2)
+        if phase == "-done":      # avoid double counting start/done pairs
+            continue
+        shapes = _SHAPE_RE.findall(s)
+        if not shapes:
+            continue
+        nbytes = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes: float
+    collectives: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float           # 6*N*D (active params x tokens)
+    chips: int
+    memory_per_chip: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/redundancy waste."""
+        tot = self.flops_per_chip * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roof actually used at the bound:
+        (model_flops/chips/t_bound) / peak."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_bound) / PEAK_FLOPS
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_per_chip": self.memory_per_chip,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float, hlo_text: Optional[str] = None,
+            census=None) -> RooflineReport:
+    """When a `core.census.Census` is supplied its exact analytic
+    flops/bytes/collective-bytes become the roofline terms (XLA's
+    cost_analysis counts scan bodies once — see census.py); the HLO-parsed
+    quantities are retained in the report for cross-checking."""
+    cost = compiled.cost_analysis()
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument": float(mem.argument_size_in_bytes),
+        "output": float(mem.output_size_in_bytes),
+        "temp": float(mem.temp_size_in_bytes),
+        "peak_estimate": float(mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes),
+        "hlo_flops_per_chip": hlo_flops,
+        "hlo_bytes_per_chip": hlo_bytes,
+        "hlo_collective_bytes": coll.total_bytes,
+    }
+    if census is not None:
+        flops = census.flops / chips
+        bytes_ = census.hbm_bytes
+        coll_bytes = census.coll_total
+        coll_kinds = dict(census.coll_bytes)
+    else:
+        flops, bytes_ = hlo_flops, hlo_bytes
+        coll_bytes, coll_kinds = coll.total_bytes, dict(coll.bytes_by_kind)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_chip=flops, bytes_per_chip=bytes_,
+        collective_bytes=coll_bytes,
+        collectives=coll_kinds,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=bytes_ / HBM_BW,
+        t_collective=coll_bytes / ICI_BW,
+        model_flops=model_flops, chips=chips, memory_per_chip=mem_d)
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference steps."""
+    from repro.models.params import count_params
+    n_active = count_params(cfg, active_only=True, include_embed=False)
+    tokens = shape_cfg.global_batch * (1 if shape_cfg.mode == "decode"
+                                       else shape_cfg.seq_len)
+    mult = 6 if shape_cfg.mode == "train" else 2
+    return float(mult * n_active * tokens)

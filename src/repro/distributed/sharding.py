@@ -1,0 +1,293 @@
+"""Sharding plans: logical-axis rules → PartitionSpecs per (arch × shape ×
+mesh), plus the wired ExecPolicy (MoE path, sharded decode attention).
+
+Axis roles:
+  pod    — pure data parallelism across pods (DCN); gradients all-reduce.
+  data   — FSDP/ZeRO + batch sharding inside a pod (and the major expert
+           axis for very large MoEs).
+  model  — tensor parallelism (heads / ffn / vocab), expert parallelism,
+           and the KV-sequence axis for sharded decode attention.
+
+MoE expert-axis selection (per-chip capacity driven, see DESIGN.md §5):
+  1. experts over ('data','model') when divisible (deepseek-v3: 256/256),
+  2. else experts over ('model',) when divisible (moonshot 64, jamba 16),
+     plus ffn over 'data' if the per-chip expert slice still exceeds the
+     budget (jamba),
+  3. else no expert sharding; ffn over 'model' (mixtral's 8 experts on a
+     16-wide axis).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import ExecPolicy
+from repro.models.params import param_axes
+
+EXPERT_BYTES_BUDGET = 8e9        # per-chip expert-slice budget (bf16 bytes)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass
+class Plan:
+    mesh: Mesh
+    rules: Dict[str, object]              # logical axis -> mesh axes
+    dp_axes: Tuple[str, ...]              # batch axes
+    kv_axes: Tuple[str, ...]              # decode KV sequence axes
+    expert_axes: Tuple[str, ...]
+    moe_variant: str                      # ep_a2a | ep_psum | grouped_pjit | dense
+    param_specs: Dict = None
+    policy: ExecPolicy = None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def expert_sharding_for(cfg: ModelConfig, mesh: Mesh) -> Tuple[Tuple[str, ...], bool]:
+    """Returns (expert_axes, shard_ffn_over_data)."""
+    if not cfg.is_moe:
+        return (), False
+    have = mesh.shape
+    cands = []
+    if "data" in have and "model" in have:
+        cands.append(("data", "model"))
+    if "model" in have:
+        cands.append(("model",))
+    expert_bytes = (cfg.num_experts * 3 * cfg.d_model * cfg.d_ff
+                    * cfg.num_layers * 2)
+    for axes in cands:
+        n = _axis_size(mesh, axes)
+        if cfg.num_experts % n == 0:
+            per_chip = expert_bytes / n
+            shard_ffn = per_chip > EXPERT_BYTES_BUDGET and "data" not in axes
+            return axes, shard_ffn
+    return (), False
+
+
+def make_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    have = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in have)
+    train = shape.mode == "train"
+    expert_axes, shard_ffn_data = expert_sharding_for(cfg, mesh)
+
+    rules = {
+        "vocab": "model" if "model" in have else None,
+        "heads": "model" if "model" in have else None,
+        "kv_heads": "model" if "model" in have else None,
+        "experts": expert_axes or None,
+        "lora": None,
+        "embed_nr": None,                       # norm scales replicated
+        "layers": None,
+        "conv": None,
+        "ssm_inner": "model" if "model" in have else None,
+        "ssm_heads": "model" if "model" in have else None,
+    }
+    rules["ffn"] = "model" if "model" in have else None     # dense FFNs
+    if cfg.is_moe:
+        if expert_axes:
+            rules["effn"] = ("data" if (shard_ffn_data and "data" in have)
+                             else None)
+        else:
+            rules["effn"] = "model" if "model" in have else None
+    # FSDP over 'data' for the embed dim in training (all-gathers amortized
+    # by a long sequence); decode keeps embed replicated to avoid per-step
+    # all-gathers unless the model cannot fit on the model axis alone.
+    from repro.models.params import count_params
+    big = count_params(cfg) * 2 / max(_axis_size(mesh, "model"), 1) > 12e9
+    rules["embed"] = ("data" if ("data" in have and (train or big)) else None)
+    return rules
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  rules: Dict, mesh: Mesh) -> P:
+    """Map a leaf's logical axes to a PartitionSpec, enforcing divisibility
+    and one-mesh-axis-per-leaf uniqueness."""
+    used = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        assign = None
+        rule = rules.get(logical) if logical else None
+        if rule:
+            cand = (rule,) if isinstance(rule, str) else tuple(rule)
+            cand = tuple(a for a in cand if a not in used)
+            if cand and dim % _axis_size(mesh, cand) == 0:
+                assign = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+        parts.append(assign)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, rules: Dict, mesh: Mesh):
+    axes_tree = param_axes(cfg)
+    from repro.models.params import param_defs, tree_map_defs, ParamDef
+
+    def one(d: ParamDef):
+        return spec_for_axes(d.axes, d.shape, rules, mesh)
+
+    return tree_map_defs(one, param_defs(cfg))
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, dp: Tuple[str, ...],
+                kv_axes: Tuple[str, ...], rules: Dict, mesh: Mesh):
+    """Specs for the decode cache pytree (mirrors kvcache.init_cache)."""
+    dpa = dp if dp else None
+
+    def leaf_spec(path, leaf):
+        name = path[-1]
+        if name == "pos":
+            return P(dpa)
+        ndim = len(leaf.shape)
+        if name in ("k", "v"):          # (L,B,W,Hkv,Dh)
+            if path[0] == "xattn":      # encoder positions: don't seq-shard
+                return P(None, dpa, None, None, None)
+            return P(None, dpa, kv_axes or None, None, None)
+        if name in ("ckv", "kr"):       # (L,B,W,r)
+            return P(None, dpa, kv_axes or None, None)
+        if name == "slot_pos":          # (L,B,W)
+            return P(None, dpa, kv_axes or None)
+        if name == "state":             # (L,B,nh,hd,N)
+            m = "model" if "model" in mesh.axis_names and \
+                leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, dpa, m, None, None)
+        if name == "conv_x":            # (L,B,cw-1,d_in)
+            m = "model" if "model" in mesh.axis_names and \
+                leaf.shape[3] % mesh.shape["model"] == 0 else None
+            return P(None, dpa, None, m)
+        if name in ("conv_B", "conv_C"):
+            return P(None, dpa, None, None)
+        return P(*([None] * ndim))
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return leaf_spec(path, tree)
+
+    return walk(cache_tree)
+
+
+def batch_specs(batch_tree, dp: Tuple[str, ...]):
+    """tokens/targets/frames/patches: batch over dp."""
+    dpa = dp if dp else None
+
+    def leaf(x):
+        return P(dpa, *([None] * (len(x.shape) - 1)))
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+def choose_moe_variant(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       expert_axes) -> str:
+    if not cfg.is_moe:
+        return "dense"
+    if not expert_axes:
+        return "grouped_pjit"
+    n_exp = _axis_size(mesh, expert_axes)
+    if shape.mode == "decode":
+        # tiny activations: psum combine over 'model' only; with
+        # ('data','model') expert sharding fall back to the pjit path
+        return "ep_psum" if expert_axes == ("model",) else "grouped_pjit"
+    # train/prefill: all-to-all when the sequence can shard over the
+    # non-data expert axes
+    seq_axes = tuple(a for a in expert_axes if a != "data")
+    if seq_axes and shape.seq_len % _axis_size(mesh, seq_axes) == 0:
+        return "ep_a2a"
+    return "grouped_pjit"
+
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+              use_kernels: bool = False, remat: Optional[bool] = None,
+              moe_variant: Optional[str] = None,
+              kv_axes: Optional[Tuple[str, ...]] = None,
+              scan_unroll: int = 1, decode_2d: bool = False) -> Plan:
+    """decode_2d: stationary-weights decode for very large models — the
+    batch is REPLICATED (dp=()); 'data' becomes a second weight-sharding
+    axis (embed dim / expert-FFN dim), so each decode step psums
+    (batch × d_model)-sized activations instead of all-gathering
+    multi-GB weight shards.  KV pages shard over ('data','model')."""
+    have = set(mesh.axis_names)
+    dp_full = tuple(a for a in ("pod", "data") if a in have)
+    # batch must divide the dp axes; shrink until it does
+    dp = dp_full
+    while dp and shape.global_batch % _axis_size(mesh, dp) != 0:
+        dp = dp[1:]
+    if shape.mode == "decode" and "data" in have and not decode_2d:
+        # stationary-weights decode is the default whenever 1D (model-axis)
+        # sharding cannot hold the weights in HBM (perf-log: jamba decode
+        # HLO collectives 3971ms -> 24ms, memory 35GB -> 21GB).  Models
+        # whose experts already shard over ('data','model') (deepseek-v3)
+        # are excluded: their bulk never gathers, and batch replication
+        # would inflate the MLA attention-partial psums (H*r per token) —
+        # measured 10.4 -> 164 ms (perf log).
+        from repro.models.params import count_params
+        e_ax, _ = expert_sharding_for(cfg, mesh)
+        if (count_params(cfg) * 2 / max(_axis_size(mesh, "model"), 1) > 12e9
+                and e_ax != ("data", "model")):
+            decode_2d = True
+    if decode_2d:
+        dp = tuple(a for a in dp if a == "pod")
+    if kv_axes is None:
+        if shape.mode == "decode":
+            spare = tuple(a for a in ("data", "model")
+                          if a in have and a not in dp)
+            kv_axes = spare if spare else (("model",) if "model" in have else ())
+        else:
+            kv_axes = ()
+    rules = make_rules(cfg, shape, mesh)
+    expert_axes, shard_ffn_data = expert_sharding_for(cfg, mesh)
+    if decode_2d and "data" in have:
+        rules["embed"] = "data"
+        if cfg.is_moe and expert_axes == ("model",):
+            rules["effn"] = "data"
+            shard_ffn_data = True
+    variant = moe_variant or choose_moe_variant(cfg, shape, mesh, expert_axes)
+    if decode_2d and cfg.is_moe and expert_axes == ("model",):
+        variant = "ep_psum"
+
+    pspecs = param_specs(cfg, rules, mesh)
+
+    # wire the execution policy
+    from repro.distributed import collectives as C
+    moe_fn = None
+    moe_impl = "dense"
+    if cfg.is_moe:
+        if variant in ("ep_psum", "ep_a2a"):
+            ffn_axes = (("data",) if (rules.get("effn") == "data"
+                                      and variant == "ep_psum"
+                                      and "data" not in expert_axes
+                                      and "data" not in dp) else ())
+            moe_fn = C.make_moe_shard_fn(
+                mesh, cfg, variant=variant, dp_axes=dp,
+                expert_axes=expert_axes, use_kernels=use_kernels,
+                ffn_axes=ffn_axes)
+        elif variant == "grouped_pjit":
+            moe_impl = "grouped"
+    attn_fn = None
+    if shape.mode == "decode" and kv_axes and not cfg.is_attention_free:
+        attn_fn = C.make_seq_sharded_attn(mesh, dp, tuple(kv_axes))
+
+    policy = ExecPolicy(
+        moe_impl=moe_impl, moe_fn=moe_fn, attn_fn=attn_fn,
+        use_kernels=use_kernels,
+        remat=(shape.mode == "train") if remat is None else remat,
+        scan_unroll=scan_unroll)
+    return Plan(mesh=mesh, rules=rules, dp_axes=dp, kv_axes=tuple(kv_axes),
+                expert_axes=expert_axes, moe_variant=variant,
+                param_specs=pspecs, policy=policy)

@@ -1,0 +1,79 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch: on TPU the compiled kernels run natively; elsewhere (this CPU
+container) ``interpret=True`` executes the kernel bodies in Python for
+correctness validation, and callers that want XLA-optimized CPU execution
+use the jnp reference path instead (models pass use_kernels=False by
+default off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gqa_decode as _gqa
+from repro.kernels import moe_ffn as _moe
+from repro.kernels import ref as _ref
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "attn_softcap",
+                                             "block_w", "impl"))
+def gqa_decode(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
+               block_w: int = 512, impl: str = "auto"):
+    """Flash-decode GQA partials. impl: auto | pallas | interpret | ref."""
+    if impl == "ref" or (impl == "auto" and not on_tpu()):
+        return _ref.gqa_decode_ref(q, k, v, valid, scale=scale,
+                                   attn_softcap=attn_softcap)
+    interpret = (impl == "interpret") or not on_tpu()
+    return _gqa.gqa_decode(q, k, v, valid, scale=scale,
+                           attn_softcap=attn_softcap, block_w=block_w,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
+                                             "impl"))
+def moe_ffn(xbuf, wi, wo, wi_scale=None, wo_scale=None, *,
+            act: str = "silu", block_c: int = 128,
+            block_f: int = 512, impl: str = "auto"):
+    """Grouped gated expert FFN (int8 weights + scales supported).
+    impl: auto | pallas | interpret | ref."""
+    if impl == "ref" or (impl == "auto" and not on_tpu()):
+        import jax.numpy as jnp
+        if wi_scale is not None:
+            wi = wi.astype(jnp.float32) * wi_scale[:, None, None, None]
+            wo = wo.astype(jnp.float32) * wo_scale[:, None, None]
+        return _ref.moe_ffn_ref(xbuf, wi, wo, act=act)
+    interpret = (impl == "interpret") or not on_tpu()
+    return _moe.moe_ffn(xbuf, wi, wo, wi_scale=wi_scale, wo_scale=wo_scale,
+                        act=act, block_c=block_c,
+                        block_f=block_f, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "attn_softcap", "scale", "block_q", "block_k",
+    "impl"))
+def flash_prefill(q, k, v, kv_len=None, *, causal: bool = True,
+                  window: int = 0, attn_softcap: float = 0.0, scale=None,
+                  block_q: int = 256, block_k: int = 256,
+                  impl: str = "auto"):
+    """Prefill/training flash attention. impl: auto | pallas | interpret |
+    ref (ref = models.common.chunked_attention, the jnp tile-equivalent)."""
+    if impl == "ref" or (impl == "auto" and not on_tpu()):
+        from repro.models.common import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 attn_softcap=attn_softcap, scale=scale,
+                                 kv_len=kv_len)
+    from repro.kernels.flash_prefill import flash_prefill as _fp
+    interpret = (impl == "interpret") or not on_tpu()
+    return _fp(q, k, v, causal=causal, window=window,
+               attn_softcap=attn_softcap, scale=scale, kv_len=kv_len,
+               block_q=block_q, block_k=block_k, interpret=interpret)

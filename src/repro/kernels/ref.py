@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0):
+    """q: (B,H,D); k: (B,W,Hkv,D); v: (B,W,Hkv,Dv); valid: (B,W) bool.
+    Returns (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32) — the same
+    partials contract as models.attention.attention_partials."""
+    from repro.models.attention import attention_partials
+    return attention_partials(q, k, v, valid, scale=scale,
+                              attn_softcap=attn_softcap)
+
+
+def moe_ffn_ref(xbuf, wi, wo, *, act: str = "silu"):
+    """xbuf: (E,C,D); wi: (E,D,2,F); wo: (E,F,D) -> (E,C,D)."""
+    actf = {"silu": jax.nn.silu,
+            "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[act]
+    h = jnp.einsum("ecd,edgf->ecgf", xbuf.astype(jnp.float32),
+                   wi.astype(jnp.float32))
+    y = actf(h[..., 0, :]) * h[..., 1, :]
+    out = jnp.einsum("ecf,efd->ecd", y, wo.astype(jnp.float32))
+    return out.astype(xbuf.dtype)

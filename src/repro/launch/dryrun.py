@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture × input shape × mesh) cell:
+  * build the sharding plan (distributed.sharding.make_plan),
+  * jit the step function with explicit in/out shardings,
+  * ``.lower().compile()`` — success proves the distribution config is
+    coherent (sharding divisibility, collective legality, SPMD partitioning),
+  * record ``memory_analysis()`` (fits-per-chip evidence),
+    ``cost_analysis()`` FLOPs/bytes and the parsed collective bytes
+    (§Roofline terms) into experiments/dryrun/<cell>.json.
+
+The XLA_FLAGS line above MUST run before any other import so the CPU
+platform materializes 512 placeholder devices.  Smoke tests and benches do
+NOT import this module — they see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, get_shape, \
+    shape_applicable
+from repro.core import roofline
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import kvcache
+from repro.models.inputs import input_specs
+from repro.models.model import ExecPolicy
+from repro.models.params import abstract_params
+from repro.serving.steps import make_prefill_step, make_serve_step
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               plan_overrides=None):
+    """Build + lower + compile one cell. Returns (compiled, report, plan).
+
+    plan_overrides: kwargs for sharding.make_plan, plus the step-level
+    knobs 'num_micro' (gradient-accumulation micro-batches for train) and
+    'loss_chunk'."""
+    overrides = dict(plan_overrides or {})
+    num_micro = overrides.pop("num_micro", 1)
+    cfg = get_config(arch)
+    # any ModelConfig field may be overridden (expert_dtype,
+    # capacity_factor, ssm_chunk, ...); the rest go to make_plan
+    import dataclasses
+    cfg_kw = {k: overrides.pop(k) for k in list(overrides)
+              if k in cfg.__dataclass_fields__}
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    shape = get_shape(shape_name)
+    plan = SH.make_plan(cfg, shape, mesh, **overrides)
+    params_abs = abstract_params(cfg)
+    p_shard = _named(mesh, plan.param_specs)
+    specs = input_specs(cfg, shape)
+    if True:
+        if shape.mode == "train":
+            opt = OptConfig(moment_dtype="bfloat16" if
+                            cfg.family in ("moe", "hybrid") else "float32")
+            if num_micro > 1:
+                from repro.training.train_step import \
+                    make_microbatched_train_step
+                step = make_microbatched_train_step(cfg, opt, plan.policy,
+                                                    num_micro)
+            else:
+                step = make_train_step(cfg, opt, plan.policy)
+            opt_abs = jax.eval_shape(lambda p: init_opt_state(p, opt),
+                                     params_abs)
+            o_shard = {"mu": p_shard, "nu": p_shard,
+                       "step": jax.sharding.NamedSharding(
+                           mesh, jax.sharding.PartitionSpec())}
+            b_spec = SH.batch_specs(specs, plan.dp_axes)
+            b_shard = _named(mesh, b_spec)
+            jf = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_abs, opt_abs, specs)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg, plan.policy)
+
+            def step2(params, batch):
+                extras = {k: v for k, v in batch.items() if k != "tokens"}
+                return step(params, batch["tokens"], **extras)
+
+            b_shard = _named(mesh, SH.batch_specs(specs, plan.dp_axes))
+            jf = jax.jit(step2, in_shardings=(p_shard, b_shard),
+                         out_shardings=None)
+            lowered = jf.lower(params_abs, specs)
+        else:  # decode
+            step = make_serve_step(cfg, plan.policy)
+            cache_abs = specs["cache"]
+            c_spec = SH.cache_specs(cfg, cache_abs, plan.dp_axes,
+                                    plan.kv_axes, plan.rules, mesh)
+            c_shard = _named(mesh, c_spec)
+            dpa = plan.dp_axes if plan.dp_axes else None
+            t_shard = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(dpa, None))
+            jf = jax.jit(step,
+                         in_shardings=(p_shard, c_shard, t_shard),
+                         out_shardings=(None, None, c_shard),
+                         donate_argnums=(1,))
+            lowered = jf.lower(params_abs, cache_abs, specs["tokens"])
+        compiled = lowered.compile()
+
+    from repro.core.census import census as make_census
+    cens = make_census(cfg, shape, dict(mesh.shape), plan)
+    rep = roofline.analyze(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=mesh.size, census=cens,
+        model_flops=roofline.model_flops_for(cfg, shape))
+    return compiled, rep, plan
+
+
+def run_cell(arch, shape_name, mesh, mesh_name, out_dir=OUT_DIR,
+             plan_overrides=None, tag=""):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    cell = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{cell}.json"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] SKIP {cell}: {reason}", flush=True)
+        return rec
+    t0 = time.time()
+    try:
+        compiled, rep, plan = lower_cell(arch, shape_name, mesh, mesh_name,
+                                         plan_overrides)
+        # trip-scaled HLO collective cross-check: compile again with the
+        # layer scan partially unrolled (u=2); per-kind bytes extrapolate as
+        # nonscan + P*(c2 - c1) since the scan body is counted once per
+        # unrolled copy (see core/census.py docstring).
+        hlo_coll_scaled = {}
+        try:
+            ov = dict(plan_overrides or {})
+            ov["scan_unroll"] = 2
+            compiled2, rep2, _ = lower_cell(arch, shape_name, mesh,
+                                            mesh_name, ov)
+            P = cfg.num_periods
+            from repro.core.roofline import parse_collectives
+            raw1 = parse_collectives(compiled.as_text()).bytes_by_kind
+            raw2 = parse_collectives(compiled2.as_text()).bytes_by_kind
+            for kind in set(raw1) | set(raw2):
+                a, b = raw1.get(kind, 0.0), raw2.get(kind, 0.0)
+                body = max(b - a, 0.0)
+                hlo_coll_scaled[kind] = max(a - body, 0.0) + P * body
+        except Exception as e:  # cross-check is best-effort
+            hlo_coll_scaled = {"error": str(e)[:200]}
+        rec = {"status": "ok", "compile_s": round(time.time() - t0, 1),
+               "hlo_collectives_scaled": hlo_coll_scaled,
+               "plan": {"rules": {k: str(v) for k, v in plan.rules.items()},
+                        "dp_axes": plan.dp_axes, "kv_axes": plan.kv_axes,
+                        "expert_axes": plan.expert_axes,
+                        "moe_variant": plan.moe_variant},
+               **rep.to_dict()}
+        mem = rep.memory_per_chip
+        print(f"[dryrun] OK   {cell}  t={rec['compile_s']}s "
+              f"dom={rep.dominant} "
+              f"comp={rep.t_compute*1e3:.2f}ms mem={rep.t_memory*1e3:.2f}ms "
+              f"coll={rep.t_collective*1e3:.2f}ms "
+              f"arg={mem['argument']/1e9:.2f}GB tmp={mem['temp']/1e9:.2f}GB",
+              flush=True)
+    except Exception as e:  # noqa
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] FAIL {cell}: {type(e).__name__}: {e}", flush=True)
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--debug", action="store_true",
+                    help="small meshes on REPRO_DRYRUN_DEVICES=8 fake devices")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    meshes = []
+    if args.debug:
+        from repro.launch.mesh import make_debug_mesh
+        if args.mesh in ("single", "both"):
+            meshes.append(("debug_2x4", make_debug_mesh(model=4, data=2)))
+        if args.mesh in ("multi", "both"):
+            meshes.append(("debug_2x2x2", make_debug_mesh(model=2, data=2,
+                                                          pod=2)))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append(("single_pod_16x16", make_production_mesh()))
+        if args.mesh in ("multi", "both"):
+            meshes.append(("multi_pod_2x16x16",
+                           make_production_mesh(multi_pod=True)))
+
+    archs = ALL_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    n_ok = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh, mesh_name, out_dir)
+                if rec["status"] == "error":
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"[dryrun] done: {n_ok} ok/skip, {n_fail} failed", flush=True)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Training launcher.
+
+Local (CPU) smoke:  PYTHONPATH=src python -m repro.launch.train \
+    --arch qwen2.5-3b --smoke --steps 20
+Production lowering check: add --dryrun (uses the production mesh via
+repro.launch.dryrun instead — kept separate so THIS module never forces
+the 512-device platform flag).
+
+On a real multi-host TPU deployment this entry point is what every host
+runs (jax.distributed.initialize is called when the standard TPU env vars
+are present); the Trainer handles restart-from-checkpoint, so preemption
+recovery is: just re-run the same command.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config for CPU")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--num-micro", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # multi-host init when launched under a TPU scheduler
+    if "TPU_WORKER_ID" in os.environ or "MEGASCALE_COORDINATOR_ADDRESS" in os.environ:
+        import jax
+        jax.distributed.initialize()
+
+    from repro.configs import get_config
+    from repro.training.trainer import Trainer, TrainConfig
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    tcfg = TrainConfig(steps=args.steps, batch_size=args.batch_size,
+                       seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                       num_micro=args.num_micro, seed=args.seed)
+    trainer = Trainer(cfg, tcfg)
+    metrics = trainer.run()
+    print(json.dumps({"final": metrics, "log": trainer.metrics_log[-5:]},
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

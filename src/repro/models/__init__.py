@@ -1,0 +1,1 @@
+from repro.models.model import ExecPolicy, forward, unembed  # noqa: F401

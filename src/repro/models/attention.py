@@ -1,0 +1,208 @@
+"""Attention blocks: GQA (full / sliding-window, softcap, bias) and
+DeepSeek-style MLA, with prefill and ring-buffer decode paths.
+
+Decode attention is expressed through *partials* (unnormalized output,
+running max, running denominator) so the sequence-sharded distributed path
+(distributed/collectives.py) can combine shards with a log-sum-exp psum —
+the TPU adaptation of the paper's CPU attention (compute where the KV
+lives, move only q/o).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_MLA, ATTN_WINDOW, LayerSpec, ModelConfig
+from repro.models import kvcache
+from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
+                                 rmsnorm, softcap)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a ring cache, via partials
+# ---------------------------------------------------------------------------
+
+def attention_partials(q, k, v, valid, *, scale: float,
+                       attn_softcap: float = 0.0):
+    """q: (B,H,D), k/v: (B,W,Hkv,Dv), valid: (B,W) bool.
+    Returns (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32)."""
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+    s = jnp.einsum("bhgd,bwhd->bhgw", qf, k.astype(jnp.float32))
+    s = softcap(s, attn_softcap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    # guard: a shard may hold zero valid slots
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None]) * (s > NEG_INF / 2)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgw,bwhd->bhgd", p, v.astype(jnp.float32))
+    Dv = v.shape[-1]
+    return o.reshape(B, H, Dv), m_safe.reshape(B, H), l.reshape(B, H)
+
+
+def combine_partials(o, m, l):
+    """Normalize partials (single shard)."""
+    return o / jnp.maximum(l[..., None], 1e-30)
+
+
+def decode_valid_mask(slot_pos, pos, window: int):
+    """slot_pos: (B,W) absolute positions in ring slots; pos: (B,) current
+    query position.  Valid = written & causal (& within window)."""
+    v = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window:
+        v &= slot_pos > (pos[:, None] - window)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
+                positions, *, cache: Optional[Dict], mode: str,
+                pos: Optional[jax.Array] = None, sharded_fn=None,
+                kv_override: Optional[Tuple] = None, causal: bool = True):
+    """x: (B,S,E). mode: 'full' (train/prefill w/ optional cache write) or
+    'decode' (S==1, read+write ring cache).  Returns (out, new_layer_cache).
+
+    kv_override: (k, v) already-built KV (whisper cross-attention)."""
+    B, S, E = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = cfg.query_scale or Dh ** -0.5
+    # cfg.window_size is authoritative (smoke() rescales it; spec.window is
+    # structural documentation) — it also sizes the ring cache.
+    window = cfg.window_size if spec.attn == ATTN_WINDOW else 0
+
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, H, Dh)
+    if kv_override is None:
+        k = _proj(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, Dh)
+        v = _proj(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, Dh)
+        if cfg.pos == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+        if cfg.pos == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+
+    quantized = cfg.kv_dtype == "int8" and kv_override is None
+    new_cache = cache
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
+        new_cache = kvcache.write_decode(cache, new, pos)
+        valid = decode_valid_mask(new_cache["slot_pos"], pos, window)
+        if quantized:
+            kc, vc = kvcache.dequantize_kv(new_cache)
+        else:
+            kc, vc = new_cache["k"], new_cache["v"]
+        args = (q[:, 0], kc, vc, valid)
+        kw = dict(scale=scale, attn_softcap=cfg.attn_softcap)
+        if sharded_fn is not None:
+            o = sharded_fn(*args, **kw)
+        else:
+            o = combine_partials(*attention_partials(*args, **kw))
+        o = o[:, None].astype(x.dtype)                      # (B,1,H,Dh)
+    elif kv_override is not None:
+        # cross-attention (non-causal over encoder positions)
+        o = chunked_attention(q, k, v, causal=False, scale=scale,
+                              attn_softcap=cfg.attn_softcap)
+    else:
+        # full-sequence forward always begins at absolute position 0
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              attn_softcap=cfg.attn_softcap, scale=scale)
+        if cache is not None:    # prefill: persist KV into the ring
+            seq_pos = (positions if positions.ndim == 1
+                       else positions[0]).astype(jnp.int32)
+            new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
+            new_cache = kvcache.write_prefill(cache, new, seq_pos)
+    out = _proj(o.reshape(B, S, H * Dh), p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3).
+#
+# Prefill uses the naive (decompressed) form; decode uses the *absorbed*
+# form — W_uk folded into the query and W_uv applied after attention over
+# the latent cache — so the per-token cache is kv_lora+rope bytes and the
+# decode matvecs run against the compressed latents.  test_layers asserts
+# the two forms agree.
+# ---------------------------------------------------------------------------
+
+def mla_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
+                positions, *, cache: Optional[Dict], mode: str,
+                pos: Optional[jax.Array] = None, sharded_fn=None,
+                causal: bool = True):
+    B, S, E = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    cq = rmsnorm(_proj(x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+    q = _proj(cq, p["wuq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(_proj(x, p["wdkv"]), p["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    kr = _proj(x, p["wkr"]).reshape(B, S, 1, dr)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0]         # (B,S,dr)
+
+    wuk = p["wuk"].reshape(cfg.kv_lora_rank, H, dn)
+    wuv = p["wuv"].reshape(cfg.kv_lora_rank, H, dv)
+
+    new_cache = cache
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        new_cache = kvcache.write_decode(cache, {"ckv": ckv, "kr": kr}, pos)
+        valid = decode_valid_mask(new_cache["slot_pos"], pos, 0)
+        # absorbed queries: q_lat (B,H,r) = q_nope @ W_uk^T
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        # fold the rope part in by concatenating along the "latent" dim:
+        # score = q_lat . ckv + q_rope . kr
+        qcat = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], -1)
+        kcat = jnp.concatenate([new_cache["ckv"], new_cache["kr"]],
+                               -1)[:, :, None, :]               # (B,W,1,r+dr)
+        kw = dict(scale=scale, attn_softcap=0.0)
+        args = (qcat.astype(x.dtype), kcat.astype(x.dtype),
+                new_cache["ckv"][:, :, None, :], valid)
+        if sharded_fn is not None:
+            o_lat = sharded_fn(*args, **kw)
+        else:
+            o_lat = combine_partials(*attention_partials(*args, **kw))
+        # o_lat: (B,H,r) attention-weighted latents; decompress with W_uv
+        o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+        o = o[:, None].astype(x.dtype)                          # (B,1,H,dv)
+    else:
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv, wuk.astype(ckv.dtype))
+        v = jnp.einsum("bsr,rhd->bshd", ckv, wuv.astype(ckv.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))], -1)
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        o = chunked_attention(qfull, k, v, causal=causal, scale=scale)
+        if cache is not None:
+            seq_pos = (positions if positions.ndim == 1
+                       else positions[0]).astype(jnp.int32)
+            new_cache = kvcache.write_prefill(cache, {"ckv": ckv, "kr": kr},
+                                              seq_pos)
+    out = _proj(o.reshape(B, S, H * dv), p["wo"])
+    return out, new_cache
+
+
+def attn_forward(cfg, spec, p, x, positions, **kw):
+    if spec.attn == ATTN_MLA:
+        return mla_forward(cfg, spec, p, x, positions, **kw)
+    return gqa_forward(cfg, spec, p, x, positions, **kw)

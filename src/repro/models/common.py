@@ -1,0 +1,206 @@
+"""Shared model building blocks: norms, activations, RoPE, softcap,
+memory-efficient (flash-style) chunked attention in pure jnp.
+
+Everything here is a pure function over explicit parameter dicts; no module
+framework is used (flax is unavailable offline and unnecessary).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float, offset: float = 0.0):
+    """RMSNorm; gemma-style uses (1 + w) which callers get via offset=1."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * (offset + weight.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layernorm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: Optional[dict], x):
+    """Dispatch on cfg.norm. `p` is the norm's param dict (may be empty)."""
+    if cfg.norm == "rmsnorm":
+        offset = 1.0 if cfg.scale_embeddings else 0.0  # gemma family: (1+w)
+        return rmsnorm(x, p["scale"], cfg.norm_eps, offset=offset)
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    if cfg.norm == "nonparametric_ln":
+        return layernorm(x, None, None, cfg.norm_eps)
+    raise ValueError(cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Activations / softcap
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "gelu_mlp": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def softcap(x, cap: float):
+    """gemma2 logit soft-capping: cap * tanh(x / cap). No-op when cap==0."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                            # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model: int):
+    """Whisper-style sinusoidal embeddings computed on the fly."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient chunked attention (flash-style, pure jnp).
+#
+# This is the prefill/train attention path: it never materializes the full
+# (S x S) score matrix — it scans KV chunks with a running (max, sumexp)
+# pair, which is what keeps the 32k-prefill dry-run memory bounded and what
+# an on-TPU Pallas flash kernel would do tile-by-tile in VMEM.
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      attn_softcap: float = 0.0, scale: Optional[float] = None,
+                      q_offset=0, kv_len: Optional[jax.Array] = None,
+                      chunk: int = 1024):
+    """Grouped-query chunked attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, Dv-compatible). Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (int or array) for causal masking
+      against an already-populated KV cache.
+    kv_len: optional (B,) valid-length mask for the KV sequence.
+    Returns (B, Sq, Hq, Dv).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, group, D)
+
+    nchunks = -(-Skv // chunk)
+    pad = nchunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, Hkv, -1)
+    vc = v.reshape(B, nchunks, chunk, Hkv, Dv)
+
+    q_pos = q_offset + jnp.arange(Sq)                          # (Sq,)
+    if kv_len is None:
+        kv_len_arr = jnp.full((B,), Skv, dtype=jnp.int32)
+    else:
+        kv_len_arr = kv_len.astype(jnp.int32)
+
+    def body(carry, inputs):
+        m, l, o = carry                                        # running stats
+        ci, kci, vci = inputs
+        kv_pos = ci * chunk + jnp.arange(chunk)                # (chunk,)
+        # scores: (B, Sq, Hkv, group, chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kci.astype(jnp.float32))
+        s = softcap(s, attn_softcap)
+        mask = kv_pos[None, :] < kv_len_arr[:, None]           # (B, chunk)
+        mask = mask[:, None, :]                                # (B, 1, chunk)
+        if causal:
+            cm = kv_pos[None, :] <= q_pos[:, None]             # (Sq, chunk)
+            if window:
+                cm &= kv_pos[None, :] > (q_pos[:, None] - window)
+            mask = mask & cm[None, :, :]
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vci.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), jnp.float32)
+    o0 = jnp.zeros((B, Sq, Hkv, group, Dv), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0),
+        (jnp.arange(nchunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal: bool, window: int = 0,
+                        attn_softcap: float = 0.0, scale=None, q_offset=0,
+                        kv_len=None):
+    """O(S^2)-materializing oracle used only in tests."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, group, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k.astype(jnp.float32))
+    s = softcap(s, attn_softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    if kv_len is None:
+        mask = jnp.ones((B, Skv), bool)
+    else:
+        mask = kv_pos[None, :] < kv_len[:, None]
+    mask = mask[:, None, :]
+    if causal:
+        cm = kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            cm &= kv_pos[None, :] > (q_pos[:, None] - window)
+        mask = mask & cm[None, :, :]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, Dv).astype(q.dtype)

@@ -1,0 +1,161 @@
+"""KV / SSM cache structures.
+
+Caches are plain nested dicts (pytree-friendly, mirrors param structure):
+
+  cache = {
+    "pos":  (B,) int32 — current sequence length per row,
+    "p{i}": per period-position stacked state, one of
+        kv:  {"k": (P,B,W,Hkv,Dh), "v": ..., "slot_pos": (P,B,W) int32}
+        mla: {"ckv": (P,B,W,kv_lora), "kr": (P,B,W,rope), "slot_pos": ...}
+        ssm: {"conv": (P,B,cw-1,Cch), "state": (P,B,nh,hd,N)}
+    "prologue": {...}     (when the arch has non-periodic leading layers)
+    "xattn": {"k": (P,B,encS,H,Dh), "v": ...}   (whisper cross-attention)
+  }
+
+W is the ring-buffer width: ``min(window, max_seq)`` for sliding-window
+layers, ``max_seq`` otherwise.  ``slot_pos`` stores the absolute position
+held in each ring slot (-1 = empty), which makes masking exact for both
+full and windowed layers without modular-arithmetic case analysis.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_MLA, ATTN_WINDOW, LayerSpec, ModelConfig
+
+
+def layer_cache_width(cfg: ModelConfig, spec: LayerSpec, max_seq: int) -> int:
+    if spec.attn == ATTN_WINDOW:
+        return min(cfg.window_size, max_seq)
+    return max_seq
+
+
+def _spec_cache(cfg: ModelConfig, spec: LayerSpec, stack: int, batch: int,
+                max_seq: int, dtype) -> Dict:
+    kind = spec.cache_kind()
+    if kind == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        cw = cfg.ssm_conv_width - 1
+        return {
+            "conv_x": jnp.zeros((stack, batch, cw, d_in), dtype),
+            "conv_B": jnp.zeros((stack, batch, cw, cfg.ssm_state), dtype),
+            "conv_C": jnp.zeros((stack, batch, cw, cfg.ssm_state), dtype),
+            "state": jnp.zeros((stack, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                               jnp.float32),
+        }
+    W = layer_cache_width(cfg, spec, max_seq)
+    if kind == "mla":
+        return {
+            "ckv": jnp.zeros((stack, batch, W, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((stack, batch, W, cfg.qk_rope_head_dim), dtype),
+            "slot_pos": jnp.full((stack, batch, W), -1, jnp.int32),
+        }
+    if kind == "kv":
+        if cfg.kv_dtype == "int8":
+            Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+            return {
+                "k": jnp.zeros((stack, batch, W, Hkv, Dh), jnp.int8),
+                "v": jnp.zeros((stack, batch, W, Hkv, Dh), jnp.int8),
+                "k_scale": jnp.zeros((stack, batch, W, Hkv), jnp.float32),
+                "v_scale": jnp.zeros((stack, batch, W, Hkv), jnp.float32),
+                "slot_pos": jnp.full((stack, batch, W), -1, jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((stack, batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((stack, batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "slot_pos": jnp.full((stack, batch, W), -1, jnp.int32),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache: Dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+    for i, spec in enumerate(cfg.period):
+        cache[f"p{i}"] = _spec_cache(cfg, spec, cfg.num_periods, batch,
+                                     max_seq, dtype)
+    if cfg.prologue:
+        cache["prologue"] = _spec_cache(cfg, cfg.prologue[0],
+                                        len(cfg.prologue), batch, max_seq, dtype)
+    if cfg.encoder_layers:
+        cache["xattn"] = {
+            "k": jnp.zeros((cfg.num_periods, batch, cfg.encoder_seq,
+                            cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((cfg.num_periods, batch, cfg.encoder_seq,
+                            cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """ShapeDtypeStruct mirror of init_cache (no allocation, for dry-runs)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer writes.  All write helpers operate on a *single layer slice*
+# (no leading stack dim) — model.py maps them over the stack inside scan.
+# ---------------------------------------------------------------------------
+
+def quantize_kv(k, v):
+    """Per-token-per-head symmetric int8 quantization.
+    k/v: (B, S, Hkv, D) -> dict of int8 values + f32 scales."""
+    def q(x):
+        scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        qx = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                      -127, 127).astype(jnp.int8)
+        return qx, scale
+    qk, sk = q(k)
+    qv, sv = q(v)
+    return {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+
+
+def dequantize_kv(layer_cache: Dict):
+    """Returns (k, v) in f32 from an int8 layer cache (jnp validation
+    path; the TPU kernel dequantizes tile-wise in VMEM instead)."""
+    k = layer_cache["k"].astype(jnp.float32) * \
+        layer_cache["k_scale"][..., None]
+    v = layer_cache["v"].astype(jnp.float32) * \
+        layer_cache["v_scale"][..., None]
+    return k, v
+
+
+def write_prefill(layer_cache: Dict, new: Dict, seq_positions: jax.Array) -> Dict:
+    """Write a full prefill chunk.  new[name]: (B, S, ...);
+    seq_positions: (S,) absolute positions being written.  If S exceeds the
+    ring width W (sliding-window layer), only the last W positions are kept
+    so scatter indices stay unique."""
+    out = dict(layer_cache)
+    W = layer_cache["slot_pos"].shape[-1]
+    S = seq_positions.shape[0]
+    if S > W:
+        new = {k: v[:, -W:] for k, v in new.items()}
+        seq_positions = seq_positions[-W:]
+    slots = seq_positions % W                                  # (S,)
+    for name in new:
+        buf = layer_cache[name]
+        out[name] = buf.at[:, slots].set(new[name].astype(buf.dtype))
+    B = layer_cache["slot_pos"].shape[0]
+    sp = layer_cache["slot_pos"].at[:, slots].set(
+        jnp.broadcast_to(seq_positions[None, :], (B, len(seq_positions))).astype(jnp.int32))
+    out["slot_pos"] = sp
+    return out
+
+
+def write_decode(layer_cache: Dict, new: Dict, pos: jax.Array) -> Dict:
+    """Write one token per row.  new[name]: (B, 1, ...); pos: (B,) absolute."""
+    out = dict(layer_cache)
+    W = layer_cache["slot_pos"].shape[-1]
+    slots = (pos % W).astype(jnp.int32)                        # (B,)
+    brow = jnp.arange(slots.shape[0])
+    for name in new:
+        buf = layer_cache[name]
+        out[name] = buf.at[brow, slots].set(new[name][:, 0].astype(buf.dtype))
+    out["slot_pos"] = layer_cache["slot_pos"].at[brow, slots].set(pos.astype(jnp.int32))
+    return out

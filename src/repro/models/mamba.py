@@ -1,0 +1,211 @@
+"""Mamba-2 mixer with the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060) and an O(1)-state decode step.
+
+Layout (single group, G=1):
+  in_proj(x) -> [z (d_in), xBC (d_in + 2N), dt (nh)]
+  causal depthwise conv over xBC (width cw), SiLU
+  split xBC -> x (d_in), B (N), C (N);  heads: x -> (nh, hd)
+  dt = softplus(dt + dt_bias); A = -exp(a_log)  (per head)
+  SSD recurrence per head h:
+      S_t = exp(dt_t A_h) S_{t-1} + dt_t * B_t x_t^T        (hd x N)
+      y_t = C_t . S_t + D_h x_t
+  gated RMSNorm(y * silu(z)), out_proj.
+
+`ssd_chunked` scans fixed-size chunks: intra-chunk work is a masked
+(L x L) matmul per chunk (MXU-friendly), inter-chunk state is a sequential
+scan — compute O(S*L) instead of O(S^2).  `ssd_recurrent_ref` is the
+step-by-step oracle used by tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_recurrent_ref(x, dt, A, B, C, state0=None):
+    """Oracle. x: (b,S,nh,hd); dt: (b,S,nh); A: (nh,); B,C: (b,S,N).
+    Returns (y (b,S,nh,hd), state (b,nh,hd,N))."""
+    b, S, nh, hd = x.shape
+    N = B.shape[-1]
+    S0 = jnp.zeros((b, nh, hd, N), jnp.float32) if state0 is None else state0
+
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt.astype(jnp.float32) * A)             # (b,nh)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(jnp.float32),
+                         xt.astype(jnp.float32), Bt.astype(jnp.float32))
+        s = s * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, Ct.astype(jnp.float32))
+        return s, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, B, C, state0=None, chunk: int = 256):
+    """Chunked SSD. Same signature/semantics as ssd_recurrent_ref."""
+    b, S, nh, hd = x.shape
+    N = B.shape[-1]
+    nchunks = -(-S // chunk)
+    pad = nchunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = x.reshape(b, nchunks, L, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(b, nchunks, L, nh).astype(jnp.float32)
+    Bc = B.reshape(b, nchunks, L, N).astype(jnp.float32)
+    Cc = C.reshape(b, nchunks, L, N).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    S0 = (jnp.zeros((b, nh, hd, N), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]                        # (L,L)
+
+    def body(s, inp):
+        xi, dti, Bi, Ci = inp                                    # (b,L,...)
+        a = dti * Af                                             # (b,L,nh)
+        cumA = jnp.cumsum(a, axis=1)                             # (b,L,nh)
+        # intra-chunk: y[i] += sum_{j<=i} (C_i.B_j) exp(cumA_i - cumA_j) dt_j x_j
+        CB = jnp.einsum("bin,bjn->bij", Ci, Bi)                  # (b,L,L)
+        decay = jnp.exp(cumA[:, :, None, :] - cumA[:, None, :, :])  # (b,i,j,nh)
+        M = jnp.where(causal[None, :, :, None], CB[..., None] * decay, 0.0)
+        y = jnp.einsum("bijh,bjh,bjhp->bihp", M, dti, xi)
+        # inter-chunk: y[i] += C_i exp(cumA_i) . S_prev
+        y = y + jnp.einsum("bin,bih,bhpn->bihp", Ci, jnp.exp(cumA), s)
+        # state update: S = exp(sumA) S_prev + sum_j exp(sumA - cumA_j) dt_j B_j x_j^T
+        sumA = cumA[:, -1, :]                                    # (b,nh)
+        w = jnp.exp(sumA[:, None, :] - cumA) * dti               # (b,L,nh)
+        upd = jnp.einsum("bjh,bjn,bjhp->bhpn", w, Bi, xi)
+        s = s * jnp.exp(sumA)[..., None, None] + upd
+        return s, y
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    state, ys = jax.lax.scan(body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunks * L, nh, hd)
+    if pad:
+        y = y[:, :S]
+    return y.astype(x.dtype), state
+
+
+def ssd_step(xt, dtt, A, Bt, Ct, state):
+    """Single decode step. xt: (b,nh,hd); dtt: (b,nh); Bt/Ct: (b,N);
+    state: (b,nh,hd,N). Returns (y (b,nh,hd), new_state)."""
+    decay = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32))
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(jnp.float32),
+                     xt.astype(jnp.float32), Bt.astype(jnp.float32))
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Ct.astype(jnp.float32))
+    return y.astype(xt.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, b):
+    """x: (B,S,C); w: (cw,C); depthwise causal.  Computed in f32 so the
+    transposed conv in the backward pass sees uniform dtypes."""
+    cw, C = w.shape
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],  # (cw,1,C)
+        window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(x_new, conv_cache, w, b):
+    """x_new: (B,C); conv_cache: (B,cw-1,C). Returns (y (B,C), new_cache)."""
+    window = jnp.concatenate([conv_cache, x_new[:, None, :]], axis=1)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_new.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Full mixer
+# ---------------------------------------------------------------------------
+
+def mamba_forward(cfg: ModelConfig, p: Dict, x, *, cache: Optional[Dict],
+                  mode: str) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,E). Returns (out (B,S,E), new_layer_cache)."""
+    Bsz, S, E = x.shape
+    d_in, nh, hd, N = _dims(cfg)
+
+    z = jnp.einsum("bse,ef->bsf", x, p["wz"].astype(x.dtype))
+    xr = jnp.einsum("bse,ef->bsf", x, p["wx"].astype(x.dtype))
+    Br = jnp.einsum("bse,en->bsn", x, p["wB"].astype(x.dtype))
+    Cr = jnp.einsum("bse,en->bsn", x, p["wC"].astype(x.dtype))
+    dt_raw = jnp.einsum("bse,eh->bsh", x, p["wdt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,S,nh)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (nh,)
+
+    def _silu(v):
+        return jax.nn.silu(v.astype(jnp.float32)).astype(x.dtype)
+
+    new_cache = cache
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        xs, new_cx = conv_step(xr[:, 0], cache["conv_x"], p["conv_x"],
+                               p["conv_bx"])
+        Bp, new_cB = conv_step(Br[:, 0], cache["conv_B"], p["conv_B"],
+                               p["conv_bB"])
+        Cp, new_cC = conv_step(Cr[:, 0], cache["conv_C"], p["conv_C"],
+                               p["conv_bC"])
+        xs, Bp, Cp = _silu(xs), _silu(Bp), _silu(Cp)
+        xh = xs.reshape(Bsz, nh, hd)
+        y, new_state = ssd_step(xh, dt[:, 0], A, Bp, Cp, cache["state"])
+        y = y.astype(x.dtype) + p["d_skip"].astype(x.dtype)[None, :, None] * xh
+        y = y.reshape(Bsz, 1, d_in)
+        new_cache = {"conv_x": new_cx, "conv_B": new_cB, "conv_C": new_cC,
+                     "state": new_state}
+    else:
+        xs = _silu(causal_conv(xr, p["conv_x"], p["conv_bx"]))
+        Bp = _silu(causal_conv(Br, p["conv_B"], p["conv_bB"]))
+        Cp = _silu(causal_conv(Cr, p["conv_C"], p["conv_bC"]))
+        xh = xs.reshape(Bsz, S, nh, hd)
+        state0 = cache["state"] if cache is not None else None
+        y, state = ssd_chunked(xh, dt, A, Bp, Cp, state0=state0,
+                               chunk=cfg.ssm_chunk)
+        y = y + p["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+        y = y.reshape(Bsz, S, d_in)
+        if cache is not None:   # prefill: persist state + conv tails
+            def tail_of(v, ref):
+                t = v[:, -(cfg.ssm_conv_width - 1):]
+                pad_t = cfg.ssm_conv_width - 1 - t.shape[1]
+                if pad_t > 0:
+                    t = jnp.pad(t, ((0, 0), (pad_t, 0), (0, 0)))
+                return t.astype(ref.dtype)
+            new_cache = {"conv_x": tail_of(xr, cache["conv_x"]),
+                         "conv_B": tail_of(Br, cache["conv_B"]),
+                         "conv_C": tail_of(Cr, cache["conv_C"]),
+                         "state": state}
+
+    # gated RMSNorm + out proj
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fe->bse", y, p["out_proj"].astype(y.dtype))
+    return out.astype(x.dtype), new_cache

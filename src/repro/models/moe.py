@@ -1,0 +1,299 @@
+"""Mixture-of-Experts FFN.
+
+Execution paths (numerically equivalent up to capacity drops):
+
+  * ``moe_dense``   — masked loop over experts; O(E) compute waste; the
+    reference/oracle path for unit tests and tiny smoke configs.
+  * ``moe_grouped`` — single-shard capacity-bucketed grouped matmul
+    (scatter tokens to (E, C, D) buckets, einsum, gather back).  This is
+    the compute the Pallas ``moe_ffn`` kernel accelerates.
+  * ``moe_ep_psum_local``  — expert parallelism, tokens *replicated* over
+    the expert mesh axes; each shard computes its experts' contribution
+    and the outputs are combined with a psum.  Robust for decode (few
+    tokens per row).  Collective bytes: T*D per psum hop.
+  * ``moe_ep_a2a_local``   — expert parallelism, tokens *sharded* over the
+    expert axes; routed tokens are exchanged with ``lax.all_to_all``
+    (capacity-bucketed), grouped-matmul'ed on the owning shard, and
+    returned.  Collective bytes: ~2*T*K/M*D — the activation analogue of
+    the paper's D2/D3 transfers: weights stay resident, activations move.
+
+Gate/up projections are stored as (D, 2, F) so that sharding the 'ffn'
+axis keeps the two halves aligned on every shard.
+
+Routing follows the config: softmax top-k (mixtral/jamba/moonshot) or
+sigmoid scoring with top-k renormalization (deepseek-v3 ``router_scale``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import act_fn
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+def route(cfg: ModelConfig, router_w, x) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (T, D) -> (weights (T,k) f32, idx (T,k) i32, aux_loss scalar)."""
+    scores = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    if cfg.router_scale:                       # deepseek: sigmoid + renorm
+        probs = jax.nn.sigmoid(scores)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+    # Switch-style load-balance loss over softmax probabilities
+    sm = jax.nn.softmax(scores, axis=-1)
+    T = x.shape[0]
+    frac = jnp.zeros((cfg.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * cfg.top_k))
+    aux = cfg.num_experts * jnp.sum(frac * jnp.mean(sm, axis=0))
+    return w, idx.astype(jnp.int32), aux
+
+
+def expert_weights(p: Dict, dtype):
+    """Dequantize int8 experts (weight-only quant, per-expert scale) to
+    the compute dtype; pass-through otherwise.  On TPU the Pallas kernel
+    dequantizes tile-wise in VMEM instead (ops.moe_ffn scales args)."""
+    wi, wo = p["wi"], p["wo"]
+    if "wi_scale" in p:
+        wi = wi.astype(dtype) * p["wi_scale"].astype(dtype)[:, None, None, None]
+        wo = wo.astype(dtype) * p["wo_scale"].astype(dtype)[:, None, None]
+    return wi, wo
+
+
+def gated_ffn(cfg: ModelConfig, wi, wo, x):
+    """x: (..., D); wi: (D, 2, F); wo: (F, D)."""
+    h = jnp.einsum("...d,dgf->...gf", x, wi.astype(x.dtype))
+    y = act_fn(cfg.ffn_act)(h[..., 0, :]) * h[..., 1, :]
+    return jnp.einsum("...f,fd->...d", y, wo.astype(x.dtype))
+
+
+def gated_ffn_partial_in(cfg, wi, wo, x):
+    """Same as gated_ffn but wi/wo hold only an F-shard; the caller must
+    psum the result over the sharded axis."""
+    return gated_ffn(cfg, wi, wo, x)
+
+
+# ---------------------------------------------------------------------------
+# Capacity bucketing
+# ---------------------------------------------------------------------------
+
+def _bucket(dest, n_buckets: int, cap: int):
+    """dest: (N,) int32 in [0, n_buckets) or -1. Returns (slot (N,), keep (N,)):
+    rank of each entry within its bucket; keep = slot < cap and dest >= 0."""
+    onehot = (dest[:, None] == jnp.arange(n_buckets)[None, :])
+    rank = jnp.cumsum(onehot, axis=0) - 1                        # (N, nb)
+    slot = jnp.sum(jnp.where(onehot, rank, 0), axis=1)
+    keep = (dest >= 0) & (slot < cap)
+    return slot.astype(jnp.int32), keep
+
+
+def grouped_ffn(cfg: ModelConfig, wi, wo, xbuf, use_kernel: bool = False,
+                wi_scale=None, wo_scale=None):
+    """xbuf: (E, C, D); wi: (E, D, 2, F); wo: (E, F, D) -> (E, C, D).
+    int8 wi/wo + per-expert scales: the kernel path fuses the dequant into
+    its tile loop; the jnp path dequantizes inline."""
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.moe_ffn(xbuf, wi, wo, wi_scale, wo_scale, act=cfg.ffn_act)
+    if wi_scale is not None:
+        wi = wi.astype(xbuf.dtype) * wi_scale[:, None, None, None].astype(xbuf.dtype)
+        wo = wo.astype(xbuf.dtype) * wo_scale[:, None, None].astype(xbuf.dtype)
+    h = jnp.einsum("ecd,edgf->ecgf", xbuf, wi.astype(xbuf.dtype))
+    y = act_fn(cfg.ffn_act)(h[..., 0, :]) * h[..., 1, :]
+    return jnp.einsum("ecf,efd->ecd", y, wo.astype(xbuf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense (oracle) path
+# ---------------------------------------------------------------------------
+
+def moe_dense(cfg: ModelConfig, p: Dict, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, D). Returns (out (T,D), aux_loss)."""
+    w, idx, aux = route(cfg, p["router"], x)
+    wi_all, wo_all = expert_weights(p, x.dtype)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for e in range(cfg.num_experts):
+        y = gated_ffn(cfg, wi_all[e], wo_all[e], x)
+        we = jnp.sum(jnp.where(idx == e, w, 0.0), axis=-1)      # (T,)
+        out = out + y.astype(jnp.float32) * we[:, None]
+    out = out.astype(x.dtype)
+    if cfg.num_shared_experts:
+        out = out + gated_ffn(cfg, p["shared"]["wi"], p["shared"]["wo"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Single-shard grouped path
+# ---------------------------------------------------------------------------
+
+def moe_grouped(cfg: ModelConfig, p: Dict, x, *, capacity_factor=None,
+                use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+    T, D = x.shape
+    NE, K = cfg.num_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(1, int(T * K * cf / NE + 0.999))
+
+    w, idx, aux = route(cfg, p["router"], x)
+    flat_e = idx.reshape(-1)                                     # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_w = w.reshape(-1)
+    slot, keep = _bucket(flat_e, NE, cap)
+    e_safe = jnp.where(keep, flat_e, 0)
+    s_safe = jnp.where(keep, slot, cap - 1)
+
+    xbuf = jnp.zeros((NE, cap, D), x.dtype)
+    xbuf = xbuf.at[e_safe, s_safe].add(
+        jnp.where(keep[:, None], x[flat_t], 0).astype(x.dtype))
+    ybuf = grouped_ffn(cfg, p["wi"], p["wo"], xbuf, use_kernel,
+                       p.get("wi_scale"), p.get("wo_scale"))
+    y = ybuf[e_safe, s_safe]                                     # (T*K, D)
+    y = jnp.where(keep[:, None], y, 0) * flat_w[:, None].astype(x.dtype)
+    out = jnp.zeros_like(x).at[flat_t].add(y)
+    if cfg.num_shared_experts:
+        out = out + gated_ffn(cfg, p["shared"]["wi"], p["shared"]["wo"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel bodies (to be wrapped in shard_map by distributed.sharding)
+# ---------------------------------------------------------------------------
+
+def _combined_axis_index(axis_names):
+    idx = jnp.int32(0)
+    for a in axis_names:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _combined_axis_size(axis_names):
+    m = 1
+    for a in axis_names:
+        m *= jax.lax.axis_size(a)
+    return m
+
+
+def moe_ep_psum_local(cfg: ModelConfig, p_local: Dict, x, *, expert_axes,
+                      capacity_factor=None, use_kernel: bool = False,
+                      shared_sharded: bool = False, ffn_axes=()):
+    """Tokens replicated over expert_axes (+ffn_axes); p_local holds the
+    local expert slice wi (E_loc, D, 2, F_loc), wo (E_loc, F_loc, D);
+    router replicated.  With ffn_axes set, each expert's FFN dim is also
+    sharded (2D stationary weights) and the output psum covers both axis
+    groups — decode then moves only (T, D)-sized activations while every
+    weight stays resident on its shard.  x: (T, D)."""
+    T, D = x.shape
+    NE, K = cfg.num_experts, cfg.top_k
+    M = _combined_axis_size(expert_axes)
+    E_loc = NE // M
+    my = _combined_axis_index(expert_axes)
+    cf = capacity_factor or cfg.capacity_factor
+    cap_e = max(1, int(T * K * cf / NE + 0.999))
+
+    w, idx, aux = route(cfg, p_local["router"], x)
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_w = w.reshape(-1)
+    local_e = flat_e - my * E_loc
+    mine = (local_e >= 0) & (local_e < E_loc)
+    dest = jnp.where(mine, local_e, -1)
+    slot, keep = _bucket(dest, E_loc, cap_e)
+    e_safe = jnp.where(keep, dest, 0)
+    s_safe = jnp.where(keep, slot, cap_e - 1)
+
+    xbuf = jnp.zeros((E_loc, cap_e, D), x.dtype).at[e_safe, s_safe].add(
+        jnp.where(keep[:, None], x[flat_t], 0).astype(x.dtype))
+    ybuf = grouped_ffn(cfg, p_local["wi"], p_local["wo"], xbuf, use_kernel,
+                       p_local.get("wi_scale"), p_local.get("wo_scale"))
+    y = jnp.where(keep[:, None], ybuf[e_safe, s_safe], 0)
+    y = y * flat_w[:, None].astype(x.dtype)
+    out = jnp.zeros_like(x).at[flat_t].add(y)
+    reduce_axes = tuple(expert_axes) + tuple(ffn_axes)
+    Mr = _combined_axis_size(reduce_axes)
+    if cfg.num_shared_experts:
+        sh = gated_ffn(cfg, p_local["shared"]["wi"], p_local["shared"]["wo"], x)
+        if shared_sharded or ffn_axes:
+            # partial-F contribution folds into the psum, but it is
+            # replicated across expert_axes — pre-divide by that factor
+            out = out + sh / (M if ffn_axes else 1)
+        else:
+            out = out + sh / Mr                   # fully replicated
+    out = jax.lax.psum(out, reduce_axes)
+    return out, aux
+
+
+def moe_ep_a2a_local(cfg: ModelConfig, p_local: Dict, x, *, expert_axes,
+                     capacity_factor=None, use_kernel: bool = False,
+                     shared_sharded: bool = False):
+    """Tokens *sharded* over expert_axes (x is the local token slice).
+    Exchanges routed tokens via all_to_all.  x: (T_loc, D)."""
+    T, D = x.shape
+    NE, K = cfg.num_experts, cfg.top_k
+    M = _combined_axis_size(expert_axes)
+    E_loc = NE // M
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(1, int(T * K * cf / M + 0.999))            # per src->dst lane
+    cap_e = max(1, int(M * cap * cf / E_loc + 0.999))    # per local expert
+
+    w, idx, aux = route(cfg, p_local["router"], x)
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_w = w.reshape(-1)
+    dest = flat_e // E_loc
+    slot, keep = _bucket(dest, M, cap)
+    d_safe = jnp.where(keep, dest, 0)
+    s_safe = jnp.where(keep, slot, cap - 1)
+
+    send_x = jnp.zeros((M, cap, D), x.dtype).at[d_safe, s_safe].add(
+        jnp.where(keep[:, None], x[flat_t], 0).astype(x.dtype))
+    send_le = jnp.full((M, cap), -1, jnp.int32).at[d_safe, s_safe].max(
+        jnp.where(keep, (flat_e % E_loc).astype(jnp.int32), -1))
+
+    recv_x = jax.lax.all_to_all(send_x, expert_axes, 0, 0, tiled=True)
+    recv_le = jax.lax.all_to_all(send_le, expert_axes, 0, 0, tiled=True)
+
+    rx = recv_x.reshape(M * cap, D)
+    rle = recv_le.reshape(M * cap)
+    slot2, keep2 = _bucket(rle, E_loc, cap_e)
+    e2 = jnp.where(keep2, rle, 0)
+    s2 = jnp.where(keep2, slot2, cap_e - 1)
+    xbuf = jnp.zeros((E_loc, cap_e, D), x.dtype).at[e2, s2].add(
+        jnp.where(keep2[:, None], rx, 0))
+    ybuf = grouped_ffn(cfg, p_local["wi"], p_local["wo"], xbuf, use_kernel,
+                       p_local.get("wi_scale"), p_local.get("wo_scale"))
+    ry = jnp.zeros((M * cap, D), x.dtype).at[jnp.arange(M * cap)].set(
+        jnp.where(keep2[:, None], ybuf[e2, s2], 0)).reshape(M, cap, D)
+
+    back = jax.lax.all_to_all(ry, expert_axes, 0, 0, tiled=True)
+    y = back[d_safe, s_safe]
+    y = jnp.where(keep[:, None], y, 0) * flat_w[:, None].astype(x.dtype)
+    out = jnp.zeros_like(x).at[flat_t].add(y)
+    if cfg.num_shared_experts:
+        sh = gated_ffn(cfg, p_local["shared"]["wi"], p_local["shared"]["wo"], x)
+        if shared_sharded:
+            sh = jax.lax.psum(sh, expert_axes)
+        out = out + sh
+    aux = jax.lax.pmean(aux, expert_axes)
+    return out, aux
+
+
+def moe_apply(cfg: ModelConfig, p: Dict, x3, policy=None) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch on the execution policy. x3: (B, S, D)."""
+    B, S, D = x3.shape
+    if policy is not None and policy.moe_fn is not None:
+        out, aux = policy.moe_fn(cfg, p, x3)
+        return out, aux
+    x = x3.reshape(B * S, D)
+    if policy is not None and policy.moe_impl == "grouped":
+        out, aux = moe_grouped(cfg, p, x, use_kernel=policy.use_kernels)
+    else:
+        out, aux = moe_dense(cfg, p, x)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,323 @@
+"""Parameter definition system.
+
+A model's parameters are described as a nested dict of `ParamDef`s, each
+carrying a shape, a tuple of *logical axis names* (one per dim), and an init
+recipe.  From this single source of truth we derive:
+
+  * `init_params`      — materialized, randomly initialized pytree
+  * `abstract_params`  — jax.ShapeDtypeStruct pytree (dry-run, no allocation)
+  * `param_axes`       — logical-axes pytree (consumed by distributed.sharding)
+  * `count_params`     — exact parameter counts (total / active-per-token)
+
+Stacking: repeated layers are stored stacked along a leading "layers" axis —
+one stack per *position in the repeating period* — so the forward pass can
+`lax.scan` over periods and the HLO stays O(period), not O(depth).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN_MLA, LayerSpec, ModelConfig
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis names (None = never shard)
+    init: str = "normal"                # normal | zeros | ones | embed
+    fan_in: int = 0                     # for scaled-normal init
+    dtype: str = ""                     # "" = model dtype; e.g. "int8"
+
+
+def _lin(d_in, d_out, ax_in, ax_out, stack=0) -> ParamDef:
+    shape = (d_in, d_out)
+    axes = (ax_in, ax_out)
+    if stack:
+        shape = (stack,) + shape
+        axes = ("layers",) + axes
+    return ParamDef(shape, axes, "normal", fan_in=d_in)
+
+
+def _vec(d, ax, init="zeros", stack=0) -> ParamDef:
+    shape, axes = (d,), (ax,)
+    if stack:
+        shape, axes = (stack,) + shape, ("layers",) + axes
+    return ParamDef(shape, axes, init)
+
+
+# ---------------------------------------------------------------------------
+# Per-block definitions
+# ---------------------------------------------------------------------------
+
+def _norm_def(cfg: ModelConfig, stack: int) -> Dict[str, ParamDef]:
+    if cfg.norm == "rmsnorm":
+        init = "zeros" if cfg.scale_embeddings else "ones"  # gemma stores w, uses 1+w
+        return {"scale": _vec(cfg.d_model, "embed_nr", init, stack)}
+    if cfg.norm == "layernorm":
+        return {"scale": _vec(cfg.d_model, "embed_nr", "ones", stack),
+                "bias": _vec(cfg.d_model, "embed_nr", "zeros", stack)}
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def _attn_defs(cfg: ModelConfig, spec: LayerSpec, stack: int) -> Dict[str, ParamDef]:
+    E, Dh = cfg.d_model, cfg.head_dim
+    if spec.attn == ATTN_MLA:
+        qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        d = {
+            "wdq": _lin(E, cfg.q_lora_rank, "embed", "lora", stack),
+            "q_norm": _vec(cfg.q_lora_rank, None, "ones", stack),
+            "wuq": _lin(cfg.q_lora_rank, cfg.num_heads * qk_dim, "lora", "heads", stack),
+            "wdkv": _lin(E, cfg.kv_lora_rank, "embed", "lora", stack),
+            "kv_norm": _vec(cfg.kv_lora_rank, None, "ones", stack),
+            "wkr": _lin(E, cfg.qk_rope_head_dim, "embed", None, stack),
+            "wuk": _lin(cfg.kv_lora_rank, cfg.num_heads * cfg.qk_nope_head_dim,
+                        "lora", "heads", stack),
+            "wuv": _lin(cfg.kv_lora_rank, cfg.num_heads * cfg.v_head_dim,
+                        "lora", "heads", stack),
+            "wo": _lin(cfg.num_heads * cfg.v_head_dim, E, "heads", "embed", stack),
+        }
+        return d
+    d = {
+        "wq": _lin(E, cfg.num_heads * Dh, "embed", "heads", stack),
+        "wk": _lin(E, cfg.num_kv_heads * Dh, "embed", "kv_heads", stack),
+        "wv": _lin(E, cfg.num_kv_heads * Dh, "embed", "kv_heads", stack),
+        "wo": _lin(cfg.num_heads * Dh, E, "heads", "embed", stack),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = _vec(cfg.num_heads * Dh, "heads", "zeros", stack)
+        d["bk"] = _vec(cfg.num_kv_heads * Dh, "kv_heads", "zeros", stack)
+        d["bv"] = _vec(cfg.num_kv_heads * Dh, "kv_heads", "zeros", stack)
+    return d
+
+
+def _ffn_defs(cfg: ModelConfig, d_ff: int, stack: int) -> Dict[str, ParamDef]:
+    E = cfg.d_model
+    if cfg.ffn_act == "gelu_mlp":            # plain MLP (whisper)
+        return {"wi": _lin(E, d_ff, "embed", "ffn", stack),
+                "bi": _vec(d_ff, "ffn", "zeros", stack),
+                "wo": _lin(d_ff, E, "ffn", "embed", stack),
+                "bo": _vec(E, None, "zeros", stack)}
+    # gated (SwiGLU / GeGLU): gate+up stored as (E, 2, F) so 'ffn' sharding
+    # keeps the two halves aligned on every shard
+    shape_wi, axes_wi = (E, 2, d_ff), ("embed", None, "ffn")
+    shape_wo, axes_wo = (d_ff, E), ("ffn", "embed")
+    if stack:
+        shape_wi, axes_wi = (stack,) + shape_wi, ("layers",) + axes_wi
+        shape_wo, axes_wo = (stack,) + shape_wo, ("layers",) + axes_wo
+    return {"wi": ParamDef(shape_wi, axes_wi, "normal", fan_in=E),
+            "wo": ParamDef(shape_wo, axes_wo, "normal", fan_in=d_ff)}
+
+
+def _moe_defs(cfg: ModelConfig, stack: int) -> Dict[str, ParamDef]:
+    E, F, NE = cfg.d_model, cfg.d_ff, cfg.num_experts
+    qdt = cfg.expert_dtype            # "" or "int8" (weight-only quant)
+    shape_wi, axes_wi = (NE, E, 2, F), ("experts", "embed", None, "effn")
+    shape_wo, axes_wo = (NE, F, E), ("experts", "effn", "embed")
+    if stack:
+        shape_wi, axes_wi = (stack,) + shape_wi, ("layers",) + axes_wi
+        shape_wo, axes_wo = (stack,) + shape_wo, ("layers",) + axes_wo
+    d = {
+        "router": _lin(E, NE, "embed", None, stack),
+        "wi": ParamDef(shape_wi, axes_wi, "normal", fan_in=E, dtype=qdt),
+        "wo": ParamDef(shape_wo, axes_wo, "normal", fan_in=F, dtype=qdt),
+    }
+    if qdt == "int8":                 # per-expert dequant scales
+        sshape = ((stack, NE) if stack else (NE,))
+        saxes = (("layers", "experts") if stack else ("experts",))
+        d["wi_scale"] = ParamDef(sshape, saxes, "qscale", fan_in=E,
+                                 dtype="float32")
+        d["wo_scale"] = ParamDef(sshape, saxes, "qscale", fan_in=F,
+                                 dtype="float32")
+    if cfg.num_shared_experts:
+        d["shared"] = _ffn_defs(cfg, F * cfg.num_shared_experts, stack)
+    return d
+
+
+def _mamba_defs(cfg: ModelConfig, stack: int) -> Dict[str, ParamDef]:
+    """Projections are stored per segment (z / x / B / C / dt) rather than
+    as one fused in_proj so the inner (d_in) axis can shard over the model
+    axis without crossing segment boundaries; B/C (shared across heads,
+    single group) stay replicated."""
+    E = cfg.d_model
+    d_in = cfg.ssm_expand * E
+    nh = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    cw = cfg.ssm_conv_width
+    return {
+        "wz": _lin(E, d_in, "embed", "ssm_inner", stack),
+        "wx": _lin(E, d_in, "embed", "ssm_inner", stack),
+        "wB": _lin(E, N, "embed", None, stack),
+        "wC": _lin(E, N, "embed", None, stack),
+        "wdt": _lin(E, nh, "embed", "ssm_heads", stack),
+        "conv_x": ParamDef((stack, cw, d_in) if stack else (cw, d_in),
+                           (("layers",) if stack else ()) + (None, "ssm_inner"),
+                           "normal", fan_in=cw),
+        "conv_bx": _vec(d_in, "ssm_inner", "zeros", stack),
+        "conv_B": ParamDef((stack, cw, N) if stack else (cw, N),
+                           (("layers",) if stack else ()) + (None, None),
+                           "normal", fan_in=cw),
+        "conv_bB": _vec(N, None, "zeros", stack),
+        "conv_C": ParamDef((stack, cw, N) if stack else (cw, N),
+                           (("layers",) if stack else ()) + (None, None),
+                           "normal", fan_in=cw),
+        "conv_bC": _vec(N, None, "zeros", stack),
+        "a_log": _vec(nh, "ssm_heads", "ones", stack),
+        "d_skip": _vec(nh, "ssm_heads", "ones", stack),
+        "dt_bias": _vec(nh, "ssm_heads", "zeros", stack),
+        "norm": _vec(d_in, "ssm_inner", "ones", stack),
+        "out_proj": _lin(d_in, E, "ssm_inner", "embed", stack),
+    }
+
+
+def _block_defs(cfg: ModelConfig, spec: LayerSpec, stack: int,
+                decoder: bool = True) -> Dict:
+    d: Dict = {}
+    if spec.kind == "mamba":
+        d["mamba"] = _mamba_defs(cfg, stack)
+        d["mamba_norm"] = _norm_def(cfg, stack)
+    else:
+        d["attn"] = _attn_defs(cfg, spec, stack)
+        d["attn_norm"] = _norm_def(cfg, stack)
+        if cfg.post_block_norm:
+            d["post_attn_norm"] = _norm_def(cfg, stack)
+    if spec.cross_attn and decoder:
+        d["xattn"] = _attn_defs(cfg, LayerSpec(), stack)
+        d["xattn_norm"] = _norm_def(cfg, stack)
+    if spec.ffn:
+        if spec.moe:
+            d["moe"] = _moe_defs(cfg, stack)
+        else:
+            d["ffn"] = _ffn_defs(cfg, cfg.dense_d_ff or cfg.d_ff, stack)
+        d["ffn_norm"] = _norm_def(cfg, stack)
+        if cfg.post_block_norm:
+            d["post_ffn_norm"] = _norm_def(cfg, stack)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Whole-model definitions
+# ---------------------------------------------------------------------------
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    defs: Dict = {
+        "embed": {"tokens": ParamDef((cfg.vocab_size, cfg.d_model),
+                                     ("vocab", "embed"), "embed",
+                                     fan_in=cfg.d_model)},
+        "final_norm": _norm_def(cfg, 0),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = _lin(cfg.d_model, cfg.vocab_size, "embed", "vocab")
+
+    if cfg.prologue:
+        # group prologue layers (all-identical specs stack together)
+        defs["prologue"] = {"p0": _block_defs(cfg, cfg.prologue[0],
+                                              len(cfg.prologue))}
+    blocks = {}
+    for i, spec in enumerate(cfg.period):
+        blocks[f"p{i}"] = _block_defs(cfg, spec, cfg.num_periods)
+    defs["blocks"] = blocks
+
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec(cross_attn=False)
+        defs["encoder"] = {
+            "blocks": {"p0": _block_defs(cfg, enc_spec, cfg.encoder_layers,
+                                         decoder=False)},
+            "final_norm": _norm_def(cfg, 0),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Derivations from defs
+# ---------------------------------------------------------------------------
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    if _is_def(defs):
+        return fn(defs)
+    return {k: tree_map_defs(fn, v) for k, v in defs.items()}
+
+
+def abstract_params(cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, jnp.dtype(d.dtype) if d.dtype else dtype),
+        param_defs(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return tree_map_defs(lambda d: d.axes, param_defs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    defs = param_defs(cfg)
+    leaves = []
+
+    def collect(d, path):
+        if _is_def(d):
+            leaves.append((path, d))
+        else:
+            for k in sorted(d):
+                collect(d[k], path + (k,))
+
+    collect(defs, ())
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+
+    out: Dict = {}
+    for (path, d), k in zip(leaves, keys):
+        ldt = jnp.dtype(d.dtype) if d.dtype else dtype
+        if d.init == "zeros":
+            val = jnp.zeros(d.shape, ldt)
+        elif d.init == "ones":
+            val = jnp.ones(d.shape, ldt)
+        elif d.init == "qscale":
+            # dequant scale matched to the int8 init below: w ≈ q * scale
+            std = 1.0 / math.sqrt(max(d.fan_in, 1))
+            val = jnp.full(d.shape, std / 48.0, jnp.float32)
+        elif d.dtype == "int8":
+            # weight-only quantized experts: ~48 quant levels per std
+            val = jnp.clip(jnp.round(
+                jax.random.normal(k, d.shape, jnp.float32) * 48.0),
+                -127, 127).astype(jnp.int8)
+        else:
+            std = (1.0 / math.sqrt(max(d.fan_in, 1))) if d.fan_in else 0.02
+            val = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(ldt)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = val
+    # mamba a_log: init to log(uniform[1,16]) per mamba2 reference
+    return out
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False,
+                 include_embed: bool = True) -> int:
+    total = 0
+
+    def visit(d, path):
+        nonlocal total
+        if _is_def(d):
+            n = int(np.prod(d.shape))
+            is_embed = "vocab" in (d.axes or ())
+            if is_embed and not include_embed:
+                return
+            if active_only and "experts" in (d.axes or ()):
+                n = n * cfg.top_k // cfg.num_experts
+            total += n
+        else:
+            for k, v in d.items():
+                visit(v, path + (k,))
+
+    visit(param_defs(cfg), ())
+    return total

@@ -1,0 +1,140 @@
+"""Checkpointing (orbax is unavailable offline — built from scratch).
+
+Layout: <dir>/step_<N>/
+  manifest.json     — leaf paths, shapes, dtypes, step, extra metadata
+  <leaf-path>.npy   — one file per pytree leaf (host-gathered)
+
+Guarantees:
+  * atomic:  written to step_<N>.tmp then os.rename'd — a crash mid-write
+    never corrupts the latest checkpoint;
+  * async:   `save_async` snapshots to host memory synchronously (cheap)
+    and writes on a background thread — training continues;
+  * elastic: `restore` takes a target mesh/shardings and device_puts each
+    leaf with the NEW sharding, so a checkpoint taken on one mesh resumes
+    on any other (runtime/elastic.py wraps this for re-scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out += _flatten(tree[k], prefix + (str(k),))
+        return out
+    return [(prefix, tree)]
+
+
+def _unflatten(items):
+    root: Dict = {}
+    for path, val in items:
+        node = root
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = val
+    return root
+
+
+def _leaf_file(path: Tuple[str, ...]) -> str:
+    return "__".join(path) + ".npy"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Dict, extra: Optional[Dict] = None):
+        self.wait()                      # never race a pending async writer
+        snap = [(p, np.asarray(jax.device_get(v))) for p, v in _flatten(tree)]
+        self._write(step, snap, extra or {})
+
+    def save_async(self, step: int, tree: Dict, extra: Optional[Dict] = None):
+        self.wait()                      # one writer at a time
+        snap = [(p, np.asarray(jax.device_get(v))) for p, v in _flatten(tree)]
+        self._thread = threading.Thread(
+            target=self._write, args=(step, snap, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, snap: List, extra: Dict):
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "extra": extra, "leaves": []}
+        for path, arr in snap:
+            fn = _leaf_file(path)
+            dtype_name = str(arr.dtype)
+            if arr.dtype.kind not in "fiub":      # ml_dtypes (bf16, fp8...)
+                arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                               else np.uint8)
+            np.save(tmp / fn, arr)
+            manifest["leaves"].append({"path": list(path), "file": fn,
+                                       "shape": list(arr.shape),
+                                       "dtype": dtype_name})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in self.dir.glob("step_*"):
+            if d.is_dir() and not d.name.endswith(".tmp") and \
+                    (d / "manifest.json").exists():
+                out.append(int(d.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings=None
+                ) -> Tuple[int, Dict, Dict]:
+        """Returns (step, tree, extra).  `shardings`: optional pytree of
+        jax.sharding.Sharding mirroring the checkpointed tree — leaves are
+        device_put with it (elastic re-shard)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        shard_flat = (_flatten(shardings) if shardings is not None else None)
+        items = []
+        for i, leaf in enumerate(manifest["leaves"]):
+            arr = np.load(d / leaf["file"])
+            want = leaf["dtype"]
+            if str(arr.dtype) != want:            # restore ml_dtypes views
+                import ml_dtypes
+                arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
+            if shard_flat is not None:
+                arr = jax.device_put(arr, shard_flat[i][1])
+            items.append((tuple(leaf["path"]), arr))
+        return step, _unflatten(items), manifest["extra"]

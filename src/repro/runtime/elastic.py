@@ -1,0 +1,44 @@
+"""Elastic re-scaling: resume any checkpoint on a different mesh.
+
+The checkpoint holds host numpy leaves; re-scaling is re-sharding: build
+the sharding plan for the NEW mesh and device_put every leaf with the new
+NamedSharding.  Works for grow (16→256 chips) and shrink; the only
+requirement is that the new mesh's axis sizes divide the sharded dims
+(sharding.spec_for_axes degrades to replication otherwise, so restore
+never fails — it just uses more memory per chip).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def reshard_tree(tree: Dict, spec_tree, mesh) -> Dict:
+    def put(x, spec):
+        return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, spec_tree,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+def restore_elastic(ckpt: CheckpointManager, cfg: ModelConfig,
+                    shape: ShapeConfig, mesh, step: Optional[int] = None
+                    ) -> Tuple[int, Dict, Dict, SH.Plan]:
+    """Restore (params[, opt_state]) onto `mesh`, whatever mesh wrote it."""
+    plan = SH.make_plan(cfg, shape, mesh)
+    step_, tree, extra = ckpt.restore(step=step)
+    out: Dict = {}
+    if "params" in tree:
+        out["params"] = reshard_tree(tree["params"], plan.param_specs, mesh)
+    if "opt_state" in tree:
+        p = jax.sharding.PartitionSpec()
+        o_specs = {"mu": plan.param_specs, "nu": plan.param_specs, "step": p}
+        out["opt_state"] = reshard_tree(tree["opt_state"], o_specs, mesh)
+    for k in tree:
+        if k not in out:
+            out[k] = tree[k]
+    return step_, out, extra, plan

@@ -1,0 +1,72 @@
+"""Watchdog: heartbeat + straggler detection for the training loop.
+
+At 1000+ nodes the common failure modes are (a) a host that dies — caught
+by the missed-heartbeat timeout and answered with restart-from-checkpoint
+(the trainer's main loop), and (b) a straggler step — caught by the
+per-step deadline (EWMA × factor) and answered per policy:
+
+  "log"   — record and continue (default),
+  "skip"  — abandon the step's data (re-dispatched next step),
+  "abort" — raise, letting the launcher restart from the last checkpoint.
+
+On a real multi-host deployment the heartbeat file lives on shared
+storage and each host monitors its peers; in this single-process harness
+the same object guards the local step loop (and is unit-tested as such).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+
+class StragglerError(RuntimeError):
+    pass
+
+
+@dataclass
+class Watchdog:
+    deadline_factor: float = 3.0
+    min_deadline_s: float = 1.0
+    policy: str = "log"                  # log | skip | abort
+    heartbeat_path: Optional[str] = None
+    ewma: float = 0.0
+    alpha: float = 0.1
+    slow_steps: int = 0
+    _t0: float = field(default=0.0, repr=False)
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+        self.beat()
+
+    def step_end(self) -> bool:
+        """Returns True if the step was within deadline."""
+        dt = time.monotonic() - self._t0
+        if self.ewma == 0.0:
+            self.ewma = dt
+        deadline = max(self.min_deadline_s, self.deadline_factor * self.ewma)
+        ok = dt <= deadline
+        if not ok:
+            self.slow_steps += 1
+            if self.policy == "abort":
+                raise StragglerError(
+                    f"step took {dt:.2f}s > deadline {deadline:.2f}s")
+        # EWMA updated with a clipped sample so one straggler doesn't
+        # poison the deadline
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * min(dt, deadline)
+        return ok
+
+    def beat(self):
+        if self.heartbeat_path:
+            Path(self.heartbeat_path).write_text(
+                json.dumps({"t": time.time()}))
+
+    @staticmethod
+    def peer_alive(heartbeat_path: str, timeout_s: float = 60.0) -> bool:
+        p = Path(heartbeat_path)
+        if not p.exists():
+            return False
+        t = json.loads(p.read_text())["t"]
+        return (time.time() - t) < timeout_s

@@ -1,0 +1,155 @@
+"""Offloading-aware batch-inference engine (the paper's system, §4).
+
+Execution structure per the paper:
+  * requests → Algorithm 2 → `num_ubs` micro-batches of μ rows each
+    (Scheduler);
+  * zig-zag order: prefill on the accelerator per micro-batch, KV kept in
+    the (ring) cache;
+  * decode: micro-batches rotate in CGOPipe launch order — while μ-batch j
+    runs its accelerator half, batch j+1's attention inputs and the next
+    layer's weight *pages* are in flight (on TPU the pages live in host
+    memory and stream; on this CPU container the same jitted step consumes
+    the page pool in-scan, and the overlap schedule itself is validated by
+    core.cgopipe's simulator);
+  * per-row positions & slot-position masks make right-padded prompts
+    exact (no attention to pad slots).
+
+`paged=True` routes weights through core.paging (pack_block_groups) —
+the 2×W_L double-buffer lives in XLA's scan pipelining on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import paging
+from repro.core.policy import Policy
+from repro.models import kvcache
+from repro.models.model import ExecPolicy, forward, unembed
+from repro.serving.sampling import sample
+from repro.serving.scheduler import Scheduler, ServeRequest
+
+
+@dataclass
+class EngineConfig:
+    ubatch: int = 4                   # μ rows per micro-batch
+    num_ubs: int = 2                  # micro-batches in rotation
+    max_seq: int = 128
+    temperature: float = 0.0
+    paged: bool = False               # paged-weight streaming path
+    page_elems: int = 1 << 16
+    eos_id: int = 1
+    seed: int = 0
+
+
+class _ActiveBatch:
+    def __init__(self, requests: List[ServeRequest], cache, last_tokens):
+        self.requests = requests
+        self.cache = cache
+        self.last_tokens = last_tokens       # (μ,1) next input token
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 policy: Optional[ExecPolicy] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.policy = policy
+        self.scheduler = Scheduler(
+            ubatch=ecfg.ubatch, num_ubs=ecfg.num_ubs,
+            cache_tokens=ecfg.max_seq * ecfg.ubatch, gen_len=32)
+        self.active: List[_ActiveBatch] = []
+        self.key = jax.random.key(ecfg.seed)
+        self.paged_blocks = None
+        if ecfg.paged:
+            self.paged_blocks = paging.pack_block_groups(
+                params["blocks"], ecfg.page_elems)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
+        self.steps = 0
+        self.tokens_out = 0
+
+    # -------------------------------------------------------- jitted fns
+    def _prefill_fn(self, params, tokens, cache, lens):
+        out = forward(self.cfg, params, tokens, cache=cache, mode="prefill",
+                      policy=self.policy, paged_blocks=self.paged_blocks)
+        cache = out["cache"]
+        cache["pos"] = lens.astype(jnp.int32)       # per-row true lengths
+        idx = jnp.maximum(lens - 1, 0)
+        hidden = jnp.take_along_axis(
+            out["hidden"], idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = unembed(self.cfg, params, hidden)
+        return logits, cache
+
+    def _decode_fn(self, params, cache, tokens, key):
+        out = forward(self.cfg, params, tokens, cache=cache, mode="decode",
+                      policy=self.policy, paged_blocks=self.paged_blocks)
+        logits = unembed(self.cfg, params, out["hidden"][:, -1])
+        tok = sample(logits, key, temperature=self.ecfg.temperature)
+        return tok, out["cache"]
+
+    # ----------------------------------------------------------- public
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        return self.scheduler.submit(np.asarray(prompt, np.int32),
+                                     max_new_tokens)
+
+    def _admit(self):
+        for group in self.scheduler.admit():
+            mu = self.ecfg.ubatch
+            # bucket the padded prompt length so prefill compiles once per
+            # bucket, not once per distinct length
+            S = max(r.input_len for r in group)
+            S = min(-(-S // 16) * 16, self.ecfg.max_seq)
+            toks = np.zeros((mu, S), np.int32)
+            lens = np.zeros((mu,), np.int32)
+            for i, r in enumerate(group):
+                toks[i, :r.input_len] = r.prompt
+                lens[i] = r.input_len
+            # rows beyond len(group) are padding rows (len 0 → masked)
+            cache = kvcache.init_cache(self.cfg, mu, self.ecfg.max_seq)
+            logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                          cache, jnp.asarray(lens))
+            self.key, k = jax.random.split(self.key)
+            first = sample(logits, k, temperature=self.ecfg.temperature)
+            first = np.asarray(first)
+            for i, r in enumerate(group):
+                r.generated.append(int(first[i]))
+            nxt = jnp.asarray(first[:, None])
+            self.active.append(_ActiveBatch(list(group), cache, nxt))
+
+    def step(self) -> bool:
+        """One engine tick: admit new work, then one decode step for every
+        active micro-batch in CGOPipe rotation order.  Returns True if any
+        work was done."""
+        self._admit()
+        if not self.active:
+            return False
+        for ab in list(self.active):      # rotation: ub_0, ub_1, ... (Alg. 1)
+            self.key, k = jax.random.split(self.key)
+            tok, ab.cache = self._decode(self.params, ab.cache,
+                                         ab.last_tokens, k)
+            tok_np = np.asarray(tok)
+            for i, r in enumerate(ab.requests):
+                if not r.done:
+                    r.generated.append(int(tok_np[i]))
+                    self.tokens_out += 1
+                    if (len(r.generated) >= r.max_new_tokens
+                            or tok_np[i] == self.ecfg.eos_id):
+                        r.done = True
+            ab.last_tokens = jnp.asarray(tok_np[:, None])
+            if all(r.done for r in ab.requests):
+                self.active.remove(ab)
+        self.steps += 1
+        return True
+
+    def run_until_idle(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        while self.step() and self.steps < max_steps:
+            pass
+        return {rid: r.generated for rid, r in self.scheduler.requests.items()}

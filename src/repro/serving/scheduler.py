@@ -1,0 +1,65 @@
+"""Request scheduler: queue + admission via the paper's Algorithm 2.
+
+Turns a stream of variable-length requests into μ-sized micro-batches with
+balanced token counts under the KV-cache budget, defers what doesn't fit,
+and tracks request lifecycle (queued → active → finished).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.batching import MicroBatch, Request, batch_requests
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray               # (len,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+    @property
+    def input_len(self) -> int:
+        return len(self.prompt)
+
+
+class Scheduler:
+    def __init__(self, *, ubatch: int, num_ubs: int, cache_tokens: int,
+                 gen_len: int):
+        self.ubatch = ubatch
+        self.num_ubs = num_ubs
+        self.cache_tokens = cache_tokens
+        self.gen_len = gen_len
+        self._rid = itertools.count()
+        self.queue: List[ServeRequest] = []
+        self.requests: Dict[int, ServeRequest] = {}
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        rid = next(self._rid)
+        req = ServeRequest(rid, np.asarray(prompt, np.int32), max_new_tokens)
+        self.queue.append(req)
+        self.requests[rid] = req
+        return rid
+
+    def admit(self) -> List[List[ServeRequest]]:
+        """Run Algorithm 2 over the current queue; returns micro-batches of
+        ServeRequests (≤ num_ubs batches of ≤ ubatch requests)."""
+        if not self.queue:
+            return []
+        algo_reqs = [Request(r.rid, r.input_len, r.max_new_tokens)
+                     for r in self.queue]
+        mbs, aborted = batch_requests(algo_reqs, self.num_ubs, self.ubatch,
+                                      self.gen_len, self.cache_tokens)
+        aborted_ids = {r.rid for r in aborted}
+        admitted: List[List[ServeRequest]] = []
+        for mb in mbs[:self.num_ubs]:
+            admitted.append([self.requests[r.rid] for r in mb.requests])
+        admitted_ids = {r.rid for g in admitted for r in g}
+        self.queue = [r for r in self.queue
+                      if r.rid in aborted_ids or r.rid not in admitted_ids]
+        return admitted

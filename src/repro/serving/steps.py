@@ -1,0 +1,59 @@
+"""Serving step functions: prefill and decode (serve_step).
+
+These are the functions the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` shapes, and the engine jits for real serving.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import ExecPolicy, forward, unembed
+
+
+def make_prefill_step(cfg: ModelConfig,
+                      policy: Optional[ExecPolicy] = None) -> Callable:
+    """(params, tokens, extras...) -> last-position logits.
+    The prefill_* dry-run shapes lower this without a cache (pure
+    prompt-processing throughput); the engine variant below fills one."""
+
+    def prefill_step(params, tokens, **extras):
+        out = forward(cfg, params, tokens, mode="train", policy=policy,
+                      **extras)
+        logits = unembed(cfg, params, out["hidden"][:, -1])
+        return logits
+
+    return prefill_step
+
+
+def make_prefill_fill_step(cfg: ModelConfig,
+                           policy: Optional[ExecPolicy] = None) -> Callable:
+    """Engine path: also writes the KV cache."""
+
+    def prefill_step(params, tokens, cache, **extras):
+        out = forward(cfg, params, tokens, cache=cache, mode="prefill",
+                      policy=policy, **extras)
+        logits = unembed(cfg, params, out["hidden"][:, -1])
+        return logits, out["cache"]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig,
+                    policy: Optional[ExecPolicy] = None) -> Callable:
+    """One decode step: (params, cache, tokens (B,1)) ->
+    (next_token (B,), logits (B,V), new_cache).  Greedy head; the engine
+    applies temperature sampling on the returned logits instead when
+    configured."""
+
+    def serve_step(params, cache, tokens):
+        out = forward(cfg, params, tokens, cache=cache, mode="decode",
+                      policy=policy)
+        logits = unembed(cfg, params, out["hidden"][:, -1])
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, out["cache"]
+
+    return serve_step

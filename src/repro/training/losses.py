@@ -1,0 +1,58 @@
+"""Losses.  Cross-entropy is computed in sequence chunks under
+jax.checkpoint so the (B, S, vocab) float32 logits are never materialized
+at once — essential for vocab=256k × seq=4k training memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import unembed
+
+
+def xent(logits, targets, mask):
+    """logits (T,V) f32; targets (T,) i32; mask (T,) f32.
+    Returns (sum_loss, sum_mask)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def chunked_lm_loss(cfg: ModelConfig, params, hidden, targets, *,
+                    mask=None, chunk: int = 512):
+    """hidden (B,S,E); targets (B,S).  Mean NLL over mask (defaults to
+    targets >= 0, with the vision prefix masked for VLMs)."""
+    B, S, E = hidden.shape
+    if mask is None:
+        mask = (targets >= 0)
+        if cfg.vision_tokens:
+            pos = jnp.arange(S)[None, :]
+            mask = mask & (pos >= cfg.vision_tokens)
+    mask = mask.astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+
+    nchunks = -(-S // chunk)
+    pad = nchunks * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = hidden.reshape(B, nchunks, chunk, E)
+    tc = tgt.reshape(B, nchunks, chunk)
+    mc = mask.reshape(B, nchunks, chunk)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, t, m = xs                           # (B,chunk,E) ...
+        logits = unembed(cfg, params, h)       # recomputed in backward
+        s, n = xent(logits.reshape(-1, logits.shape[-1]),
+                    t.reshape(-1), m.reshape(-1))
+        return (carry[0] + s, carry[1] + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0),
+         jnp.moveaxis(mc, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,84 @@
+"""AdamW (built from scratch — optax is not available offline).
+
+Moments inherit the parameter sharding (pjit keeps them distributed; with
+FSDP'd params this is ZeRO-equivalent).  `moment_dtype` lets very large
+models halve optimizer memory (bf16 moments), which the dry-run memory
+analysis exercises for deepseek-v3/jamba training.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+def init_opt_state(params, opt: OptConfig) -> Dict:
+    dt = jnp.dtype(opt.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(opt: OptConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(opt.warmup_steps, 1), 1.0)
+    return opt.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state: Dict, opt: OptConfig
+                  ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(opt, step)
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(opt.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        if opt.weight_decay:
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    new_state = {"mu": tdef.unflatten(new_mu), "nu": tdef.unflatten(new_nu),
+                 "step": step}
+    return tdef.unflatten(new_p), new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,81 @@
+"""Train step: forward → chunked LM loss (+ MoE aux) → backward → clip →
+AdamW.  Built as a closure so it can be jitted with explicit shardings by
+the launcher and lowered abstractly by the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import ExecPolicy, forward
+from repro.training.losses import chunked_lm_loss
+from repro.training.optimizer import OptConfig, apply_updates
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def make_loss_fn(cfg: ModelConfig, policy: Optional[ExecPolicy]) -> Callable:
+    def loss_fn(params, batch):
+        extras = {k: batch[k] for k in ("frames", "patches") if k in batch}
+        out = forward(cfg, params, batch["tokens"], mode="train",
+                      policy=policy, **extras)
+        lm = chunked_lm_loss(cfg, params, out["hidden"], batch["targets"])
+        aux = out["aux_loss"]
+        loss = lm + AUX_LOSS_WEIGHT * aux
+        return loss, {"lm_loss": lm, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig,
+                    policy: Optional[ExecPolicy] = None) -> Callable:
+    loss_fn = make_loss_fn(cfg, policy)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_params, new_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt)
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_microbatched_train_step(cfg: ModelConfig, opt: OptConfig,
+                                 policy: Optional[ExecPolicy],
+                                 num_micro: int) -> Callable:
+    """Gradient accumulation over `num_micro` micro-batches (scan), the
+    training analogue of the paper's μ: bounds activation memory while
+    keeping the weight-gather cost amortized over the full batch."""
+    loss_fn = make_loss_fn(cfg, policy)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        assert B % num_micro == 0
+        mb = B // num_micro
+
+        def split(x):
+            return x.reshape(num_micro, mb, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mbatch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / num_micro,
+                acc_g, grads)
+            return (acc_g, acc_l + loss / num_micro), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+        new_params, new_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt)
+        return new_params, new_state, {"loss": loss, **opt_metrics}
+
+    return train_step

@@ -1,0 +1,94 @@
+"""Training loop: data pipeline → (micro-batched) train step → metrics,
+with fault tolerance: auto-resume from the latest checkpoint, periodic
+async checkpoints, heartbeat + straggler watchdog.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.models.params import init_params
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.watchdog import Watchdog
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import (make_microbatched_train_step,
+                                       make_train_step)
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    num_micro: int = 1
+    seed: int = 0
+    log_every: int = 10
+    straggler_policy: str = "log"
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 opt: Optional[OptConfig] = None, policy=None,
+                 step_fn: Optional[Callable] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.opt = opt or OptConfig(warmup_steps=10)
+        if step_fn is None:
+            if tcfg.num_micro > 1:
+                step_fn = make_microbatched_train_step(
+                    cfg, self.opt, policy, tcfg.num_micro)
+            else:
+                step_fn = make_train_step(cfg, self.opt, policy)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+        self.watchdog = Watchdog(policy=tcfg.straggler_policy)
+        self.data = DataPipeline(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+            batch_size=tcfg.batch_size, seed=tcfg.seed))
+        self.metrics_log: list = []
+
+        # init or resume -------------------------------------------------
+        self.step = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self.step, tree, extra = self.ckpt.restore()
+            self.params, self.opt_state = tree["params"], tree["opt_state"]
+            self.data.skip(extra.get("data_step", self.step))
+        else:
+            self.params = init_params(cfg, jax.random.key(tcfg.seed))
+            self.opt_state = init_opt_state(self.params, self.opt)
+
+    def run(self) -> Dict:
+        last = {}
+        while self.step < self.tcfg.steps:
+            batch = {k: jax.numpy.asarray(v) for k, v in next(self.data).items()}
+            self.watchdog.step_start()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            self.watchdog.step_end()
+            self.step += 1
+            last = {k: float(v) for k, v in metrics.items()}
+            if self.step % self.tcfg.log_every == 0 or \
+                    self.step == self.tcfg.steps:
+                self.metrics_log.append({"step": self.step, **last})
+            if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save_async(
+                    self.step,
+                    {"params": self.params, "opt_state": self.opt_state},
+                    extra={"data_step": self.data.step})
+        if self.ckpt:
+            self.ckpt.save(self.step,
+                           {"params": self.params,
+                            "opt_state": self.opt_state},
+                           extra={"data_step": self.data.step})
+            self.ckpt.wait()
+        self.data.close()
+        return last

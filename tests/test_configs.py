@@ -1,0 +1,65 @@
+"""Config-layer tests: every assigned arch loads with its published
+numbers; param counts match public figures; shape applicability matrix."""
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config, \
+    get_shape, shape_applicable
+from repro.models.params import count_params
+
+EXPECTED = {
+    # arch: (total params ±tol, active ±tol) in billions; None = sanity only
+    "gemma2-2b": (2.61, None),
+    "olmo-1b": (1.18, None),
+    "glm4-9b": (9.40, None),
+    "qwen2.5-3b": (3.09, None),
+    "paligemma-3b": (2.51, None),        # LM backbone only (vision stubbed)
+    "deepseek-v3-671b": (671.0, 37.55),
+    "mamba2-1.3b": (1.34, None),
+    "jamba-1.5-large-398b": (397.7, None),
+    "whisper-small": (0.24, None),
+    "mixtral-8x7b": (46.7, 12.9),
+}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    assert cfg.num_periods * len(cfg.period) + len(cfg.prologue) \
+        == cfg.num_layers
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED))
+def test_param_counts(arch):
+    total, active = EXPECTED[arch]
+    n = count_params(get_config(arch)) / 1e9
+    assert abs(n - total) / total < 0.02, f"{arch}: {n:.2f}B vs {total}B"
+    if active:
+        na = count_params(get_config(arch), active_only=True) / 1e9
+        assert abs(na - active) / active < 0.03
+
+
+def test_assigned_archs_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(SHAPES) == 4
+
+
+def test_shape_applicability():
+    # long_500k only for the sub-quadratic stacks
+    runs = {a for a in ALL_ARCHS
+            if shape_applicable(get_config(a), get_shape("long_500k"))[0]}
+    assert runs == {"mamba2-1.3b", "jamba-1.5-large-398b"}
+    for a in ALL_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), get_shape(s))[0]
+
+
+def test_smoke_configs_reduced():
+    for a in ALL_ARCHS:
+        cfg, sm = get_config(a), get_config(a).smoke()
+        assert sm.num_layers <= cfg.num_layers
+        assert sm.d_model < cfg.d_model
+        assert count_params(sm) < count_params(cfg)
+        assert len(sm.period) == len(cfg.period)   # same family structure

@@ -1,0 +1,120 @@
+"""HRM math (paper §3) and the policy optimizer (§4.2): turning points,
+balance point, the paper's qualitative results (CPU attention on L4/T4,
+A_g=0 F_g=1 best policy, FFN intensity ∝ batch), and the §6.3 hardware
+case study directionality."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import hrm as H
+from repro.core import policy as P
+
+
+@pytest.fixture(scope="module")
+def mixtral():
+    return get_config("mixtral-8x7b")
+
+
+@pytest.fixture(scope="module")
+def l4():
+    return H.preset("l4")
+
+
+def test_roofline_reduces_to_classic(l4):
+    # Eq. 8: local attainable = min(P, B*I)
+    lo = H.attainable_local(l4, "gpu", 0.001)
+    hi = H.attainable_local(l4, "gpu", 1e9)
+    assert lo == pytest.approx(300e9 * 0.001)
+    assert hi == l4.level("gpu").p_peak
+
+
+def test_cross_level_roof_binds(l4):
+    # Eq. 7: tiny cross-level intensity -> bound by link bw
+    p = H.attainable_cross(l4, "gpu", "cpu", i_exec=1e9, i_data=1.0)
+    assert p == pytest.approx(l4.link_bw("cpu", "gpu") * 1.0)
+
+
+def test_turning_points_order(l4):
+    # P1 (Eq. 9) must lie below P2 (Eq. 10) for any intensity where the
+    # CPU is slower than the GPU
+    i = 10.0
+    p1 = H.turning_point_p1(l4, "gpu", "cpu", i)
+    p2 = H.turning_point_p2(l4, "gpu", "cpu", i)
+    assert p1 < p2
+
+
+def test_paper_fig4_attention_on_cpu(mixtral, l4):
+    """Fig. 4: decode GQA attention intensity is below P1 on the L4
+    instance → compute on CPU."""
+    lw = H.LayerWorkload.decode(mixtral, batch=256, ctx=512)
+    i_attn = lw.intensity_attn_vs_kv()
+    assert i_attn < H.turning_point_p1(l4, "gpu", "cpu", i_attn)
+    assert H.should_compute_at_data(l4, "gpu", "cpu", i_attn)
+
+
+def test_paper_fig5_ffn_intensity_grows_with_batch(mixtral):
+    i = [H.LayerWorkload.decode(mixtral, batch=n, ctx=576)
+         .intensity_ffn_vs_weights() for n in (32, 128, 512, 2048)]
+    assert i == sorted(i)
+    assert i[-1] > 10 * i[0]
+
+
+def test_balance_point(l4):
+    i_j = H.balance_point_intensity(l4, "gpu", "cpu", i_exec=10.0)
+    # at the balance point the two bandwidth roofs are equal
+    lhs = l4.level("gpu").b_peak * 10.0
+    rhs = l4.link_bw("cpu", "gpu") * i_j
+    assert lhs == pytest.approx(rhs)
+
+
+def test_policy_search_matches_paper(mixtral, l4):
+    """§4.2: 'For our major setting, we always get A_g=0 and F_g=1'."""
+    res = P.search(mixtral, l4, P.Workload(prompt_len=77, gen_len=64))
+    best = res["best"]["policy"]
+    assert best.attn_on_gpu is False
+    assert best.ffn_on_gpu is True
+    assert res["best"]["throughput"] > 0
+    # CPU-attention optimum beats forced-GPU-attention optimum
+    assert (res["best_cpu_attn"]["throughput"]
+            >= res["best_gpu_attn"]["throughput"])
+
+
+def test_policy_memory_constraints(mixtral, l4):
+    res = P.search(mixtral, l4, P.Workload(prompt_len=77, gen_len=64))
+    assert res["best"]["mem_gpu"] <= l4.level("gpu").capacity
+    assert res["best"]["mem_cpu"] <= l4.level("cpu").capacity
+
+
+def test_fig10_more_link_bw_more_offload(mixtral):
+    """§6.3: increasing CPU→GPU bandwidth shifts weights toward the CPU
+    (r_w decreases or stays) for the 2xA100 setup."""
+    import dataclasses
+    base = H.preset("a100x2")
+    rws = []
+    for bw in (25e9, 100e9, 400e9):
+        hw = H.Hardware(levels=base.levels, links={("cpu", "gpu"): bw},
+                        name="sweep")
+        res = P.search(mixtral, hw, P.Workload(prompt_len=512, gen_len=32))
+        rws.append(res["best"]["policy"].w_gpu_ratio)
+    assert rws[-1] <= rws[0]
+
+
+def test_tpu_adaptation_compute_at_kv_shard(mixtral):
+    """The §6.3 case study re-run with v5e constants — the HRM derivation
+    behind DESIGN.md §2:
+
+    (a) decode-attention intensity (I≈4) is far below P1 for the
+        peer-HBM→chip link: do NOT ship KV shards over ICI — compute the
+        partial attention on the chip that owns the shard and move only
+        q/o (= collectives.make_seq_sharded_attn);
+    (b) a peer-HBM KV placement strictly dominates host-DRAM placement
+        (ICI ≫ PCIe and the peer has an MXU, the host does not)."""
+    v5e = H.preset("v5e")
+    lw = H.LayerWorkload.decode(mixtral, batch=256, ctx=512)
+    i_attn = lw.intensity_attn_vs_kv()
+    # (a) below P1 → compute where the data lives (Eq. 9)
+    assert H.should_compute_at_data(v5e, "gpu", "ici", i_attn)
+    # (b) attainable perf of the peer-resident path dominates host paths
+    peer = H.attainable_local(v5e, "ici", i_attn)
+    host = H.attainable_local(v5e, "cpu", i_attn)
+    ship_from_host = H.attainable_cross(v5e, "gpu", "cpu", i_attn, i_attn)
+    assert peer > 10 * max(host, ship_from_host)

@@ -1,0 +1,160 @@
+"""REQUIRED per-kernel tests: sweep shapes/dtypes in interpret mode and
+assert_allclose against the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.gqa_decode import gqa_decode
+from repro.kernels.moe_ffn import moe_ffn
+from repro.models.attention import combine_partials
+
+GQA_SHAPES = [
+    # (B, H, Hkv, D, Dv, W, block_w)
+    (2, 8, 2, 64, 64, 512, 128),          # standard GQA
+    (1, 4, 1, 128, 96, 256, 64),          # MQA, Dv != D (MLA-latent shape)
+    (3, 16, 16, 32, 32, 128, 128),        # MHA, single block
+    (2, 8, 4, 256, 256, 384, 128),        # gemma-style head_dim 256
+]
+
+
+@pytest.mark.parametrize("shape", GQA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_decode_kernel_vs_oracle(rng, shape, dtype):
+    B, H, Hkv, D, Dv, W, bw = shape
+    q = jnp.asarray(rng.normal(0, 1, (B, H, D)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, Dv)), dtype)
+    valid = jnp.asarray(rng.random((B, W)) > 0.3)
+    o1, m1, l1 = gqa_decode(q, k, v, valid, scale=D ** -0.5, block_w=bw,
+                            interpret=True)
+    o2, m2, l2 = ref.gqa_decode_ref(q, k, v, valid, scale=D ** -0.5)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(combine_partials(o1, m1, l1),
+                               combine_partials(o2, m2, l2),
+                               rtol=tol, atol=tol)
+
+
+def test_gqa_decode_kernel_softcap(rng):
+    B, H, Hkv, D, W = 1, 8, 4, 64, 256
+    q = jnp.asarray(rng.normal(0, 2, (B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 2, (B, W, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    valid = jnp.ones((B, W), bool)
+    o1, m1, l1 = gqa_decode(q, k, v, valid, scale=D ** -0.5,
+                            attn_softcap=50.0, block_w=64, interpret=True)
+    o2, m2, l2 = ref.gqa_decode_ref(q, k, v, valid, scale=D ** -0.5,
+                                    attn_softcap=50.0)
+    np.testing.assert_allclose(combine_partials(o1, m1, l1),
+                               combine_partials(o2, m2, l2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_decode_kernel_all_invalid_shard(rng):
+    """A shard with zero valid slots must return l=0 (sequence-sharded
+    combine relies on this)."""
+    B, H, Hkv, D, W = 1, 4, 2, 32, 128
+    q = jnp.asarray(rng.normal(0, 1, (B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    valid = jnp.zeros((B, W), bool)
+    o, m, l = gqa_decode(q, k, v, valid, scale=1.0, block_w=64,
+                         interpret=True)
+    np.testing.assert_allclose(l, jnp.zeros_like(l))
+    np.testing.assert_allclose(o, jnp.zeros_like(o))
+
+
+MOE_SHAPES = [
+    # (E, C, D, F, bc, bf, act)
+    (4, 64, 32, 128, 32, 64, "silu"),
+    (2, 100, 64, 300, 32, 128, "gelu"),   # non-multiple C/F (padding path)
+    (8, 16, 128, 64, 16, 64, "silu"),
+    (1, 128, 256, 512, 128, 512, "silu"),
+]
+
+
+@pytest.mark.parametrize("shape", MOE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_ffn_kernel_vs_oracle(rng, shape, dtype):
+    E, C, D, F, bc, bf, act = shape
+    x = jnp.asarray(rng.normal(0, 1, (E, C, D)), dtype)
+    wi = jnp.asarray(rng.normal(0, 0.1, (E, D, 2, F)), dtype)
+    wo = jnp.asarray(rng.normal(0, 0.1, (E, F, D)), dtype)
+    a = moe_ffn(x, wi, wo, act=act, block_c=bc, block_f=bf, interpret=True)
+    b = ref.moe_ffn_ref(x, wi, wo, act=act)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+def test_moe_ffn_kernel_fused_int8_dequant(rng):
+    """int8 weights + per-expert scales fused in the tile loop must match
+    the dequantize-then-compute oracle (tolerance covers the matmul/scale
+    reassociation)."""
+    E, C, D, F = 4, 32, 64, 128
+    x = jnp.asarray(rng.normal(0, 1, (E, C, D)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 128, (E, D, 2, F)), jnp.int8)
+    woq = jnp.asarray(rng.integers(-127, 128, (E, F, D)), jnp.int8)
+    si = jnp.asarray(rng.random(E) * 0.01 + 0.001, jnp.float32)
+    so = jnp.asarray(rng.random(E) * 0.01 + 0.001, jnp.float32)
+    a = moe_ffn(x, wq, woq, wi_scale=si, wo_scale=so, block_c=16,
+                block_f=64, interpret=True)
+    b = ref.moe_ffn_ref(x, wq.astype(jnp.float32) * si[:, None, None, None],
+                        woq.astype(jnp.float32) * so[:, None, None])
+    np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+FLASH_SHAPES = [
+    # (B, S, Skv, H, Hkv, D, Dv, causal, window, cap, bq, bk)
+    (2, 64, 64, 4, 2, 32, 32, True, 0, 0.0, 16, 16),
+    (1, 50, 50, 8, 1, 16, 24, True, 16, 0.0, 16, 16),   # window+ragged+Dv
+    (2, 32, 32, 4, 4, 64, 64, True, 0, 30.0, 32, 32),   # softcap
+    (1, 24, 48, 2, 2, 32, 32, False, 0, 0.0, 8, 16),    # cross attention
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_kernel_vs_oracle(shape, dtype):
+    from repro.kernels.flash_prefill import flash_prefill
+    from repro.models.common import attention_reference
+    B, S, Skv, H, Hkv, D, Dv, causal, win, cap, bq, bk = shape
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)  # order-independent
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, Skv, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, Skv, Hkv, Dv)), dtype)
+    lens = jnp.asarray(rng.integers(Skv // 2, Skv + 1, (B,)))
+    a = flash_prefill(q, k, v, causal=causal, window=win, attn_softcap=cap,
+                      kv_len=lens, block_q=bq, block_k=bk, interpret=True)
+    b = attention_reference(q, k, v, causal=causal, window=win,
+                            attn_softcap=cap, kv_len=lens)
+    # fully-masked rows (q beyond kv_len+window) are don't-care: the kernel
+    # returns 0, the reference's softmax-of-neg-inf returns mean(v)
+    qp = np.arange(S)[None, :]
+    kp = np.arange(Skv)
+    m = kp[None, None, :] < np.asarray(lens)[:, None, None]
+    if causal:
+        cm = kp[None, None, :] <= qp[..., None]
+        if win:
+            cm &= kp[None, None, :] > (qp[..., None] - win)
+        m = m & cm
+    has_ctx = np.broadcast_to(m.any(-1), (B, S))         # (B, S)
+    tol = 3e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(a, np.float32)[has_ctx],
+                               np.asarray(b, np.float32)[has_ctx],
+                               rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_cpu_uses_ref(rng):
+    """On CPU, ops.* auto-dispatch must hit the jnp reference path (fast),
+    with identical results to the interpret kernel."""
+    B, H, Hkv, D, W = 1, 4, 2, 32, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    valid = jnp.ones((B, W), bool)
+    o_auto = combine_partials(*ops.gqa_decode(q, k, v, valid, scale=1.0))
+    o_int = combine_partials(*ops.gqa_decode(q, k, v, valid, scale=1.0,
+                                             impl="interpret"))
+    np.testing.assert_allclose(o_auto, o_int, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,135 @@
+"""Layer-level numerics: chunked attention vs O(S^2) oracle, RoPE
+properties, window masking, softcap, MLA absorbed-vs-naive equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ATTN_MLA, LayerSpec
+from repro.models.attention import (attention_partials, combine_partials,
+                                    decode_valid_mask, mla_forward)
+from repro.models.common import (apply_rope, attention_reference,
+                                 chunked_attention, rmsnorm, softcap)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("cap", [0.0, 20.0])
+def test_chunked_attention_matches_reference(rng, window, cap):
+    B, S, Hq, Hkv, D = 2, 50, 8, 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, window=window,
+                          attn_softcap=cap, chunk=16)
+    b = attention_reference(q, k, v, causal=True, window=window,
+                            attn_softcap=cap)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_kv_len_mask(rng):
+    B, S, H, D = 2, 32, 4, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    lens = jnp.asarray([10, 32])
+    a = chunked_attention(q, k, v, causal=True, kv_len=lens, chunk=8)
+    # row 0 must equal attention over only the first 10 kv positions
+    b = attention_reference(q[:1, :10], k[:1, :10], v[:1, :10], causal=True)
+    np.testing.assert_allclose(a[0, :10], b[0], rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relativity(rng):
+    B, S, H, D = 1, 8, 2, 16
+    x = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 1, D)), jnp.float32)
+
+    def dot_at(p, d):
+        qr = apply_rope(q, jnp.full((1, 1), p), 1e4)
+        kr = apply_rope(k, jnp.full((1, 1), p + d), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(3, 5) - dot_at(11, 5)) < 1e-3
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    np.testing.assert_allclose(softcap(x, 0.0), x)
+    # near-linear for small inputs
+    np.testing.assert_allclose(softcap(jnp.asarray([0.1]), 30.0),
+                               jnp.asarray([0.1]), rtol=1e-3)
+
+
+def test_decode_partials_match_full_softmax(rng):
+    B, H, Hkv, D, W = 3, 8, 4, 16, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, D)), jnp.float32)
+    valid = jnp.asarray(rng.random((B, W)) > 0.5)
+    o = combine_partials(*attention_partials(q, k, v, valid, scale=D ** -0.5))
+    ref = attention_reference(q[:, None], k, v, causal=False,
+                              kv_len=None, scale=D ** -0.5)
+    # manually mask via big matmul
+    g = H // Hkv
+    s = jnp.einsum("bhgd,bwhd->bhgw",
+                   (q.reshape(B, Hkv, g, D) * D ** -0.5), k)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o2 = jnp.einsum("bhgw,bwhd->bhgd", p, v).reshape(B, H, D)
+    np.testing.assert_allclose(o, o2, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_valid_mask_window():
+    slot_pos = jnp.asarray([[5, 6, 7, -1]])
+    pos = jnp.asarray([7])
+    np.testing.assert_array_equal(
+        decode_valid_mask(slot_pos, pos, 0)[0], [True, True, True, False])
+    np.testing.assert_array_equal(
+        decode_valid_mask(slot_pos, pos, 2)[0], [False, True, True, False])
+
+
+def test_mla_absorbed_decode_equals_naive_prefill(rng):
+    """The absorbed decode path must produce the same output as the naive
+    (decompressed) attention at the same position."""
+    cfg = dataclasses.replace(get_config("deepseek-v3-671b").smoke(),
+                              dtype="float32")
+    from repro.models import kvcache
+    from repro.models.params import init_params
+    spec = LayerSpec(attn=ATTN_MLA)
+    params = init_params(cfg, jax.random.key(0))
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["p0"]["attn"])
+    B, S = 2, 9
+    x = jnp.asarray(rng.normal(0, 0.3, (B, S, cfg.d_model)), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    # naive full forward
+    out_full, _ = mla_forward(cfg, spec, p, x, positions, cache=None,
+                              mode="full")
+    # prefill first S-1 then decode token S-1
+    cache = kvcache._spec_cache(cfg, spec, 1, B, 16, jnp.float32)
+    cache = jax.tree.map(lambda a: a[0], cache)
+    _, cache = mla_forward(cfg, spec, p, x[:, :S - 1],
+                           positions[:, :S - 1], cache=cache, mode="full")
+    out_dec, _ = mla_forward(cfg, spec, p, x[:, S - 1:],
+                             positions[:, S - 1:], cache=cache, mode="decode",
+                             pos=jnp.full((B,), S - 1))
+    np.testing.assert_allclose(out_dec[:, 0], out_full[:, -1],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rmsnorm_gemma_offset(rng):
+    x = jnp.asarray(rng.normal(0, 1, (2, 8)), jnp.float32)
+    w = jnp.zeros((8,))
+    # gemma convention: weight 0 with offset 1 == plain rms normalize
+    y = rmsnorm(x, w, 1e-6, offset=1.0)
+    np.testing.assert_allclose(
+        jnp.mean(jnp.square(y), -1), jnp.ones(2), rtol=1e-4)
