@@ -1,7 +1,16 @@
-"""Real (wall-clock) engine micro-benchmark on the CPU smoke model:
-decode-step latency and tokens/s for resident vs paged weights, and
-schedule-order sanity (CGOPipe micro-batch rotation).  Grounds the
-HRM/simulator numbers with an actually-executing system.
+"""Real (wall-clock) engine micro-benchmark on the CPU smoke model.
+
+Two experiments:
+
+  * resident vs paged weights: decode-step latency and tokens/s with the
+    continuous slot-pool engine (grounds the HRM/simulator numbers with
+    an actually-executing system);
+  * static vs continuous batching on a *skewed* generation-length
+    workload (half the requests generate SHORT_GEN tokens, half
+    LONG_GEN): static mode retires a micro-batch only when its slowest
+    row finishes, so short rows burn decode slots doing masked no-ops;
+    the slot-pool engine recycles drained slots mid-flight and must win
+    decisively (the PR's acceptance bar is >= 1.5x tokens/s).
 """
 from __future__ import annotations
 
@@ -15,23 +24,74 @@ from repro.configs import get_config
 from repro.models.params import init_params
 from repro.serving.engine import Engine, EngineConfig
 
+SHORT_GEN, LONG_GEN = 4, 64
+N_REQUESTS = 16
+PROMPT_LEN = 16
+
+
+def _run_engine(cfg, params, ecfg, requests, warmup=False):
+    eng = Engine(cfg, params, ecfg)
+    if warmup:
+        # trigger every jit compile (prefill buckets, decode chunk, slot
+        # insert/reset) so the timed section measures steady-state serving
+        for prompt, _ in requests[:2 * ecfg.ubatch]:
+            eng.submit(prompt, 2)
+        eng.run_until_idle()
+        eng.steps = eng.tokens_out = 0
+    base_rids = set(eng.scheduler.requests)
+    for prompt, gen in requests:
+        eng.submit(prompt, gen)
+    t0 = time.perf_counter()
+    out = eng.run_until_idle()
+    dt = time.perf_counter() - t0
+    out = {rid: toks for rid, toks in out.items() if rid not in base_rids}
+    toks = sum(len(v) for v in out.values())
+    return eng, out, toks, dt
+
 
 def run():
     cfg = get_config("mixtral-8x7b").smoke()
     params = init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
+
+    # 1. resident vs paged (uniform generation length)
     for paged in (False, True):
-        eng = Engine(cfg, params, EngineConfig(ubatch=4, num_ubs=2,
-                                               max_seq=128, paged=paged))
-        for _ in range(8):
-            eng.submit(rng.integers(2, cfg.vocab_size, 16), 16)
-        t0 = time.perf_counter()
-        out = eng.run_until_idle()
-        dt = time.perf_counter() - t0
-        toks = sum(len(v) for v in out.values())
+        reqs = [(rng.integers(2, cfg.vocab_size, 16), 16) for _ in range(8)]
+        eng, out, toks, dt = _run_engine(
+            cfg, params, EngineConfig(ubatch=4, num_ubs=2, max_seq=128,
+                                      paged=paged), reqs, warmup=True)
         name = "paged" if paged else "resident"
-        emit(f"engine_{name}_decode", dt / max(eng.steps, 1) * 1e6,
+        # per generated token (an engine tick is now a decode_chunk-token
+        # chunk, so per-step latency would not be comparable to the seed)
+        emit(f"engine_{name}_decode_per_tok", dt / max(toks, 1) * 1e6,
+             f"tok_per_s={toks / dt:.1f},ticks={eng.steps}")
+
+    # 2. static vs continuous on a skewed max_new_tokens mix
+    reqs = [(rng.integers(2, cfg.vocab_size, PROMPT_LEN),
+             SHORT_GEN if i % 2 == 0 else LONG_GEN)
+            for i in range(N_REQUESTS)]
+    results = {}
+    # continuous_chunk1 isolates slot recycling from decode-chunk dispatch
+    # amortization (static mode necessarily runs chunk=1 so it can retire
+    # whole groups every token)
+    variants = {"static": ("static", 1), "continuous": ("continuous", 4),
+                "continuous_chunk1": ("continuous", 1)}
+    for name, (mode, chunk) in variants.items():
+        eng, out, toks, dt = _run_engine(
+            cfg, params, EngineConfig(ubatch=4, num_ubs=2, max_seq=128,
+                                      mode=mode, decode_chunk=chunk), reqs,
+            warmup=True)
+        results[name] = (out, toks / dt)
+        emit(f"engine_{name}_skewed", dt * 1e6,
              f"tok_per_s={toks / dt:.1f},steps={eng.steps}")
+    speedup = results["continuous"][1] / results["static"][1]
+    recycle_only = results["continuous_chunk1"][1] / results["static"][1]
+    identical = all(results[n][0] == results["static"][0]
+                    for n in ("continuous", "continuous_chunk1"))
+    emit("engine_continuous_speedup", 0.0,
+         f"continuous_vs_static={speedup:.2f}x,"
+         f"recycle_only={recycle_only:.2f}x,greedy_identical={identical}")
+    return speedup, identical
 
 
 if __name__ == "__main__":

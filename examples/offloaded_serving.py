@@ -2,11 +2,15 @@
 with batched requests through the full MoE-Lightning pipeline —
 
   1. HRM policy search for the target hardware (paper §4.2),
-  2. Algorithm-2 balanced micro-batching (paper Appendix A.2),
+  2. Algorithm-2 request placement (paper Appendix A.2) — incremental
+     per-slot admission in continuous mode, whole micro-batches in static,
   3. paged weights consumed layer-by-layer in-scan (paper Appendix A.1),
-  4. continuous batching with CGOPipe micro-batch rotation (paper §4.1).
+  4. continuous batching over a persistent KV slot pool with CGOPipe
+     micro-batch rotation (paper §4.1): drained slots are recycled
+     mid-flight, so skewed generation lengths don't strand decode rows.
 
-  PYTHONPATH=src python examples/offloaded_serving.py [--requests 32]
+  PYTHONPATH=src python examples/offloaded_serving.py \
+      [--requests 32] [--mode continuous|static] [--skew]
 """
 import argparse
 import time
@@ -32,6 +36,11 @@ def main():
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=12)
     ap.add_argument("--paged", action="store_true", default=True)
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--skew", action="store_true",
+                    help="mix short (gen-len/4) and long (gen-len) "
+                         "generations to show slot recycling")
     args = ap.parse_args()
 
     print(f"params: {count_params(LM_110M) / 1e6:.1f}M")
@@ -49,18 +58,26 @@ def main():
     params = init_params(LM_110M, jax.random.key(0))
     eng = Engine(LM_110M, params,
                  EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
-                              paged=args.paged, page_elems=1 << 18))
+                              paged=args.paged, page_elems=1 << 18,
+                              mode=args.mode))
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
+    for i in range(args.requests):
         n = int(rng.integers(4, 25))
-        eng.submit(rng.integers(2, LM_110M.vocab_size, n), args.gen_len)
+        gen = (max(1, args.gen_len // 4) if args.skew and i % 2 == 0
+               else args.gen_len)
+        eng.submit(rng.integers(2, LM_110M.vocab_size, n), gen)
     t0 = time.time()
     out = eng.run_until_idle()
     dt = time.time() - t0
     toks = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s, paged={args.paged}, "
-          f"decode steps={eng.steps})")
+          f"({toks / dt:.1f} tok/s, paged={args.paged}, mode={args.mode}, "
+          f"engine ticks={eng.steps})")
+    if args.mode == "continuous":
+        fills = [len(s.history)
+                 for grp in eng.scheduler.slots for s in grp]
+        print(f"slot pool: {len(fills)} slots, "
+              f"{sum(fills)} admissions (max reuse {max(fills)}x)")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ micro-batches plus the requests deferred to the next round.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -45,13 +45,10 @@ def batch_requests(req_queue: List[Request], n_ub: int, ubs: int,
     aborted: List[Request] = []
 
     for req in sorted(req_queue, key=lambda r: r.input_len, reverse=True):
-        if not partitions:
-            aborted.append(req)
-            continue
-        idx = min(range(len(partitions)), key=lambda i: partition_sums[i])
-        projected = (partition_sums[idx] + req.input_len
-                     + (1 + len(partitions[idx])) * gen_len)
-        if projected > cache_size:
+        idx = place_request(req.input_len, partition_sums,
+                            [len(p) for p in partitions],
+                            gen_len=gen_len, cache_size=cache_size)
+        if idx is None:
             aborted.append(req)
             continue
         partitions[idx].requests.append(req)
@@ -65,3 +62,32 @@ def batch_requests(req_queue: List[Request], n_ub: int, ubs: int,
         if len(p):
             micro_batches.append(p)
     return micro_batches, aborted
+
+
+def place_request(input_len: int, partition_sums: Sequence[int],
+                  partition_counts: Sequence[int], *, gen_len: int,
+                  cache_size: int,
+                  open_mask: Optional[Sequence[bool]] = None,
+                  reserve: Optional[int] = None) -> Optional[int]:
+    """Incremental single-request placement: Algorithm 2's balance criterion
+    applied to ONE request against live partitions (continuous batching).
+
+    partition_sums/partition_counts: current token load and live request
+    count per partition; each co-resident reserves `gen_len` generation
+    tokens (pass gen_len=0 when partition_sums already include their
+    reservations) and the candidate reserves `reserve` (default gen_len —
+    the batch-mode uniform bound).  open_mask: which partitions can still
+    take a request (e.g. have a free slot).  Returns the index of the
+    least-loaded open partition if the projected cache use fits the
+    budget, else None (caller defers or aborts the request)."""
+    cands = [i for i in range(len(partition_sums))
+             if open_mask is None or open_mask[i]]
+    if not cands:
+        return None
+    idx = min(cands, key=lambda i: partition_sums[i])
+    projected = (partition_sums[idx] + input_len
+                 + (gen_len if reserve is None else reserve)
+                 + partition_counts[idx] * gen_len)
+    if projected > cache_size:
+        return None
+    return idx

@@ -98,6 +98,52 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
 
 
 # ---------------------------------------------------------------------------
+# Slot-pool operations.  A cache allocated once with batch = number of slots
+# is treated as a pool of independent per-row "slots": a finished row can be
+# reset and refilled with a new request without touching its neighbors
+# (continuous batching).  Batch is axis 0 for "pos" and axis 1 (after the
+# layer-stack axis) for every other leaf.
+# ---------------------------------------------------------------------------
+
+def _map_named_leaves(tree: Dict, fn) -> Dict:
+    """Map fn(leaf_name, leaf) over a nested-dict pytree, keeping names."""
+    out = {}
+    for k, v in tree.items():
+        out[k] = _map_named_leaves(v, fn) if isinstance(v, dict) else fn(k, v)
+    return out
+
+
+def reset_slot(cache: Dict, row) -> Dict:
+    """Return `cache` with batch row `row` restored to its init_cache state
+    (slot_pos = -1, pos = 0, zeros elsewhere) and all other rows untouched.
+    `row` may be a traced scalar, so one jit covers every slot."""
+    out = {}
+    for k, v in cache.items():
+        if k == "pos":
+            out[k] = v.at[row].set(0)
+        else:
+            out[k] = _map_named_leaves(
+                v, lambda name, a: a.at[:, row].set(
+                    jnp.asarray(-1 if name == "slot_pos" else 0, a.dtype)))
+    return out
+
+
+def insert_slot(cache: Dict, single: Dict, row) -> Dict:
+    """Slot-indexed prefill write: copy batch row 0 of `single` (a cache
+    built with batch=1, e.g. freshly prefilled for one request) into batch
+    row `row` of the pooled `cache`.  Only that row changes."""
+    out = {}
+    for k, v in cache.items():
+        if k == "pos":
+            out[k] = v.at[row].set(single[k][0])
+        else:
+            out[k] = jax.tree.map(
+                lambda a, b: a.at[:, row].set(b[:, 0].astype(a.dtype)),
+                v, single[k])
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Ring-buffer writes.  All write helpers operate on a *single layer slice*
 # (no leading stack dim) — model.py maps them over the stack inside scan.
 # ---------------------------------------------------------------------------

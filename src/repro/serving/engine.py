@@ -1,25 +1,45 @@
-"""Offloading-aware batch-inference engine (the paper's system, §4).
+"""Offloading-aware inference engine (the paper's system, §4) with a
+continuous-batching slot pool.
 
-Execution structure per the paper:
-  * requests → Algorithm 2 → `num_ubs` micro-batches of μ rows each
-    (Scheduler);
-  * zig-zag order: prefill on the accelerator per micro-batch, KV kept in
-    the (ring) cache;
-  * decode: micro-batches rotate in CGOPipe launch order — while μ-batch j
-    runs its accelerator half, batch j+1's attention inputs and the next
-    layer's weight *pages* are in flight (on TPU the pages live in host
-    memory and stream; on this CPU container the same jitted step consumes
-    the page pool in-scan, and the overlap schedule itself is validated by
-    core.cgopipe's simulator);
-  * per-row positions & slot-position masks make right-padded prompts
-    exact (no attention to pad slots).
+Slot-pool architecture (default, ``mode="continuous"``):
 
-`paged=True` routes weights through core.paging (pack_block_groups) —
+  * one persistent KV pool of ``num_ubs × ubatch`` slots is allocated at
+    engine construction — ``num_ubs`` rotation groups (the CGOPipe
+    micro-batches) of ``ubatch`` batch rows each.  A slot is one row of
+    one group's cache; it is recycled in place (models.kvcache
+    ``reset_slot`` / ``insert_slot``) without touching its neighbors;
+  * the Scheduler tracks per-slot lifecycle (free → prefilling → decoding
+    → drained) and admits *individual* requests into freed slots
+    mid-flight via Algorithm 2's balance criterion
+    (core.batching.place_request) — the effective batch stays saturated
+    under the fixed cache budget instead of waiting for whole
+    micro-batches to retire;
+  * admission prefills one request at a bucketed prompt width (batch 1,
+    compiled once per bucket) and writes its KV into the target slot row;
+  * decode runs one jit-stable fixed-shape chunk per rotation group
+    (serving.steps.``decode_chunk``): ``decode_chunk`` tokens under an
+    inner ``lax.scan`` with a per-row *active* mask, so finished rows are
+    masked — they emit nothing and their cache position is frozen —
+    rather than resampled, and Python/dispatch overhead is amortized
+    between admission checks;
+  * groups still rotate in CGOPipe launch order (Algorithm 1): while
+    group j runs its accelerator half, group j+1's attention inputs and
+    the next layer's weight pages are in flight (on TPU the pages live in
+    host memory and stream; on this CPU container the same jitted step
+    consumes the page pool in-scan).
+
+``mode="static"`` keeps the original whole-micro-batch semantics — a
+group is admitted as a unit and retired only when every row finishes —
+as the baseline that benchmarks/bench_engine.py compares against.  Both
+modes share the same masked decode step (static uses chunk size 1 so it
+can retire groups every token), so greedy outputs per request are
+bit-identical across modes.
+
+``paged=True`` routes weights through core.paging (pack_block_groups) —
 the 2×W_L double-buffer lives in XLA's scan pipelining on TPU.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -29,50 +49,84 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import paging
-from repro.core.policy import Policy
 from repro.models import kvcache
 from repro.models.model import ExecPolicy, forward, unembed
+from repro.serving import steps as serve_steps
 from repro.serving.sampling import sample
-from repro.serving.scheduler import Scheduler, ServeRequest
+from repro.serving.scheduler import Scheduler, ServeRequest, SlotState
 
 
 @dataclass
 class EngineConfig:
-    ubatch: int = 4                   # μ rows per micro-batch
-    num_ubs: int = 2                  # micro-batches in rotation
+    ubatch: int = 4                   # μ rows per micro-batch / slot group
+    num_ubs: int = 2                  # rotation groups in the slot pool
     max_seq: int = 128
     temperature: float = 0.0
     paged: bool = False               # paged-weight streaming path
     page_elems: int = 1 << 16
     eos_id: int = 1
     seed: int = 0
+    mode: str = "continuous"          # "continuous" | "static"
+    decode_chunk: int = 8             # tokens per inner scan (continuous)
+    on_long_prompt: str = "reject"    # "reject" | "truncate" (> max_seq)
+
+
+class _SlotGroup:
+    """Device-side state of one rotation group: its slice of the KV pool
+    plus the last sampled token per row (the next decode input)."""
+
+    def __init__(self, cache, ubatch: int):
+        self.cache = cache
+        self.last_tok = np.zeros((ubatch,), np.int32)
 
 
 class _ActiveBatch:
+    """Static mode: a micro-batch admitted (and retired) as a unit."""
+
     def __init__(self, requests: List[ServeRequest], cache, last_tokens):
         self.requests = requests
         self.cache = cache
-        self.last_tokens = last_tokens       # (μ,1) next input token
+        self.last_tokens = last_tokens       # (μ,) next input token
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  policy: Optional[ExecPolicy] = None):
+        assert ecfg.mode in ("continuous", "static")
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.policy = policy
         self.scheduler = Scheduler(
             ubatch=ecfg.ubatch, num_ubs=ecfg.num_ubs,
-            cache_tokens=ecfg.max_seq * ecfg.ubatch, gen_len=32)
-        self.active: List[_ActiveBatch] = []
+            cache_tokens=ecfg.max_seq * ecfg.ubatch, gen_len=32,
+            max_input_len=ecfg.max_seq, on_long_prompt=ecfg.on_long_prompt)
+        self.active: List[_ActiveBatch] = []          # static mode only
         self.key = jax.random.key(ecfg.seed)
         self.paged_blocks = None
         if ecfg.paged:
             self.paged_blocks = paging.pack_block_groups(
                 params["blocks"], ecfg.page_elems)
         self._prefill = jax.jit(self._prefill_fn)
-        self._decode = jax.jit(self._decode_fn)
+        chunk = ecfg.decode_chunk if ecfg.mode == "continuous" else 1
+        # the pool cache is donated on the hot path so slot writes and
+        # chunk decodes update it in place instead of copying the pool
+        self._decode_chunk = jax.jit(serve_steps.make_decode_chunk(
+            cfg, policy, paged_blocks=self.paged_blocks,
+            temperature=ecfg.temperature, eos_id=ecfg.eos_id, chunk=chunk),
+            donate_argnums=(1,))
+        self._insert = jax.jit(kvcache.insert_slot, donate_argnums=(0,))
+        # the persistent slot pool: allocated once, recycled per slot
+        self.groups: List[_SlotGroup] = []
+        self._prefill_scratch = None
+        if ecfg.mode == "continuous":
+            self.groups = [
+                _SlotGroup(kvcache.init_cache(cfg, ecfg.ubatch, ecfg.max_seq),
+                           ecfg.ubatch)
+                for _ in range(ecfg.num_ubs)]
+            # batch-1 admission-prefill input: _prefill is functional, so
+            # this stays pristine and is reused for every admission
+            self._prefill_scratch = kvcache.init_cache(cfg, 1, ecfg.max_seq)
         self.steps = 0
         self.tokens_out = 0
 
@@ -88,25 +142,121 @@ class Engine:
         logits = unembed(self.cfg, params, hidden)
         return logits, cache
 
-    def _decode_fn(self, params, cache, tokens, key):
-        out = forward(self.cfg, params, tokens, cache=cache, mode="decode",
-                      policy=self.policy, paged_blocks=self.paged_blocks)
-        logits = unembed(self.cfg, params, out["hidden"][:, -1])
-        tok = sample(logits, key, temperature=self.ecfg.temperature)
-        return tok, out["cache"]
-
     # ----------------------------------------------------------- public
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
         return self.scheduler.submit(np.asarray(prompt, np.int32),
                                      max_new_tokens)
 
-    def _admit(self):
-        for group in self.scheduler.admit():
+    def step(self) -> bool:
+        """One engine tick: admit new work, then decode every rotation
+        group in CGOPipe launch order (Algorithm 1).  Continuous mode
+        decodes a `decode_chunk`-token masked chunk per group and recycles
+        slots that drain; static mode decodes one token per active
+        micro-batch and retires whole groups.  Returns True if any work
+        was done."""
+        if self.ecfg.mode == "static":
+            return self._step_static()
+        return self._step_continuous()
+
+    def run_until_idle(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        while self.step() and self.steps < max_steps:
+            pass
+        return {rid: r.generated for rid, r in self.scheduler.requests.items()}
+
+    # ----------------------------------------------------- shared pieces
+    def _bucket(self, input_len: int) -> int:
+        # bucket the padded prompt length so prefill compiles once per
+        # bucket, not once per distinct length
+        return min(-(-input_len // 16) * 16, self.ecfg.max_seq)
+
+    def _decode_group(self, cache, last_tok, active, rem):
+        """Run one masked decode chunk; returns (cache, new_last_tok,
+        still_active, toks (T,B), emitted (T,B)) as host arrays where
+        relevant."""
+        self.key, k = jax.random.split(self.key)
+        cache, tok, act2, _, toks, emitted = self._decode_chunk(
+            self.params, cache, jnp.asarray(last_tok[:, None]),
+            jnp.asarray(active), jnp.asarray(rem), k)
+        return (cache, np.array(tok)[:, 0], np.asarray(act2),
+                np.asarray(toks), np.asarray(emitted))
+
+    @staticmethod
+    def _emit(toks, emitted, row_req):
+        """Replay a chunk's emissions into request transcripts.
+        row_req[i] is the request owning row i (or None)."""
+        count = 0
+        for t in range(toks.shape[0]):
+            for i, r in enumerate(row_req):
+                if r is not None and emitted[t, i]:
+                    r.generated.append(int(toks[t, i]))
+                    count += 1
+        return count
+
+    # ------------------------------------------------- continuous mode
+    def _admit_continuous(self):
+        """Fill freed slots: per admitted request, prefill at its own
+        bucket width (batch 1) and slot-write the KV into the pool row."""
+        for slot in self.scheduler.admit_to_slots():
+            r = slot.req
+            S = self._bucket(r.input_len)
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :r.input_len] = r.prompt
+            logits, single = self._prefill(
+                self.params, jnp.asarray(toks), self._prefill_scratch,
+                jnp.asarray([r.input_len], np.int32))
+            self.key, k = jax.random.split(self.key)
+            first = int(np.asarray(
+                sample(logits, k, temperature=self.ecfg.temperature))[0])
+            r.generated.append(first)
+            group = self.groups[slot.gid]
+            group.cache = self._insert(group.cache, single, slot.row)
+            group.last_tok[slot.row] = first
+            if len(r.generated) >= r.max_new_tokens:
+                self._retire_slot(slot)          # 1-token request
+            else:
+                self.scheduler.start_decode(slot)
+
+    def _retire_slot(self, slot):
+        # no cache reset here: the row stays masked while free, and the
+        # next admission's insert_slot overwrites every leaf of the row
+        # (kvcache.reset_slot exists for paths that must hand back a
+        # clean row without refilling it)
+        slot.req.done = True
+        self.scheduler.drain(slot)
+        self.scheduler.release(slot)
+
+    def _step_continuous(self) -> bool:
+        self._admit_continuous()
+        if not self.scheduler.has_live_slots():
+            return False
+        for gid, group in enumerate(self.groups):     # CGOPipe rotation
+            slots = self.scheduler.slots[gid]
+            active = np.array([s.state == SlotState.DECODE for s in slots])
+            if not active.any():
+                continue
+            rem = np.array(
+                [s.req.max_new_tokens - len(s.req.generated)
+                 if s.state == SlotState.DECODE else 0 for s in slots],
+                np.int32)
+            group.cache, group.last_tok, act2, toks, emitted = \
+                self._decode_group(group.cache, group.last_tok, active, rem)
+            self.tokens_out += self._emit(
+                toks, emitted, [s.req if s.state == SlotState.DECODE else None
+                                for s in slots])
+            for i, s in enumerate(slots):
+                if s.state == SlotState.DECODE and not act2[i]:
+                    self._retire_slot(s)
+        self.steps += 1
+        return True
+
+    # ----------------------------------------------------- static mode
+    def _admit_static(self):
+        # the pool budget is num_ubs rotation groups: only admit into
+        # capacity actually freed by retired micro-batches
+        avail = self.ecfg.num_ubs - len(self.active)
+        for group in self.scheduler.admit(avail):
             mu = self.ecfg.ubatch
-            # bucket the padded prompt length so prefill compiles once per
-            # bucket, not once per distinct length
-            S = max(r.input_len for r in group)
-            S = min(-(-S // 16) * 16, self.ecfg.max_seq)
+            S = self._bucket(max(r.input_len for r in group))
             toks = np.zeros((mu, S), np.int32)
             lens = np.zeros((mu,), np.int32)
             for i, r in enumerate(group):
@@ -117,39 +267,40 @@ class Engine:
             logits, cache = self._prefill(self.params, jnp.asarray(toks),
                                           cache, jnp.asarray(lens))
             self.key, k = jax.random.split(self.key)
-            first = sample(logits, k, temperature=self.ecfg.temperature)
-            first = np.asarray(first)
+            first = np.asarray(
+                sample(logits, k, temperature=self.ecfg.temperature))
             for i, r in enumerate(group):
                 r.generated.append(int(first[i]))
-            nxt = jnp.asarray(first[:, None])
-            self.active.append(_ActiveBatch(list(group), cache, nxt))
+                if len(r.generated) >= r.max_new_tokens:
+                    r.done = True                 # 1-token request
+            self.active.append(_ActiveBatch(
+                list(group), cache, np.asarray(first, np.int32)))
 
-    def step(self) -> bool:
-        """One engine tick: admit new work, then one decode step for every
-        active micro-batch in CGOPipe rotation order.  Returns True if any
-        work was done."""
-        self._admit()
+    def _step_static(self) -> bool:
+        self._admit_static()
         if not self.active:
             return False
-        for ab in list(self.active):      # rotation: ub_0, ub_1, ... (Alg. 1)
-            self.key, k = jax.random.split(self.key)
-            tok, ab.cache = self._decode(self.params, ab.cache,
-                                         ab.last_tokens, k)
-            tok_np = np.asarray(tok)
+        mu = self.ecfg.ubatch
+        for ab in list(self.active):  # rotation: ub_0, ub_1, ... (Alg. 1)
+            active = np.zeros((mu,), bool)
+            rem = np.zeros((mu,), np.int32)
             for i, r in enumerate(ab.requests):
-                if not r.done:
-                    r.generated.append(int(tok_np[i]))
-                    self.tokens_out += 1
-                    if (len(r.generated) >= r.max_new_tokens
-                            or tok_np[i] == self.ecfg.eos_id):
-                        r.done = True
-            ab.last_tokens = jnp.asarray(tok_np[:, None])
+                if not r.done and len(r.generated) < r.max_new_tokens:
+                    active[i] = True
+                    rem[i] = r.max_new_tokens - len(r.generated)
+            if not active.any():          # e.g. every quota met at prefill
+                self.active.remove(ab)
+                continue
+            ab.cache, ab.last_tokens, act2, toks, emitted = \
+                self._decode_group(ab.cache, np.asarray(ab.last_tokens),
+                                   active, rem)
+            row_req = [ab.requests[i] if i < len(ab.requests) else None
+                       for i in range(mu)]
+            self.tokens_out += self._emit(toks, emitted, row_req)
+            for i, r in enumerate(ab.requests):
+                if active[i] and not act2[i]:
+                    r.done = True
             if all(r.done for r in ab.requests):
                 self.active.remove(ab)
         self.steps += 1
         return True
-
-    def run_until_idle(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        while self.step() and self.steps < max_steps:
-            pass
-        return {rid: r.generated for rid, r in self.scheduler.requests.items()}

@@ -1,18 +1,30 @@
-"""Request scheduler: queue + admission via the paper's Algorithm 2.
+"""Request scheduler: queue + admission via the paper's Algorithm 2, and
+per-slot lifecycle tracking for the continuous-batching slot-pool engine.
 
-Turns a stream of variable-length requests into μ-sized micro-batches with
-balanced token counts under the KV-cache budget, defers what doesn't fit,
-and tracks request lifecycle (queued → active → finished).
+Two admission modes:
+
+  * batch (``admit``): the original Algorithm-2 pass — turns the whole
+    queue into μ-sized micro-batches with balanced token counts under the
+    KV-cache budget (static engine mode);
+  * incremental (``admit_to_slots``): FCFS placement of single requests
+    into freed slots via Algorithm 2's balance criterion
+    (core.batching.place_request), used by the continuous engine to refill
+    drained slots mid-flight.
+
+Slot lifecycle: FREE → PREFILL → DECODE → DRAINED → FREE.  A slot is one
+batch row of one rotation group's pooled KV cache; `Slot.history` records
+every request id the slot has served (slot recycling is observable).
 """
 from __future__ import annotations
 
+import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.batching import MicroBatch, Request, batch_requests
+from repro.core.batching import Request, batch_requests, place_request
 
 
 @dataclass
@@ -22,44 +34,171 @@ class ServeRequest:
     max_new_tokens: int
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    aborted: bool = False
 
     @property
     def input_len(self) -> int:
         return len(self.prompt)
 
 
+class SlotState(enum.Enum):
+    FREE = "free"
+    PREFILL = "prefilling"
+    DECODE = "decoding"
+    DRAINED = "drained"
+
+
+@dataclass
+class Slot:
+    gid: int                          # rotation group (micro-batch) index
+    row: int                          # batch row within the group's cache
+    state: SlotState = SlotState.FREE
+    req: Optional[ServeRequest] = None
+    history: List[int] = field(default_factory=list)   # rids served
+
+
 class Scheduler:
     def __init__(self, *, ubatch: int, num_ubs: int, cache_tokens: int,
-                 gen_len: int):
+                 gen_len: int, max_input_len: Optional[int] = None,
+                 on_long_prompt: str = "reject"):
         self.ubatch = ubatch
         self.num_ubs = num_ubs
         self.cache_tokens = cache_tokens
         self.gen_len = gen_len
+        self.max_input_len = max_input_len
+        assert on_long_prompt in ("reject", "truncate")
+        self.on_long_prompt = on_long_prompt
         self._rid = itertools.count()
         self.queue: List[ServeRequest] = []
         self.requests: Dict[int, ServeRequest] = {}
+        self.slots: List[List[Slot]] = [
+            [Slot(g, r) for r in range(ubatch)] for g in range(num_ubs)]
 
+    # ------------------------------------------------------------- submit
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
         rid = next(self._rid)
-        req = ServeRequest(rid, np.asarray(prompt, np.int32), max_new_tokens)
-        self.queue.append(req)
+        prompt = np.asarray(prompt, np.int32)
+        req = ServeRequest(rid, prompt, max_new_tokens)
         self.requests[rid] = req
+        if self.max_input_len is not None and \
+                len(prompt) + max_new_tokens > self.max_input_len:
+            # prompt + generation must fit the per-slot ring width: a longer
+            # prompt crashes at prefill, and generation past the ring wraps
+            # it and silently evicts the earliest context
+            keep = self.max_input_len - max_new_tokens
+            if self.on_long_prompt == "truncate" and keep >= 1:
+                req.prompt = prompt[:keep]
+            else:
+                req.aborted = True
+                req.done = True
+                return rid
+        self.queue.append(req)
         return rid
 
-    def admit(self) -> List[List[ServeRequest]]:
+    # -------------------------------------------------- batch admission
+    def admit(self, max_groups: Optional[int] = None
+              ) -> List[List[ServeRequest]]:
         """Run Algorithm 2 over the current queue; returns micro-batches of
-        ServeRequests (≤ num_ubs batches of ≤ ubatch requests)."""
-        if not self.queue:
+        ServeRequests (≤ max_groups ≤ num_ubs batches of ≤ ubatch requests).
+        `max_groups` lets the engine cap admission to the rotation capacity
+        it actually has free, keeping the KV pool at its fixed budget."""
+        cap = self.num_ubs if max_groups is None \
+            else min(max_groups, self.num_ubs)
+        if not self.queue or cap <= 0:
             return []
         algo_reqs = [Request(r.rid, r.input_len, r.max_new_tokens)
                      for r in self.queue]
         mbs, aborted = batch_requests(algo_reqs, self.num_ubs, self.ubatch,
                                       self.gen_len, self.cache_tokens)
-        aborted_ids = {r.rid for r in aborted}
+        aborted_ids = set()
+        for r in aborted:
+            if r.input_len + self.gen_len > self.cache_tokens:
+                # cannot fit even an empty partition under Algorithm 2's
+                # uniform gen_len reservation, so batch mode can never
+                # place it: abort permanently instead of re-queueing
+                # forever (continuous mode reserves per-request quotas
+                # instead and would admit some of these)
+                req = self.requests[r.rid]
+                req.aborted = True
+                req.done = True
+            else:
+                aborted_ids.add(r.rid)         # deferred to a later round
         admitted: List[List[ServeRequest]] = []
-        for mb in mbs[:self.num_ubs]:
+        for mb in mbs[:cap]:
             admitted.append([self.requests[r.rid] for r in mb.requests])
         admitted_ids = {r.rid for g in admitted for r in g}
         self.queue = [r for r in self.queue
-                      if r.rid in aborted_ids or r.rid not in admitted_ids]
+                      if not r.aborted and (r.rid in aborted_ids
+                                            or r.rid not in admitted_ids)]
         return admitted
+
+    # -------------------------------------------- incremental admission
+    def group_load(self, gid: int) -> Tuple[int, int]:
+        """(peak token footprint: prompt + full generation quota per live
+        row — already-generated tokens occupy cache, the rest is reserved —
+        live request count) over occupied slots."""
+        toks = cnt = 0
+        for s in self.slots[gid]:
+            if s.state in (SlotState.PREFILL, SlotState.DECODE) and s.req:
+                toks += s.req.input_len + s.req.max_new_tokens
+                cnt += 1
+        return toks, cnt
+
+    def admit_to_slots(self) -> List[Slot]:
+        """FCFS continuous admission: place queued requests into free slots
+        using Algorithm 2's balance criterion with exact per-request
+        reservations (live rows reserve their remaining quota, the
+        candidate its own max_new_tokens — not the batch-mode uniform
+        gen_len bound).  Marks chosen slots PREFILL and returns them; the
+        engine prefills and flips them to DECODE."""
+        assigned: List[Slot] = []
+        while self.queue:
+            req = self.queue[0]
+            loads = [self.group_load(g) for g in range(self.num_ubs)]
+            sums = [t for t, _ in loads]     # reservations already included
+            counts = [c for _, c in loads]
+            open_mask = [any(s.state == SlotState.FREE for s in grp)
+                         for grp in self.slots]
+            gid = place_request(req.input_len, sums, counts,
+                                gen_len=0, reserve=req.max_new_tokens,
+                                cache_size=self.cache_tokens,
+                                open_mask=open_mask)
+            if gid is None:
+                # would it fit an *empty* partition?  If not it never will:
+                # abort instead of livelocking at the head of the queue.
+                if req.input_len + req.max_new_tokens > self.cache_tokens:
+                    self.queue.pop(0)
+                    req.aborted = True
+                    req.done = True
+                    continue
+                break                      # wait for a slot/budget to free
+            slot = next(s for s in self.slots[gid]
+                        if s.state == SlotState.FREE)
+            self.queue.pop(0)
+            slot.req = req
+            slot.state = SlotState.PREFILL
+            slot.history.append(req.rid)
+            assigned.append(slot)
+        return assigned
+
+    # ---------------------------------------------------- slot lifecycle
+    def start_decode(self, slot: Slot) -> None:
+        assert slot.state == SlotState.PREFILL
+        slot.state = SlotState.DECODE
+
+    def drain(self, slot: Slot) -> None:
+        """Row finished (quota reached or EOS): decode output is masked
+        from here on; the slot awaits reset + reuse."""
+        assert slot.state in (SlotState.PREFILL, SlotState.DECODE)
+        slot.state = SlotState.DRAINED
+
+    def release(self, slot: Slot) -> None:
+        """Slot re-enters the free pool; its cache row stays masked until
+        the next admission's slot-insert fully overwrites it."""
+        assert slot.state == SlotState.DRAINED
+        slot.state = SlotState.FREE
+        slot.req = None
+
+    def has_live_slots(self) -> bool:
+        return any(s.state in (SlotState.PREFILL, SlotState.DECODE)
+                   for grp in self.slots for s in grp)

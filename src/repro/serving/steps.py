@@ -1,4 +1,5 @@
-"""Serving step functions: prefill and decode (serve_step).
+"""Serving step functions: prefill, decode (serve_step), and the masked
+multi-token ``decode_chunk`` used by the continuous-batching engine.
 
 These are the functions the dry-run lowers for the ``prefill_*`` /
 ``decode_*`` / ``long_*`` shapes, and the engine jits for real serving.
@@ -12,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.model import ExecPolicy, forward, unembed
+from repro.serving.sampling import sample
 
 
 def make_prefill_step(cfg: ModelConfig,
@@ -57,3 +59,49 @@ def make_serve_step(cfg: ModelConfig,
         return next_tok, logits, out["cache"]
 
     return serve_step
+
+
+def make_decode_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
+                      *, paged_blocks=None, temperature: float = 0.0,
+                      eos_id: int = 1, chunk: int = 8) -> Callable:
+    """Masked multi-token decode for the slot-pool engine: `chunk` decode
+    steps under one ``lax.scan`` so Python/dispatch overhead is amortized
+    between admission checks, with a per-row *active* mask so drained /
+    free slots are carried along at fixed shape without emitting tokens or
+    advancing their cache position.
+
+    (params, cache, tok (B,1), active (B,) bool, rem (B,) i32, key) ->
+    (cache, tok, active, rem, toks (chunk,B) i32, emitted (chunk,B) bool)
+
+    Per step, an active row samples a token, decrements its remaining
+    quota, and goes inactive on EOS or quota exhaustion; the emitted mask
+    marks exactly the (step, row) pairs whose token belongs to a request.
+    Inactive rows keep their `pos` (restored after the forward), which is
+    what isolates them from active neighbors; the fixed-shape forward
+    still scatters a KV write at their frozen `pos % W` slot each step,
+    so a drained row's cache content is garbage until `reset_slot` +
+    refill — it must never be read without that reset.
+    """
+
+    def decode_chunk(params, cache, tok, active, rem, key):
+        def body(carry, _):
+            cache, tok, active, rem, key = carry
+            pos0 = cache["pos"]
+            out = forward(cfg, params, tok, cache=cache, mode="decode",
+                          policy=policy, paged_blocks=paged_blocks)
+            logits = unembed(cfg, params, out["hidden"][:, -1])
+            key, sub = jax.random.split(key)
+            nxt = sample(logits, sub, temperature=temperature)
+            new_cache = out["cache"]
+            new_cache["pos"] = jnp.where(active, new_cache["pos"], pos0)
+            emitted = active
+            rem2 = rem - emitted.astype(jnp.int32)
+            active2 = active & (nxt != eos_id) & (rem2 > 0)
+            tok2 = jnp.where(active, nxt, tok[:, 0])[:, None]
+            return (new_cache, tok2, active2, rem2, key), (nxt, emitted)
+
+        (cache, tok, active, rem, key), (toks, emitted) = jax.lax.scan(
+            body, (cache, tok, active, rem, key), None, length=chunk)
+        return cache, tok, active, rem, toks, emitted
+
+    return decode_chunk

@@ -1,4 +1,7 @@
 """Algorithm 2 (request batching) — property-based invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.batching import Request, batch_requests

@@ -99,6 +99,7 @@ print(json.dumps({"ok": ok, "ndev": len(tree["w"].sharding.device_set)}))
     assert out["ok"] and out["ndev"] == 4
 
 
+@pytest.mark.slow
 def test_trainer_resume(tmp_path):
     """Kill-and-restart: a second Trainer on the same ckpt dir resumes at
     the saved step with identical params."""

@@ -3,6 +3,9 @@ accumulation, psum correctness on a 1-device mesh."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.compression import (compressed_psum, quantize_int8,

@@ -1,0 +1,236 @@
+"""Continuous-batching slot-pool engine: slot lifecycle invariants,
+masked-row emission, static/continuous greedy equivalence, incremental
+Algorithm-2 placement, per-slot cache reset isolation, and the over-long
+prompt guard."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.batching import place_request
+from repro.models import kvcache
+from repro.models.params import init_params
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Scheduler, SlotState
+
+
+@pytest.fixture(scope="module")
+def qwen_engine_setup():
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").smoke(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.key(3))
+    return cfg, params
+
+
+# ------------------------------------------------------------ lifecycle
+
+def test_drained_slot_reused_by_next_queued_request(qwen_engine_setup):
+    """More requests than slots: freed slots must be refilled mid-flight,
+    and every slot transition must end back at FREE."""
+    cfg, params = qwen_engine_setup
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=1, max_seq=64,
+                                           decode_chunk=2))
+    rng = np.random.default_rng(1)
+    rids = [eng.submit(rng.integers(2, cfg.vocab_size, 4), 3)
+            for _ in range(5)]
+    out = eng.run_until_idle()
+    assert set(out) == set(rids)
+    assert all(len(v) == 3 for v in out.values())
+    slots = [s for grp in eng.scheduler.slots for s in grp]
+    # 5 requests over 2 slots: at least one slot served >= 3 requests
+    assert sorted(len(s.history) for s in slots) == [2, 3]
+    served = [rid for s in slots for rid in s.history]
+    assert sorted(served) == sorted(rids)          # each rid exactly once
+    assert all(s.state is SlotState.FREE for s in slots)
+
+
+def test_masked_done_rows_never_emit(qwen_engine_setup):
+    """Skewed max_new_tokens: rows that finish early are masked — each
+    request gets exactly its quota, nothing more, and the engine's token
+    count matches the transcripts."""
+    cfg, params = qwen_engine_setup
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           decode_chunk=4))
+    rng = np.random.default_rng(2)
+    quotas = [2, 11, 3, 9, 2, 7]
+    rids = [eng.submit(rng.integers(2, cfg.vocab_size, 6), q)
+            for q in quotas]
+    out = eng.run_until_idle()
+    for rid, q in zip(rids, quotas):
+        assert len(out[rid]) == q, (rid, q, out[rid])
+    # tokens_out counts decode emissions: everything but the prefill token
+    assert eng.tokens_out == sum(q - 1 for q in quotas)
+
+
+def test_static_and_continuous_greedy_identical(qwen_engine_setup):
+    """The tentpole invariant: per-request greedy transcripts must be
+    bit-identical between whole-micro-batch (static) and slot-pool
+    (continuous) execution, across mixed lengths and quotas."""
+    cfg, params = qwen_engine_setup
+    rng = np.random.default_rng(3)
+    lens = (5, 9, 3, 7, 11, 6, 14)
+    quotas = (3, 9, 5, 9, 2, 7, 4)
+    prompts = [rng.integers(2, cfg.vocab_size, n) for n in lens]
+    outs = {}
+    for mode in ("static", "continuous"):
+        eng = Engine(cfg, params,
+                     EngineConfig(ubatch=3, num_ubs=2, max_seq=64,
+                                  mode=mode, decode_chunk=4))
+        for p, q in zip(prompts, quotas):
+            eng.submit(p, q)
+        outs[mode] = eng.run_until_idle()
+    assert outs["static"] == outs["continuous"]
+
+
+def test_continuous_paged_matches_resident(qwen_engine_setup):
+    cfg, params = qwen_engine_setup
+    prompts = [np.arange(2, 9), np.arange(3, 6), np.arange(2, 12)]
+    outs = []
+    for paged in (False, True):
+        eng = Engine(cfg, params, EngineConfig(ubatch=3, num_ubs=1,
+                                               max_seq=64, paged=paged,
+                                               decode_chunk=3))
+        for p in prompts:
+            eng.submit(p, 5)
+        outs.append(eng.run_until_idle())
+    assert outs[0] == outs[1]
+
+
+# ------------------------------------------------ long-prompt guard
+
+def test_long_prompt_rejected_not_crashing(qwen_engine_setup):
+    cfg, params = qwen_engine_setup
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=1, max_seq=32))
+    rng = np.random.default_rng(4)
+    rid_bad = eng.submit(rng.integers(2, cfg.vocab_size, 100), 4)
+    # passes the raw length check but prompt+generation would wrap the ring
+    rid_wrap = eng.submit(rng.integers(2, cfg.vocab_size, 30), 8)
+    rid_ok = eng.submit(rng.integers(2, cfg.vocab_size, 8), 4)
+    out = eng.run_until_idle()
+    for rid in (rid_bad, rid_wrap):
+        req = eng.scheduler.requests[rid]
+        assert req.aborted and req.done
+        assert out[rid] == []
+    assert len(out[rid_ok]) == 4
+
+
+def test_long_prompt_truncated_with_flag(qwen_engine_setup):
+    cfg, params = qwen_engine_setup
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=1, max_seq=32,
+                                           on_long_prompt="truncate"))
+    rng = np.random.default_rng(5)
+    rid = eng.submit(rng.integers(2, cfg.vocab_size, 100), 4)
+    out = eng.run_until_idle()
+    req = eng.scheduler.requests[rid]
+    assert not req.aborted
+    # prompt trimmed so prompt + generation fits the ring without wrapping
+    assert req.input_len == 32 - 4
+    assert len(out[rid]) == 4
+
+
+# ------------------------------------- incremental Algorithm-2 placement
+
+def test_place_request_balance_criterion():
+    # least-loaded open partition wins
+    assert place_request(10, [50, 20, 40], [2, 1, 2],
+                         gen_len=8, cache_size=1000) == 1
+    # closed partitions are skipped even when least loaded
+    assert place_request(10, [50, 20, 40], [2, 1, 2], gen_len=8,
+                         cache_size=1000,
+                         open_mask=[True, False, True]) == 2
+    # budget: sum + input + (1+count)*gen_len must fit
+    assert place_request(10, [0], [0], gen_len=8, cache_size=17) is None
+    assert place_request(10, [0], [0], gen_len=8, cache_size=18) == 0
+    # nothing open
+    assert place_request(10, [0, 0], [0, 0], gen_len=8, cache_size=100,
+                         open_mask=[False, False]) is None
+    # per-request reservation overrides the uniform gen_len for the
+    # candidate (co-residents' reservations folded into partition_sums)
+    assert place_request(10, [24], [1], gen_len=0, reserve=4,
+                         cache_size=38) == 0
+    assert place_request(10, [24], [1], gen_len=0, reserve=4,
+                         cache_size=37) is None
+
+
+def test_scheduler_aborts_never_fitting_request():
+    s = Scheduler(ubatch=2, num_ubs=1, cache_tokens=40, gen_len=32,
+                  max_input_len=None)
+    rid = s.submit(np.arange(20, dtype=np.int32), 25)   # 20 + 25 > 40
+    assigned = s.admit_to_slots()
+    assert assigned == []
+    assert s.requests[rid].aborted
+
+
+def test_continuous_reserves_per_request_quota_not_uniform_gen_len():
+    """A small-quota request must be admitted even when the batch-mode
+    uniform gen_len=32 reservation would not fit (continuous admission
+    reserves each request's own max_new_tokens)."""
+    s = Scheduler(ubatch=1, num_ubs=1, cache_tokens=40, gen_len=32,
+                  max_input_len=None)
+    rid = s.submit(np.arange(20, dtype=np.int32), 4)    # 20 + 4 <= 40
+    assigned = s.admit_to_slots()
+    assert [sl.req.rid for sl in assigned] == [rid]
+    assert not s.requests[rid].aborted
+
+
+def test_static_admit_also_aborts_never_fitting_request():
+    """Batch-mode admission must not re-queue a request that can never
+    fit an empty partition (it would spin in the queue forever)."""
+    s = Scheduler(ubatch=2, num_ubs=1, cache_tokens=40, gen_len=32,
+                  max_input_len=None)
+    rid_bad = s.submit(np.arange(20, dtype=np.int32), 4)    # 20 + 32 > 40
+    rid_ok = s.submit(np.arange(4, dtype=np.int32), 4)      # 4 + 32 <= 40
+    groups = s.admit()
+    assert [[r.rid for r in g] for g in groups] == [[rid_ok]]
+    assert s.requests[rid_bad].aborted and s.requests[rid_bad].done
+    assert s.queue == []
+
+
+# --------------------------------------------------- per-slot cache ops
+
+def test_reset_slot_isolates_neighbors(qwen_f32):
+    cfg = qwen_f32
+    B, W = 3, 16
+    cache = kvcache.init_cache(cfg, B, W)
+    # dirty every row
+    cache["pos"] = jnp.asarray([3, 5, 7], jnp.int32)
+    spec = cfg.period[0]
+    lc = cache["p0"]
+    dirty = jax.tree.map(lambda a: a + 1 if a.dtype != jnp.int32 else a, lc)
+    dirty["slot_pos"] = jnp.zeros_like(lc["slot_pos"])
+    cache["p0"] = dirty
+    fresh = kvcache.init_cache(cfg, B, W)
+
+    out = kvcache.reset_slot(cache, 1)
+    # row 1 equals the fresh init row
+    for name in ("k", "v", "slot_pos"):
+        np.testing.assert_array_equal(np.asarray(out["p0"][name][:, 1]),
+                                      np.asarray(fresh["p0"][name][:, 1]))
+    assert int(out["pos"][1]) == 0
+    # neighbors untouched
+    for row in (0, 2):
+        for name in ("k", "v", "slot_pos"):
+            np.testing.assert_array_equal(
+                np.asarray(out["p0"][name][:, row]),
+                np.asarray(cache["p0"][name][:, row]))
+        assert int(out["pos"][row]) == int(cache["pos"][row])
+
+
+def test_insert_slot_writes_single_row(qwen_f32):
+    cfg = qwen_f32
+    pool = kvcache.init_cache(cfg, 3, 16)
+    single = kvcache.init_cache(cfg, 1, 16)
+    single["pos"] = jnp.asarray([4], jnp.int32)
+    single["p0"] = jax.tree.map(lambda a: a + 2, single["p0"])
+    out = kvcache.insert_slot(pool, single, 2)
+    for name in ("k", "v", "slot_pos"):
+        np.testing.assert_array_equal(np.asarray(out["p0"][name][:, 2]),
+                                      np.asarray(single["p0"][name][:, 0]))
+        for row in (0, 1):
+            np.testing.assert_array_equal(
+                np.asarray(out["p0"][name][:, row]),
+                np.asarray(pool["p0"][name][:, row]))
+    assert int(out["pos"][2]) == 4

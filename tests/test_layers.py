@@ -98,6 +98,7 @@ def test_decode_valid_mask_window():
         decode_valid_mask(slot_pos, pos, 2)[0], [False, True, True, False])
 
 
+@pytest.mark.slow
 def test_mla_absorbed_decode_equals_naive_prefill(rng):
     """The absorbed decode path must produce the same output as the naive
     (decompressed) attention at the same position."""

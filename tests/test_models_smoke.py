@@ -14,6 +14,8 @@ from repro.models.params import init_params
 from repro.training.optimizer import OptConfig, init_opt_state
 from repro.training.train_step import make_train_step
 
+pytestmark = pytest.mark.slow      # all-arch sweep, multi-minute
+
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward(arch):

@@ -13,6 +13,8 @@ from repro.models import forward, unembed
 from repro.models import kvcache
 from repro.models.params import init_params
 
+pytestmark = pytest.mark.slow      # all-family sweep, multi-minute
+
 FAMS = ["qwen2.5-3b", "gemma2-2b", "deepseek-v3-671b", "mamba2-1.3b",
         "jamba-1.5-large-398b", "whisper-small"]
 

@@ -111,6 +111,7 @@ print(json.dumps({"ref": float(m_ref["loss"]), "dist": float(m_dist["loss"]),
 """
 
 
+@pytest.mark.slow
 def test_multidevice_train_step_matches_single(tmp_path):
     """8 fake devices, MoE arch on the production sharding plan: the
     distributed loss/grad-norm must match the single-device reference."""
@@ -166,6 +167,7 @@ print(json.dumps({"rel": rel}))
 """
 
 
+@pytest.mark.slow
 def test_decode_2d_stationary_weights_matches_single():
     """The 2D stationary-weights decode plan (batch replicated, weights
     sharded over data x model, activation psums) must be numerically

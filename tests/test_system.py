@@ -14,6 +14,7 @@ from repro.serving.engine import Engine, EngineConfig
 from repro.training.trainer import Trainer, TrainConfig
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg = get_config("olmo-1b").smoke()
     t = Trainer(cfg, TrainConfig(steps=30, batch_size=4, seq_len=64,
@@ -24,6 +25,7 @@ def test_training_reduces_loss():
     assert losses[-1] < losses[0] - 0.2, losses
 
 
+@pytest.mark.slow
 def test_training_moe_reduces_loss():
     cfg = get_config("mixtral-8x7b").smoke()
     t = Trainer(cfg, TrainConfig(steps=20, batch_size=4, seq_len=48,
@@ -33,6 +35,7 @@ def test_training_moe_reduces_loss():
     assert losses[-1] < losses[0] - 0.1, losses
 
 
+@pytest.mark.slow
 def test_microbatched_equals_full_batch_gradients():
     """Gradient accumulation must match the single-step update."""
     from repro.models.inputs import concrete_inputs
