@@ -10,7 +10,13 @@ with batched requests through the full MoE-Lightning pipeline —
      mid-flight, so skewed generation lengths don't strand decode rows.
 
   PYTHONPATH=src python examples/offloaded_serving.py \
-      [--requests 32] [--mode continuous|static] [--skew]
+      [--requests 32] [--mode continuous|static] [--skew] \
+      [--overlap] [--long-prompts]
+
+``--overlap`` stages admission as chunked prefill interleaved with the
+decode chunks (request-level CGOPipe); pair with ``--long-prompts`` to
+see it matter — long varied-length prompts otherwise stall every decode
+group for a whole-prompt (freshly compiled) prefill.
 """
 import argparse
 import time
@@ -41,6 +47,12 @@ def main():
     ap.add_argument("--skew", action="store_true",
                     help="mix short (gen-len/4) and long (gen-len) "
                          "generations to show slot recycling")
+    ap.add_argument("--overlap", action="store_true",
+                    help="staged chunked-prefill admission interleaved "
+                         "with decode (continuous mode only)")
+    ap.add_argument("--long-prompts", action="store_true",
+                    help="draw prompts from 16..48 tokens instead of "
+                         "4..24 (shows what --overlap buys)")
     args = ap.parse_args()
 
     print(f"params: {count_params(LM_110M) / 1e6:.1f}M")
@@ -59,10 +71,12 @@ def main():
     eng = Engine(LM_110M, params,
                  EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
                               paged=args.paged, page_elems=1 << 18,
-                              mode=args.mode))
+                              mode=args.mode, overlap=args.overlap,
+                              prefill_chunk=16))
     rng = np.random.default_rng(0)
+    lo, hi = (16, 49) if args.long_prompts else (4, 25)
     for i in range(args.requests):
-        n = int(rng.integers(4, 25))
+        n = int(rng.integers(lo, hi))
         gen = (max(1, args.gen_len // 4) if args.skew and i % 2 == 0
                else args.gen_len)
         eng.submit(rng.integers(2, LM_110M.vocab_size, n), gen)
@@ -72,7 +86,7 @@ def main():
     toks = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s, paged={args.paged}, mode={args.mode}, "
-          f"engine ticks={eng.steps})")
+          f"overlap={args.overlap}, engine ticks={eng.steps})")
     if args.mode == "continuous":
         fills = [len(s.history)
                  for grp in eng.scheduler.slots for s in grp]

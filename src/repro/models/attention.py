@@ -59,6 +59,40 @@ def decode_valid_mask(slot_pos, pos, window: int):
     return v
 
 
+def chunk_valid_mask(slot_pos, q_positions, window: int):
+    """Multi-query variant for chunked prefill: q_positions (B,S) absolute
+    query positions; returns (B,S,W).  Because the chunk's own KV is
+    written into the ring *before* attention, intra-chunk causality falls
+    out of the same slot_pos <= q_pos test as history does."""
+    sp = slot_pos[:, None, :]
+    v = (sp >= 0) & (sp <= q_positions[:, :, None])
+    if window:
+        v &= sp > (q_positions[:, :, None] - window)
+    return v
+
+
+def chunk_attention_ring(q, k, v, valid, *, scale: float,
+                         attn_softcap: float = 0.0):
+    """Chunked-prefill attention: S chunk queries against the full ring.
+    q: (B,S,H,D); k/v: (B,W,Hkv,Dv); valid: (B,S,W) bool.
+    Returns (B,S,H,Dv) f32 — the multi-query generalization of
+    attention_partials + combine_partials."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, g, D)
+    s = jnp.einsum("bshgd,bwhd->bshgw", qf, k.astype(jnp.float32))
+    s = softcap(s, attn_softcap)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None]) * (s > NEG_INF / 2)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bshgw,bwhd->bshgd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, S, H, v.shape[-1])
+
+
 # ---------------------------------------------------------------------------
 # GQA block
 # ---------------------------------------------------------------------------
@@ -115,6 +149,27 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
         else:
             o = combine_partials(*attention_partials(*args, **kw))
         o = o[:, None].astype(x.dtype)                      # (B,1,H,Dh)
+    elif mode == "chunk":
+        # chunked prefill at a row offset: write this chunk's KV into the
+        # ring at its absolute positions, then attend the chunk's queries
+        # against the whole ring (history + the chunk itself) under the
+        # slot_pos validity mask.  Padded chunk tail positions are clamped
+        # by the caller to one-past-the-end, so they land in a single slot
+        # that stays causally masked until decode overwrites it.
+        assert cache is not None and kv_override is None
+        new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
+        # admission chunks run on a batch-1 scratch (or rows sharing one
+        # offset), so the ring scatter uses row 0's positions
+        new_cache = kvcache.write_prefill(cache, new,
+                                          positions[0].astype(jnp.int32))
+        if quantized:
+            kc, vc = kvcache.dequantize_kv(new_cache)
+        else:
+            kc, vc = new_cache["k"], new_cache["v"]
+        valid = chunk_valid_mask(new_cache["slot_pos"], positions, window)
+        o = chunk_attention_ring(q, kc, vc, valid, scale=scale,
+                                 attn_softcap=cfg.attn_softcap)
+        o = o.astype(x.dtype)                               # (B,S,H,Dh)
     elif kv_override is not None:
         # cross-attention (non-causal over encoder positions)
         o = chunked_attention(q, k, v, causal=False, scale=scale,
@@ -186,6 +241,24 @@ def mla_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
         # o_lat: (B,H,r) attention-weighted latents; decompress with W_uv
         o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
         o = o[:, None].astype(x.dtype)                          # (B,1,H,dv)
+    elif mode == "chunk":
+        # chunked prefill: persist this chunk's latents at their absolute
+        # positions, then run the naive (decompressed) form over the ring
+        assert cache is not None
+        new_cache = kvcache.write_prefill(cache, {"ckv": ckv, "kr": kr},
+                                          positions[0].astype(jnp.int32))
+        ckv_r = new_cache["ckv"].astype(jnp.float32)            # (B,W,r)
+        k_nope_r = jnp.einsum("bwr,rhd->bwhd", ckv_r,
+                              wuk.astype(jnp.float32))
+        v_r = jnp.einsum("bwr,rhd->bwhd", ckv_r, wuv.astype(jnp.float32))
+        W = ckv_r.shape[1]
+        kr_r = jnp.broadcast_to(new_cache["kr"][:, :, None, :],
+                                (B, W, H, dr)).astype(jnp.float32)
+        k_r = jnp.concatenate([k_nope_r, kr_r], -1)
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        valid = chunk_valid_mask(new_cache["slot_pos"], positions, 0)
+        o = chunk_attention_ring(qfull, k_r, v_r, valid,
+                                 scale=scale).astype(x.dtype)
     else:
         k_nope = jnp.einsum("bsr,rhd->bshd", ckv, wuk.astype(ckv.dtype))
         v = jnp.einsum("bsr,rhd->bshd", ckv, wuv.astype(ckv.dtype))

@@ -143,6 +143,56 @@ def insert_slot(cache: Dict, single: Dict, row) -> Dict:
     return out
 
 
+# leaves whose third axis is NOT the ring (SSM recurrent state / conv tails
+# and whisper cross-attention KV over encoder positions): a span copy makes
+# no sense for them, so partial inserts copy the whole row instead
+_NON_RING_LEAVES = ("conv_x", "conv_B", "conv_C", "state")
+
+
+def insert_slot_span(cache: Dict, single: Dict, row, start,
+                     *, length: int) -> Dict:
+    """Partial slot insert at a row offset: copy only the ring slots
+    holding absolute positions [start, start + length) of batch row 0 of
+    `single` into batch row `row` of the pooled `cache` (plus `single`'s
+    row-0 pos).  This is the chunked-prefill admission path — each staged
+    prefill chunk lands in the pool as soon as it is computed instead of
+    one whole-row copy at the end, so per-tick work stays bounded.
+
+    `length` must be static (one jit specialization per chunk-width
+    bucket); `start` may be traced.  Ring indices are taken modulo each
+    leaf's own ring width, so sliding-window layers wrap correctly.
+    NOTE unlike `insert_slot`, a span write does not clear the rest of the
+    row — callers must `reset_slot` the target row once before the first
+    span of a new request (stale `slot_pos` entries from the previous
+    occupant would otherwise leak into attention masks)."""
+    span = jnp.asarray(start, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
+
+    def copy(name, a, b):
+        if name in _NON_RING_LEAVES or a.shape[2:] != b.shape[2:] \
+                or a.ndim < 3:
+            return a.at[:, row].set(b[:, 0].astype(a.dtype))
+        idx = span % a.shape[2]
+        return a.at[:, row, idx].set(b[:, 0, idx].astype(a.dtype))
+
+    out = {}
+    for k, v in cache.items():
+        if k == "pos":
+            out[k] = v.at[row].set(single[k][0])
+        elif k == "xattn":
+            out[k] = jax.tree.map(
+                lambda a, b: a.at[:, row].set(b[:, 0].astype(a.dtype)),
+                v, single[k])
+        else:
+            out[k] = {}
+            for name in v:
+                out[k][name] = (
+                    {n: copy(n, v[name][n], single[k][name][n])
+                     for n in v[name]}
+                    if isinstance(v[name], dict)
+                    else copy(name, v[name], single[k][name]))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Ring-buffer writes.  All write helpers operate on a *single layer slice*
 # (no leading stack dim) — model.py maps them over the stack inside scan.

@@ -167,6 +167,12 @@ def mamba_forward(cfg: ModelConfig, p: Dict, x, *, cache: Optional[Dict],
         return jax.nn.silu(v.astype(jnp.float32)).astype(x.dtype)
 
     new_cache = cache
+    if mode == "chunk":
+        # chunked prefill would need the conv tail + SSM state carried
+        # across chunks; the engine gates overlap admission to
+        # attention-only configs, so reaching here is a bug
+        raise NotImplementedError(
+            "chunked prefill is not supported for SSM layers")
     if mode == "decode":
         assert S == 1 and cache is not None
         xs, new_cx = conv_step(xr[:, 0], cache["conv_x"], p["conv_x"],

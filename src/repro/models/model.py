@@ -211,9 +211,17 @@ def encoder_forward(cfg: ModelConfig, params, frames, policy=None):
 
 def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
             frames=None, patches=None, policy: Optional[ExecPolicy] = None,
-            paged_blocks=None):
-    """tokens: (B,S) int32.  mode: train | prefill | decode.
+            paged_blocks=None, fill_len=None):
+    """tokens: (B,S) int32.  mode: train | prefill | decode | chunk_prefill.
     Returns dict(hidden, cache, aux_loss).  Call `unembed` for logits.
+
+    chunk_prefill processes one fixed-width prompt chunk at the row offset
+    recorded in cache["pos"]: the chunk's KV is written into the ring at
+    absolute positions pos..pos+S-1 and its queries attend to the whole
+    ring (history + chunk) under the slot_pos mask.  `fill_len` ((B,) i32)
+    gives the true token count of the chunk; padded tail positions are
+    clamped to pos+fill_len so they collapse into one causally-masked slot
+    instead of wrapping the ring.
 
     paged_blocks: optional (pages_dict, manifests) from
     core.paging.pack_block_groups — replaces params['blocks'] with paged
@@ -225,6 +233,14 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
         pos = cache["pos"]                           # (B,)
         positions = pos[:, None]
         run_mode = "decode"
+    elif mode == "chunk_prefill":
+        assert cache is not None
+        pos = None
+        off = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if fill_len is not None:
+            off = jnp.minimum(off, fill_len[:, None])
+        positions = cache["pos"][:, None] + off
+        run_mode = "chunk"
     else:
         pos = None
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
@@ -266,7 +282,7 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
     x, aux, npc, nxc = _run_group(
         cfg, cfg.period, blocks, x, n_steps=cfg.num_periods,
         positions=positions, cache_group=cache_group,
-        mode="decode" if mode == "decode" else "full",
+        mode=run_mode if run_mode in ("decode", "chunk") else "full",
         pos=pos, enc_out=enc_out, xattn_group=xattn_group, policy=policy,
         manifests=manifests)
     aux_total += aux
@@ -276,6 +292,8 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
         if nxc is not None:
             new_cache["xattn"] = nxc
         step = jnp.int32(1) if mode == "decode" else jnp.int32(S)
+        if mode == "chunk_prefill" and fill_len is not None:
+            step = fill_len.astype(jnp.int32)        # per-row true fill
         new_cache["pos"] = cache["pos"] + step
 
     x = apply_norm(cfg, params.get("final_norm", {}), x)

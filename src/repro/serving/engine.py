@@ -14,14 +14,28 @@ Slot-pool architecture (default, ``mode="continuous"``):
     (core.batching.place_request) — the effective batch stays saturated
     under the fixed cache budget instead of waiting for whole
     micro-batches to retire;
-  * admission prefills one request at a bucketed prompt width (batch 1,
-    compiled once per bucket) and writes its KV into the target slot row;
+  * admission prefills a request either monolithically at a bucketed
+    prompt width (batch 1, compiled once per bucket), or — with
+    ``overlap=True`` — as a *staged chunked prefill*: the prompt drains
+    through fixed-width chunks (compiled once per chunk bucket), one
+    chunk per engine tick, interleaved with every group's decode chunk.
+    This is Algorithm 1's CGOPipe idea applied at request level: a long
+    admission no longer stalls the decode groups, and prefill shapes stay
+    fixed so novel prompt lengths never trigger fresh XLA compiles on the
+    serving path.  Each chunk runs on a double-buffered batch-1 scratch
+    cache and lands in the pool row immediately via a partial slot insert
+    at the row offset (kvcache.insert_slot_span), keeping per-tick copy
+    work bounded and the pool cache donated on the hot path;
   * decode runs one jit-stable fixed-shape chunk per rotation group
     (serving.steps.``decode_chunk``): ``decode_chunk`` tokens under an
     inner ``lax.scan`` with a per-row *active* mask, so finished rows are
     masked — they emit nothing and their cache position is frozen —
     rather than resampled, and Python/dispatch overhead is amortized
     between admission checks;
+  * reservations are worst-case remaining quota by default, or EOS-aware
+    (``reserve_mode="ewma"``): expected generation lengths from a running
+    EWMA, with recompute preemption when the optimism was wrong (the
+    scheduler's ``enforce_budget`` runs before every group decode);
   * groups still rotate in CGOPipe launch order (Algorithm 1): while
     group j runs its accelerator half, group j+1's attention inputs and
     the next layer's weight pages are in flight (on TPU the pages live in
@@ -30,13 +44,15 @@ Slot-pool architecture (default, ``mode="continuous"``):
 
 ``mode="static"`` keeps the original whole-micro-batch semantics — a
 group is admitted as a unit and retired only when every row finishes —
-as the baseline that benchmarks/bench_engine.py compares against.  Both
+as the baseline that benchmarks/bench_engine.py compares against.  All
 modes share the same masked decode step (static uses chunk size 1 so it
 can retire groups every token), so greedy outputs per request are
-bit-identical across modes.
+bit-identical across static / continuous / overlapped admission.
 
 ``paged=True`` routes weights through core.paging (pack_block_groups) —
 the 2×W_L double-buffer lives in XLA's scan pipelining on TPU.
+
+See DESIGN.md for the slot pool + admission walkthrough.
 """
 from __future__ import annotations
 
@@ -50,10 +66,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import paging
 from repro.models import kvcache
-from repro.models.model import ExecPolicy, forward, unembed
+from repro.models.model import ExecPolicy
 from repro.serving import steps as serve_steps
 from repro.serving.sampling import sample
-from repro.serving.scheduler import Scheduler, ServeRequest, SlotState
+from repro.serving.scheduler import Scheduler, ServeRequest, Slot, SlotState
 
 
 @dataclass
@@ -69,6 +85,13 @@ class EngineConfig:
     mode: str = "continuous"          # "continuous" | "static"
     decode_chunk: int = 8             # tokens per inner scan (continuous)
     on_long_prompt: str = "reject"    # "reject" | "truncate" (> max_seq)
+    overlap: bool = False             # staged chunked-prefill admission
+    prefill_chunk: int = 32           # chunk width for overlapped prefill
+    reserve_mode: str = "worst"       # "worst" | "ewma" (EOS-aware)
+    cache_tokens: Optional[int] = None  # per-group KV policy budget;
+    # default = the physical pool slice (max_seq × ubatch).  A tighter
+    # budget (e.g. from the HRM policy) is what makes EOS-aware
+    # reservations bite: more concurrent admissions, preemption on miss.
 
 
 class _SlotGroup:
@@ -99,15 +122,18 @@ class Engine:
         self.policy = policy
         self.scheduler = Scheduler(
             ubatch=ecfg.ubatch, num_ubs=ecfg.num_ubs,
-            cache_tokens=ecfg.max_seq * ecfg.ubatch, gen_len=32,
-            max_input_len=ecfg.max_seq, on_long_prompt=ecfg.on_long_prompt)
+            cache_tokens=ecfg.cache_tokens or ecfg.max_seq * ecfg.ubatch,
+            gen_len=32, max_input_len=ecfg.max_seq,
+            on_long_prompt=ecfg.on_long_prompt,
+            reserve_mode=ecfg.reserve_mode)
         self.active: List[_ActiveBatch] = []          # static mode only
         self.key = jax.random.key(ecfg.seed)
         self.paged_blocks = None
         if ecfg.paged:
             self.paged_blocks = paging.pack_block_groups(
                 params["blocks"], ecfg.page_elems)
-        self._prefill = jax.jit(self._prefill_fn)
+        self._prefill = jax.jit(serve_steps.make_prefill_fill_step(
+            cfg, policy, paged_blocks=self.paged_blocks))
         chunk = ecfg.decode_chunk if ecfg.mode == "continuous" else 1
         # the pool cache is donated on the hot path so slot writes and
         # chunk decodes update it in place instead of copying the pool
@@ -127,20 +153,32 @@ class Engine:
             # batch-1 admission-prefill input: _prefill is functional, so
             # this stays pristine and is reused for every admission
             self._prefill_scratch = kvcache.init_cache(cfg, 1, ecfg.max_seq)
+        # ------------------------------ overlapped (chunked) admission
+        self._staged: List[Slot] = []      # PREFILL slots, FIFO
+        self._stage_scratch = None         # scratch of the in-flight head
+        self._free_scratches = []
+        if ecfg.overlap:
+            if ecfg.mode != "continuous":
+                raise ValueError("overlap admission requires continuous mode")
+            specs = list(cfg.period) + list(cfg.prologue or ())
+            if cfg.encoder_layers or \
+                    any(s.cache_kind() == "ssm" for s in specs):
+                raise ValueError(
+                    "overlapped chunked-prefill admission needs "
+                    "attention-only configs (no SSM / encoder layers)")
+            self._prefill_chunk = jax.jit(serve_steps.make_prefill_chunk(
+                cfg, policy, paged_blocks=self.paged_blocks),
+                donate_argnums=(2,))
+            self._insert_span = jax.jit(
+                kvcache.insert_slot_span, static_argnames=("length",),
+                donate_argnums=(0,))
+            self._reset = jax.jit(kvcache.reset_slot, donate_argnums=(0,))
+            # double-buffered: the next admission's first chunk dispatches
+            # against one scratch while the previous one's reset drains
+            self._free_scratches = [
+                kvcache.init_cache(cfg, 1, ecfg.max_seq) for _ in range(2)]
         self.steps = 0
         self.tokens_out = 0
-
-    # -------------------------------------------------------- jitted fns
-    def _prefill_fn(self, params, tokens, cache, lens):
-        out = forward(self.cfg, params, tokens, cache=cache, mode="prefill",
-                      policy=self.policy, paged_blocks=self.paged_blocks)
-        cache = out["cache"]
-        cache["pos"] = lens.astype(jnp.int32)       # per-row true lengths
-        idx = jnp.maximum(lens - 1, 0)
-        hidden = jnp.take_along_axis(
-            out["hidden"], idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        logits = unembed(self.cfg, params, hidden)
-        return logits, cache
 
     # ----------------------------------------------------------- public
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
@@ -151,7 +189,9 @@ class Engine:
         """One engine tick: admit new work, then decode every rotation
         group in CGOPipe launch order (Algorithm 1).  Continuous mode
         decodes a `decode_chunk`-token masked chunk per group and recycles
-        slots that drain; static mode decodes one token per active
+        slots that drain; with ``overlap=True`` admission itself is staged
+        — one prompt chunk is prefilled per tick, round-robin with the
+        decode chunks.  Static mode decodes one token per active
         micro-batch and retires whole groups.  Returns True if any work
         was done."""
         if self.ecfg.mode == "static":
@@ -168,6 +208,15 @@ class Engine:
         # bucket the padded prompt length so prefill compiles once per
         # bucket, not once per distinct length
         return min(-(-input_len // 16) * 16, self.ecfg.max_seq)
+
+    def _chunk_bucket(self, rem: int) -> int:
+        # next power of two capped at the full chunk width — mid-prompt
+        # chunks always get the full width, the final partial chunk a
+        # smaller bucket, so a C-wide config compiles ≤ log2(C)+1 shapes
+        w = 1
+        while w < rem:
+            w <<= 1
+        return min(w, self.ecfg.prefill_chunk)
 
     def _decode_group(self, cache, last_tok, active, rem):
         """Run one masked decode chunk; returns (cache, new_last_tok,
@@ -192,52 +241,115 @@ class Engine:
                     count += 1
         return count
 
+    def _sample_first(self, logits) -> int:
+        self.key, k = jax.random.split(self.key)
+        return int(np.asarray(
+            sample(logits, k, temperature=self.ecfg.temperature))[0])
+
     # ------------------------------------------------- continuous mode
     def _admit_continuous(self):
         """Fill freed slots: per admitted request, prefill at its own
-        bucket width (batch 1) and slot-write the KV into the pool row."""
+        bucket width (batch 1) and slot-write the KV into the pool row.
+        Re-admitted (preempted) requests prefill prompt + transcript."""
         for slot in self.scheduler.admit_to_slots():
             r = slot.req
-            S = self._bucket(r.input_len)
+            eff = r.effective_prompt
+            S = self._bucket(len(eff))
             toks = np.zeros((1, S), np.int32)
-            toks[0, :r.input_len] = r.prompt
+            toks[0, :len(eff)] = eff
             logits, single = self._prefill(
                 self.params, jnp.asarray(toks), self._prefill_scratch,
-                jnp.asarray([r.input_len], np.int32))
-            self.key, k = jax.random.split(self.key)
-            first = int(np.asarray(
-                sample(logits, k, temperature=self.ecfg.temperature))[0])
+                jnp.asarray([len(eff)], np.int32))
+            first = self._sample_first(logits)
             r.generated.append(first)
             group = self.groups[slot.gid]
             group.cache = self._insert(group.cache, single, slot.row)
             group.last_tok[slot.row] = first
             if len(r.generated) >= r.max_new_tokens:
-                self._retire_slot(slot)          # 1-token request
+                self._retire_slot(slot)          # quota met at prefill
             else:
                 self.scheduler.start_decode(slot)
+
+    # -------------------------------------- overlapped (staged) admission
+    def _prefill_tick(self) -> bool:
+        """Run ONE chunk of the staged admission at the head of the
+        prefill queue (request-level CGOPipe: admission work interleaves
+        with the groups' decode chunks instead of stalling them)."""
+        if not self._staged:
+            return False
+        slot = self._staged[0]
+        r = slot.req
+        group = self.groups[slot.gid]
+        if self._stage_scratch is None:          # head starts fresh
+            self._stage_scratch = self._free_scratches.pop()
+            # invalidate the previous occupant's remnants once: span
+            # inserts only overwrite their own ring range
+            group.cache = self._reset(group.cache, np.int32(slot.row))
+        eff = r.effective_prompt
+        t = slot.prefill_pos
+        rem = len(eff) - t
+        width = self._chunk_bucket(rem)
+        n = min(rem, width)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :n] = eff[t:t + n]
+        logits, self._stage_scratch = self._prefill_chunk(
+            self.params, jnp.asarray(toks), self._stage_scratch,
+            jnp.asarray([n], np.int32))
+        # partial slot insert at the row offset: the chunk lands in the
+        # pool immediately, so the final flip to DECODE copies nothing
+        group.cache = self._insert_span(
+            group.cache, self._stage_scratch, np.int32(slot.row),
+            np.int32(t), length=width)
+        self.scheduler.prefill_progress(slot, n)
+        if slot.prefill_pos >= len(eff):         # final chunk: first token
+            first = self._sample_first(logits)
+            r.generated.append(first)
+            group.last_tok[slot.row] = first
+            # recycle the scratch (reset drains while the next admission's
+            # first chunk dispatches against the other buffer)
+            self._free_scratches.append(
+                self._reset(self._stage_scratch, np.int32(0)))
+            self._stage_scratch = None
+            self._staged.pop(0)
+            if len(r.generated) >= r.max_new_tokens:
+                self._retire_slot(slot)
+            else:
+                self.scheduler.start_decode(slot)
+        return True
 
     def _retire_slot(self, slot):
         # no cache reset here: the row stays masked while free, and the
         # next admission's insert_slot overwrites every leaf of the row
         # (kvcache.reset_slot exists for paths that must hand back a
         # clean row without refilling it)
-        slot.req.done = True
-        self.scheduler.drain(slot)
-        self.scheduler.release(slot)
+        self.scheduler.finish(slot)
 
     def _step_continuous(self) -> bool:
-        self._admit_continuous()
-        if not self.scheduler.has_live_slots():
+        if self.ecfg.overlap:
+            self._staged.extend(self.scheduler.admit_to_slots())
+            did = self._prefill_tick()
+            # cold pool: nothing is decodable yet, so drain prefill chunks
+            # back-to-back instead of trickling one per (idle) tick
+            while (did and self._staged and not any(
+                    s.state == SlotState.DECODE
+                    for grp in self.scheduler.slots for s in grp)):
+                did = self._prefill_tick()
+        else:
+            self._admit_continuous()
+            did = False
+        if not (did or self.scheduler.has_live_slots()):
             return False
         for gid, group in enumerate(self.groups):     # CGOPipe rotation
+            # EOS-aware reservations are optimistic: preempt (recompute)
+            # the youngest rows if this chunk could blow the group budget
+            self.scheduler.enforce_budget(gid, self.ecfg.decode_chunk)
             slots = self.scheduler.slots[gid]
             active = np.array([s.state == SlotState.DECODE for s in slots])
             if not active.any():
                 continue
             rem = np.array(
-                [s.req.max_new_tokens - len(s.req.generated)
-                 if s.state == SlotState.DECODE else 0 for s in slots],
-                np.int32)
+                [s.req.remaining if s.state == SlotState.DECODE else 0
+                 for s in slots], np.int32)
             group.cache, group.last_tok, act2, toks, emitted = \
                 self._decode_group(group.cache, group.last_tok, active, rem)
             self.tokens_out += self._emit(

@@ -11,9 +11,28 @@ Two admission modes:
     (core.batching.place_request), used by the continuous engine to refill
     drained slots mid-flight.
 
+Reservation policy (continuous mode), ``reserve_mode``:
+
+  * ``"worst"`` — every live request reserves its full remaining quota.
+    Admission alone guarantees a group's KV footprint can never exceed
+    ``cache_tokens``.
+  * ``"ewma"`` — EOS-aware: live requests reserve the *expected* remaining
+    generation length, fed by a running EWMA of observed generation
+    lengths (core.batching.GenLenEWMA).  Admission is optimistic, so the
+    engine must call ``enforce_budget`` before each decode chunk; when the
+    optimism was wrong, the youngest request in the group is *preempted* —
+    its slot freed and the request re-queued at its FCFS position.  A
+    preempted request keeps its transcript: re-admission prefills
+    prompt + generated-so-far (recompute preemption), so greedy output is
+    unchanged.
+
 Slot lifecycle: FREE → PREFILL → DECODE → DRAINED → FREE.  A slot is one
 batch row of one rotation group's pooled KV cache; `Slot.history` records
 every request id the slot has served (slot recycling is observable).
+`Slot.prefill_pos` is the staged-admission sub-state: how many prompt
+tokens have been chunk-prefilled so far (overlapped admission drains a
+long prompt through PREFILL across many engine ticks while other slots
+keep decoding).
 """
 from __future__ import annotations
 
@@ -24,7 +43,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.batching import Request, batch_requests, place_request
+from repro.core.batching import (GenLenEWMA, Request, batch_requests,
+                                 place_request)
 
 
 @dataclass
@@ -35,10 +55,32 @@ class ServeRequest:
     generated: List[int] = field(default_factory=list)
     done: bool = False
     aborted: bool = False
+    preemptions: int = 0             # times evicted + re-queued (ewma mode)
 
     @property
     def input_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """What (re-)admission must prefill: the prompt plus everything
+        generated before a preemption.  Greedy re-prefill of this prefix
+        reproduces the request's continuation exactly (the final-position
+        logits are the logits that produced the next token)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+    @property
+    def footprint(self) -> int:
+        """KV tokens this request occupies once its pending token lands:
+        prompt + generated so far (invariant across preemptions)."""
+        return self.input_len + len(self.generated)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
 
 
 class SlotState(enum.Enum):
@@ -54,13 +96,15 @@ class Slot:
     row: int                          # batch row within the group's cache
     state: SlotState = SlotState.FREE
     req: Optional[ServeRequest] = None
+    prefill_pos: int = 0              # prompt tokens chunk-prefilled so far
     history: List[int] = field(default_factory=list)   # rids served
 
 
 class Scheduler:
     def __init__(self, *, ubatch: int, num_ubs: int, cache_tokens: int,
                  gen_len: int, max_input_len: Optional[int] = None,
-                 on_long_prompt: str = "reject"):
+                 on_long_prompt: str = "reject",
+                 reserve_mode: str = "worst", ewma_alpha: float = 0.25):
         self.ubatch = ubatch
         self.num_ubs = num_ubs
         self.cache_tokens = cache_tokens
@@ -68,6 +112,9 @@ class Scheduler:
         self.max_input_len = max_input_len
         assert on_long_prompt in ("reject", "truncate")
         self.on_long_prompt = on_long_prompt
+        assert reserve_mode in ("worst", "ewma")
+        self.reserve_mode = reserve_mode
+        self.gen_ewma = GenLenEWMA(ewma_alpha)
         self._rid = itertools.count()
         self.queue: List[ServeRequest] = []
         self.requests: Dict[int, ServeRequest] = {}
@@ -133,58 +180,125 @@ class Scheduler:
         return admitted
 
     # -------------------------------------------- incremental admission
+    def _reserve(self, req: ServeRequest) -> int:
+        """Generation tokens reserved for a live (or candidate) request
+        beyond its current footprint: full remaining quota in "worst"
+        mode, EWMA-expected remaining (≥ 1, ≤ quota) in "ewma" mode."""
+        worst = req.remaining
+        if self.reserve_mode == "worst":
+            return worst
+        expected = self.gen_ewma.expected(req.max_new_tokens)
+        return max(1, min(worst, expected - len(req.generated)))
+
     def group_load(self, gid: int) -> Tuple[int, int]:
-        """(peak token footprint: prompt + full generation quota per live
-        row — already-generated tokens occupy cache, the rest is reserved —
-        live request count) over occupied slots."""
+        """(token footprint + reservations over occupied slots, live
+        request count).  Footprints are actual (prompt + generated so
+        far); reservations follow reserve_mode — so under "ewma" the load
+        of a long-running request grows as it outlives the estimate."""
         toks = cnt = 0
         for s in self.slots[gid]:
             if s.state in (SlotState.PREFILL, SlotState.DECODE) and s.req:
-                toks += s.req.input_len + s.req.max_new_tokens
+                toks += s.req.footprint + self._reserve(s.req)
                 cnt += 1
         return toks, cnt
 
     def admit_to_slots(self) -> List[Slot]:
         """FCFS continuous admission: place queued requests into free slots
-        using Algorithm 2's balance criterion with exact per-request
-        reservations (live rows reserve their remaining quota, the
-        candidate its own max_new_tokens — not the batch-mode uniform
-        gen_len bound).  Marks chosen slots PREFILL and returns them; the
-        engine prefills and flips them to DECODE."""
+        using Algorithm 2's balance criterion with per-request reservations
+        (exact remaining quota, or the EWMA expectation in "ewma" mode —
+        not the batch-mode uniform gen_len bound).  Marks chosen slots
+        PREFILL and returns them; the engine prefills (monolithically or in
+        staged chunks) and flips them to DECODE."""
         assigned: List[Slot] = []
         while self.queue:
             req = self.queue[0]
+            # would it fit an *empty* partition — at worst case?  If not
+            # it never will (preemption cannot shrink a solo request):
+            # abort instead of livelocking at the queue head, and do it
+            # in BOTH reservation modes — an optimistic "ewma" placement
+            # of a worst-case-unfittable request would just preempt-thrash
+            # until its quota ran out or an early EOS rescued it.  The
+            # per-row ring bound (max_input_len) is normally enforced at
+            # submit; re-checking here keeps recompute preemption safe
+            # (effective_prompt grows with the transcript) for callers
+            # that skipped the submit guard.
+            worst = req.footprint + req.remaining
+            if worst > self.cache_tokens or \
+                    (self.max_input_len is not None
+                     and worst > self.max_input_len):
+                self.queue.pop(0)
+                req.aborted = True
+                req.done = True
+                continue
             loads = [self.group_load(g) for g in range(self.num_ubs)]
             sums = [t for t, _ in loads]     # reservations already included
             counts = [c for _, c in loads]
             open_mask = [any(s.state == SlotState.FREE for s in grp)
                          for grp in self.slots]
-            gid = place_request(req.input_len, sums, counts,
-                                gen_len=0, reserve=req.max_new_tokens,
+            gid = place_request(req.footprint, sums, counts,
+                                gen_len=0, reserve=self._reserve(req),
                                 cache_size=self.cache_tokens,
                                 open_mask=open_mask)
             if gid is None:
-                # would it fit an *empty* partition?  If not it never will:
-                # abort instead of livelocking at the head of the queue.
-                if req.input_len + req.max_new_tokens > self.cache_tokens:
-                    self.queue.pop(0)
-                    req.aborted = True
-                    req.done = True
-                    continue
                 break                      # wait for a slot/budget to free
             slot = next(s for s in self.slots[gid]
                         if s.state == SlotState.FREE)
             self.queue.pop(0)
             slot.req = req
             slot.state = SlotState.PREFILL
+            slot.prefill_pos = 0
             slot.history.append(req.rid)
             assigned.append(slot)
         return assigned
+
+    # ------------------------------------------ EOS-aware budget guard
+    def enforce_budget(self, gid: int, chunk: int) -> List[ServeRequest]:
+        """Pre-decode guard for optimistic ("ewma") reservations: ensure
+        the group's footprint cannot exceed cache_tokens even if every
+        decoding row emits its next `chunk` tokens.  While it could,
+        preempt the youngest decoding request (recompute preemption:
+        slot freed, request re-queued at its FCFS position with its
+        transcript intact).  Returns the preempted requests.  Under
+        "worst" reservations admission already guarantees the bound and
+        this is a no-op."""
+        preempted: List[ServeRequest] = []
+        while True:
+            live = [s for s in self.slots[gid]
+                    if s.state in (SlotState.PREFILL, SlotState.DECODE)
+                    and s.req]
+            decoding = [s for s in live if s.state == SlotState.DECODE]
+            occ = sum(s.req.footprint for s in live)
+            need = sum(min(chunk, s.req.remaining) for s in decoding)
+            if occ + need <= self.cache_tokens or not decoding:
+                return preempted
+            victim = max(decoding, key=lambda s: s.req.rid)   # youngest
+            preempted.append(victim.req)
+            self.preempt(victim)
+
+    def preempt(self, slot: Slot) -> None:
+        """Evict a decoding request: free its slot and re-queue it at its
+        FCFS position (every queued request was submitted later than any
+        admitted one, so ordering by rid restores first-come order)."""
+        assert slot.state == SlotState.DECODE and slot.req is not None
+        req = slot.req
+        req.preemptions += 1
+        slot.state = SlotState.DRAINED
+        self.release(slot)
+        i = 0
+        while i < len(self.queue) and self.queue[i].rid < req.rid:
+            i += 1
+        self.queue.insert(i, req)
 
     # ---------------------------------------------------- slot lifecycle
     def start_decode(self, slot: Slot) -> None:
         assert slot.state == SlotState.PREFILL
         slot.state = SlotState.DECODE
+
+    def prefill_progress(self, slot: Slot, n_tokens: int) -> None:
+        """Record that `n_tokens` more prompt tokens of the staged
+        admission have been chunk-prefilled into the slot's cache row."""
+        assert slot.state == SlotState.PREFILL
+        slot.prefill_pos += n_tokens
 
     def drain(self, slot: Slot) -> None:
         """Row finished (quota reached or EOS): decode output is masked
@@ -198,6 +312,16 @@ class Scheduler:
         assert slot.state == SlotState.DRAINED
         slot.state = SlotState.FREE
         slot.req = None
+        slot.prefill_pos = 0
+
+    def finish(self, slot: Slot) -> None:
+        """Request completed (quota met or EOS): mark done, feed the
+        generation-length EWMA, and recycle the slot."""
+        assert slot.req is not None
+        slot.req.done = True
+        self.gen_ewma.observe(len(slot.req.generated))
+        self.drain(slot)
+        self.release(slot)
 
     def has_live_slots(self) -> bool:
         return any(s.state in (SlotState.PREFILL, SlotState.DECODE)

@@ -32,16 +32,55 @@ def make_prefill_step(cfg: ModelConfig,
 
 
 def make_prefill_fill_step(cfg: ModelConfig,
-                           policy: Optional[ExecPolicy] = None) -> Callable:
-    """Engine path: also writes the KV cache."""
+                           policy: Optional[ExecPolicy] = None,
+                           *, paged_blocks=None) -> Callable:
+    """Engine path: also writes the KV cache.  `lens` (B,) are the true
+    per-row prompt lengths: logits are taken at each row's own final
+    position (hidden[:, -1] would read the zero-padded tail for any row
+    shorter than the bucket width) and the cache's pos is set per row."""
 
-    def prefill_step(params, tokens, cache, **extras):
+    def prefill_step(params, tokens, cache, lens):
         out = forward(cfg, params, tokens, cache=cache, mode="prefill",
-                      policy=policy, **extras)
-        logits = unembed(cfg, params, out["hidden"][:, -1])
-        return logits, out["cache"]
+                      policy=policy, paged_blocks=paged_blocks)
+        cache = out["cache"]
+        cache["pos"] = lens.astype(jnp.int32)
+        idx = jnp.maximum(lens - 1, 0)
+        hidden = jnp.take_along_axis(
+            out["hidden"], idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = unembed(cfg, params, hidden)
+        return logits, cache
 
     return prefill_step
+
+
+def make_prefill_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
+                       *, paged_blocks=None) -> Callable:
+    """Chunked-prefill admission step (the CGOPipe overlap path): process
+    ONE fixed-width chunk of a prompt at the offset recorded in
+    cache["pos"], writing its KV into the ring incrementally and carrying
+    hidden state to the final-position logits.
+
+    (params, tokens (B,C), cache, fill_len (B,) i32) -> (logits, cache)
+
+    `fill_len` is the number of true tokens in this chunk (< C only for
+    the final chunk); the returned logits are taken at the chunk's last
+    true position, so the call covering the end of the prompt yields
+    exactly the logits a monolithic prefill would produce there.  The
+    returned cache's pos advances by fill_len — feeding chunks back in
+    sequence drains a prompt of any length through one compiled shape per
+    chunk-width bucket."""
+
+    def prefill_chunk(params, tokens, cache, fill_len):
+        out = forward(cfg, params, tokens, cache=cache, mode="chunk_prefill",
+                      policy=policy, paged_blocks=paged_blocks,
+                      fill_len=fill_len)
+        idx = jnp.maximum(fill_len - 1, 0)
+        hidden = jnp.take_along_axis(
+            out["hidden"], idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = unembed(cfg, params, hidden)
+        return logits, out["cache"]
+
+    return prefill_chunk
 
 
 def make_serve_step(cfg: ModelConfig,

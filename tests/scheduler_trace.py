@@ -1,0 +1,145 @@
+"""Model-free scheduler trace driver shared by the property-based suite
+(tests/test_scheduler_props.py, hypothesis) and the deterministic seeded
+trace tests.  It emulates exactly the engine's per-tick contract against
+a real Scheduler — staged chunked prefill, enforce_budget before every
+group's decode chunk, masked advancement, EOS, recompute preemption —
+and checks the lifecycle invariants after every tick:
+
+  * per-group KV footprint never exceeds cache_tokens (both reservation
+    modes; under "ewma" this is exactly what enforce_budget guarantees),
+  * no slot double-occupancy: a live request sits in exactly one slot,
+    a slot holds at most one request, and no live request is queued,
+  * FCFS: every admission takes the current head of the queue,
+  * abort-or-admit: the trace drains — every request ends done (served
+    or EOS-shortened) or aborted; the queue head can never livelock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+from repro.serving.scheduler import Scheduler, SlotState
+
+
+@dataclass
+class TraceResult:
+    served: List[int] = field(default_factory=list)     # rids finished
+    aborted: List[int] = field(default_factory=list)
+    preemptions: int = 0
+    ticks: int = 0
+    max_group_footprint: int = 0
+
+
+def _live(sched, gid):
+    return [s for s in sched.slots[gid]
+            if s.state in (SlotState.PREFILL, SlotState.DECODE)]
+
+
+def check_invariants(sched: Scheduler, res: TraceResult) -> None:
+    live_rids = []
+    for gid in range(sched.num_ubs):
+        occ = 0
+        for s in _live(sched, gid):
+            assert s.req is not None, "live slot without a request"
+            live_rids.append(s.req.rid)
+            assert not s.req.done and not s.req.aborted
+            occ += s.req.footprint
+        assert occ <= sched.cache_tokens, \
+            f"group {gid} footprint {occ} > budget {sched.cache_tokens}"
+        res.max_group_footprint = max(res.max_group_footprint, occ)
+    assert len(live_rids) == len(set(live_rids)), "request in two slots"
+    queued = [r.rid for r in sched.queue]
+    assert len(queued) == len(set(queued)), "request queued twice"
+    assert not set(queued) & set(live_rids), "request queued while live"
+    for grp in sched.slots:
+        for s in grp:
+            if s.state in (SlotState.FREE, SlotState.DRAINED):
+                assert s.req is None or s.state is SlotState.DRAINED
+
+
+def run_trace(*, ubatch: int, num_ubs: int, cache_tokens: int,
+              reserve_mode: str, requests: List[Tuple[int, int]],
+              arrivals: List[int], chunk: int, prefill_chunk: int,
+              eos_draw, max_ticks: int = 2000) -> TraceResult:
+    """Drive a Scheduler through a full serving trace.
+
+    requests: (prompt_len, max_new_tokens) pairs; arrivals[i] is the tick
+    request i is submitted on.  eos_draw(rid, k) -> bool decides whether
+    the request hits EOS at its k-th generated token (1-based).  Returns
+    the TraceResult after the system fully drains."""
+    sched = Scheduler(ubatch=ubatch, num_ubs=num_ubs,
+                      cache_tokens=cache_tokens, gen_len=8,
+                      max_input_len=None, reserve_mode=reserve_mode)
+    res = TraceResult()
+    pending = sorted(range(len(requests)), key=lambda i: arrivals[i])
+    rid_of = {}
+
+    def finish(slot):
+        res.served.append(slot.req.rid)
+        sched.finish(slot)
+
+    for tick in range(max_ticks):
+        res.ticks = tick
+        while pending and arrivals[pending[0]] <= tick:
+            i = pending.pop(0)
+            n, q = requests[i]
+            rid_of[i] = sched.submit(list(range(2, 2 + n)), q)
+
+        queue_before = [r.rid for r in sched.queue]
+        admitted = sched.admit_to_slots()
+        # FCFS: admissions are exactly the head of the queue in order —
+        # heads may be *aborted* (can never fit) but never skipped over
+        placeable = [rid for rid in queue_before
+                     if not sched.requests[rid].aborted]
+        assert [s.req.rid for s in admitted] == \
+            placeable[:len(admitted)], "admission skipped the queue head"
+
+        # staged chunked prefill: drain prefill_chunk tokens per tick
+        for grp in sched.slots:
+            for s in grp:
+                if s.state is not SlotState.PREFILL:
+                    continue
+                target = s.req.footprint          # prompt + prior transcript
+                sched.prefill_progress(
+                    s, min(prefill_chunk, target - s.prefill_pos))
+                if s.prefill_pos >= target:       # final chunk: first token
+                    s.req.generated.append(0)
+                    if len(s.req.generated) >= s.req.max_new_tokens or \
+                            eos_draw(s.req.rid, len(s.req.generated)):
+                        finish(s)
+                    else:
+                        sched.start_decode(s)
+        check_invariants(sched, res)
+
+        # decode chunks, one per group, budget-guarded like the engine
+        for gid in range(sched.num_ubs):
+            preempted = sched.enforce_budget(gid, chunk)
+            res.preemptions += len(preempted)
+            if reserve_mode == "worst":
+                assert not preempted, \
+                    "worst-case reservations must never need preemption"
+            for s in list(sched.slots[gid]):
+                if s.state is not SlotState.DECODE:
+                    continue
+                for _ in range(min(chunk, s.req.remaining)):
+                    s.req.generated.append(0)
+                    if eos_draw(s.req.rid, len(s.req.generated)):
+                        break
+                if s.req.remaining == 0 or \
+                        eos_draw(s.req.rid, len(s.req.generated)):
+                    finish(s)
+            check_invariants(sched, res)
+
+        if not pending and not sched.queue and not sched.has_live_slots():
+            break
+    else:
+        raise AssertionError("trace did not drain (livelock?)")
+
+    res.aborted = [r.rid for r in sched.requests.values() if r.aborted]
+    # abort-or-admit: every request ended served or aborted, exactly once
+    assert sorted(res.served + res.aborted) == sorted(rid_of.values())
+    for r in sched.requests.values():
+        assert r.done
+        if not r.aborted:
+            assert 1 <= len(r.generated) <= r.max_new_tokens
+    return res

@@ -57,6 +57,41 @@ def test_paging_fills_io_bubbles(times):
     assert a.utilization("h2d") >= b.utilization("h2d") * 0.99
 
 
+@pytest.fixture(scope="module")
+def weight_bound_times():
+    """Weight-bound regime: small batch, nothing resident — streaming the
+    expert weights dominates every other resource (the regime where Fig. 6
+    separates the schedules most cleanly)."""
+    cfg = get_config("mixtral-8x7b")
+    hw = H.preset("l4")
+    pol = Policy(batch=32, ubatch=8, attn_on_gpu=False, ffn_on_gpu=True,
+                 w_gpu_ratio=0.0, kv_gpu_ratio=0.0)
+    return CG.times_from_policy(cfg, hw, Workload(77, 64), pol)
+
+
+def test_fig6_makespan_ordering(times, weight_bound_times):
+    """Regression pin on the paper's Fig. 6 ordering so `build_*`
+    refactors can't silently invert it: CGOPipe's makespan <= the
+    overlapped-unpaged schedule (s2) <= the fully serialized one (s3),
+    in both the balance-point and weight-bound regimes."""
+    for t in (times, weight_bound_times):
+        res = {s: CG.run_schedule(s, t, 8) for s in ("cgopipe", "s2", "s3")}
+        assert res["cgopipe"].makespan <= res["s2"].makespan
+        assert res["s2"].makespan <= res["s3"].makespan
+
+
+def test_fig6_gpu_utilization_ordering(weight_bound_times):
+    """On a weight-bound policy the schedules do identical GPU work, so
+    paging's shorter makespan must show up as GPU utilization: cgopipe >=
+    s2 > s3 (equivalently, smaller GPU bubble fraction)."""
+    res = {s: CG.run_schedule(s, weight_bound_times, 8)
+           for s in ("cgopipe", "s2", "s3")}
+    assert res["cgopipe"].utilization("gpu") >= res["s2"].utilization("gpu")
+    assert res["s2"].utilization("gpu") > res["s3"].utilization("gpu")
+    assert res["cgopipe"].bubble_fraction("gpu") <= \
+        res["s2"].bubble_fraction("gpu")
+
+
 def test_deepspeed_single_microbatch_is_worse():
     cfg = get_config("mixtral-8x7b")
     hw = H.preset("l4")

@@ -1,0 +1,95 @@
+"""Cross-mode fuzz: seeded random serving workloads must produce
+bit-identical per-request greedy transcripts across every execution
+strategy the engine offers — static whole-micro-batch, continuous
+slot-pool at several decode-chunk sizes, overlapped chunked-prefill
+admission at several prefill-chunk widths, and EOS-aware (EWMA)
+reservations with recompute preemption under a tight budget.  A small
+instance runs in the fast CI subset; the wide sweep (more seeds, chunk
+sizes 1/4/8, early-EOS round) carries the `slow` marker."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.params import init_params
+from repro.serving.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").smoke(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.key(3))
+    return cfg, params
+
+
+def _workload(cfg, seed, n_requests, max_len=40, max_quota=10):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(2, cfg.vocab_size, int(rng.integers(1, max_len))),
+             int(rng.integers(1, max_quota)))
+            for _ in range(n_requests)]
+
+
+def _run(cfg, params, work, **ecfg_kw):
+    kw = dict(ubatch=3, num_ubs=2, max_seq=64)
+    kw.update(ecfg_kw)
+    eng = Engine(cfg, params, EngineConfig(**kw))
+    for p, q in work:
+        eng.submit(p, q)
+    out = eng.run_until_idle()
+    assert all(r.done for r in eng.scheduler.requests.values())
+    return out
+
+
+def _assert_all_identical(cfg, params, work, variants):
+    outs = {name: _run(cfg, params, work, **kw)
+            for name, kw in variants.items()}
+    names = list(outs)
+    base = outs[names[0]]
+    for name in names[1:]:
+        assert outs[name] == base, f"{name} diverged from {names[0]}"
+    return base
+
+
+def test_cross_mode_transcripts_identical_fast(setup):
+    cfg, params = setup
+    work = _workload(cfg, seed=0, n_requests=6)
+    _assert_all_identical(cfg, params, work, {
+        "static": dict(mode="static"),
+        "continuous": dict(decode_chunk=4),
+        "overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4),
+    })
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_cross_mode_transcripts_identical_sweep(setup, seed):
+    cfg, params = setup
+    work = _workload(cfg, seed=seed, n_requests=8)
+    base = _assert_all_identical(cfg, params, work, {
+        "static": dict(mode="static"),
+        "continuous_c1": dict(decode_chunk=1),
+        "continuous_c4": dict(decode_chunk=4),
+        "continuous_c8": dict(decode_chunk=8),
+        "overlap_p4": dict(overlap=True, prefill_chunk=4, decode_chunk=4),
+        "overlap_p16": dict(overlap=True, prefill_chunk=16, decode_chunk=8),
+        "ewma_tight": dict(reserve_mode="ewma", cache_tokens=100,
+                           decode_chunk=4),
+        "overlap_ewma": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
+                             reserve_mode="ewma", cache_tokens=100),
+    })
+    # early-EOS round: pick a token observed mid-transcript and re-run
+    # with it as eos_id, so EOS-terminated rows are exercised everywhere
+    eos_id = next((toks[len(toks) // 2] for toks in base.values()
+                   if len(toks) >= 2), None)
+    if eos_id is None:
+        return
+    work = [(p, q + 2) for p, q in work]     # leave room to EOS early
+    _assert_all_identical(cfg, params, work, {
+        "static": dict(mode="static", eos_id=eos_id),
+        "continuous": dict(decode_chunk=4, eos_id=eos_id),
+        "overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
+                        eos_id=eos_id),
+    })

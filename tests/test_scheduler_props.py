@@ -1,0 +1,80 @@
+"""Property-based scheduler tests: random submit/admit/drain/release
+traces through the real Scheduler must uphold the slot-pool lifecycle
+invariants — per-group KV budget (worst-case AND EOS-aware reservations),
+no double-occupancy, FCFS admission, and abort-or-admit (no head-of-queue
+livelock).  The trace driver and invariant checks live in
+tests/scheduler_trace.py (shared with the deterministic seeded suite so
+the machinery runs even where hypothesis is unavailable)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from scheduler_trace import run_trace  # noqa: E402
+
+
+def _eos_draw_from(eos_salt: int, eos_mod: int):
+    """Deterministic pure function of (rid, k): required by the driver,
+    which consults it more than once per token."""
+    def eos_draw(rid, k):
+        if eos_mod == 0:
+            return False
+        return (rid * 2654435761 + k * 40503 + eos_salt) % eos_mod == 0
+    return eos_draw
+
+
+trace_params = dict(
+    ubatch=st.integers(1, 3),
+    num_ubs=st.integers(1, 3),
+    cache_tokens=st.integers(8, 64),
+    chunk=st.integers(1, 8),
+    prefill_chunk=st.integers(1, 8),
+    requests=st.lists(
+        st.tuples(st.integers(1, 24), st.integers(1, 12)),
+        min_size=1, max_size=24),
+    arrival_gaps=st.lists(st.integers(0, 3), min_size=24, max_size=24),
+    eos_salt=st.integers(0, 2**16),
+    eos_mod=st.integers(0, 6),
+)
+
+
+def _run(reserve_mode, ubatch, num_ubs, cache_tokens, chunk, prefill_chunk,
+         requests, arrival_gaps, eos_salt, eos_mod):
+    arrivals, t = [], 0
+    for i in range(len(requests)):
+        t += arrival_gaps[i]
+        arrivals.append(t)
+    return run_trace(
+        ubatch=ubatch, num_ubs=num_ubs, cache_tokens=cache_tokens,
+        reserve_mode=reserve_mode, requests=requests, arrivals=arrivals,
+        chunk=chunk, prefill_chunk=prefill_chunk,
+        eos_draw=_eos_draw_from(eos_salt, eos_mod))
+
+
+@settings(max_examples=150, deadline=None)
+@given(**trace_params)
+def test_worst_case_reservations_hold_invariants(**kw):
+    """Worst-case mode: the budget bound, slot exclusivity, FCFS and
+    drain-to-completion must hold on any trace — and no preemption may
+    ever be needed (the driver asserts all of these per tick)."""
+    _run("worst", **kw)
+
+
+@settings(max_examples=150, deadline=None)
+@given(**trace_params)
+def test_ewma_reservations_hold_invariants(**kw):
+    """EOS-aware mode: admission is optimistic, but enforce_budget +
+    recompute preemption must keep the same invariants intact."""
+    _run("ewma", **kw)
+
+
+@settings(max_examples=75, deadline=None)
+@given(**trace_params)
+def test_ewma_never_serves_fewer_requests(**kw):
+    """Preemption must only re-order work, never lose or duplicate it:
+    both reservation modes serve exactly the same set of requests."""
+    a = _run("worst", **kw)
+    b = _run("ewma", **kw)
+    assert sorted(a.served) == sorted(b.served)
+    assert sorted(a.aborted) == sorted(b.aborted)

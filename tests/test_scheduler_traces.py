@@ -1,0 +1,116 @@
+"""Deterministic seeded trace tests over the shared driver
+(tests/scheduler_trace.py) — the non-hypothesis half of the scheduler
+property suite, so the lifecycle invariants are exercised even where
+hypothesis is unavailable — plus targeted unit tests for the EOS-aware
+(EWMA) reservation path and recompute preemption."""
+import numpy as np
+import pytest
+
+from repro.core.batching import GenLenEWMA
+from repro.serving.scheduler import Scheduler, SlotState
+
+from scheduler_trace import run_trace
+
+
+def _eos_none(rid, k):
+    return False
+
+
+def _eos_hash(salt, mod):
+    def draw(rid, k):
+        return (rid * 2654435761 + k * 40503 + salt) % mod == 0
+    return draw
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("reserve_mode", ["worst", "ewma"])
+def test_random_traces_uphold_invariants(seed, reserve_mode):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 20))
+    requests = [(int(rng.integers(1, 24)), int(rng.integers(1, 12)))
+                for _ in range(n)]
+    arrivals = sorted(int(rng.integers(0, 10)) for _ in range(n))
+    res = run_trace(
+        ubatch=int(rng.integers(1, 4)), num_ubs=int(rng.integers(1, 4)),
+        cache_tokens=int(rng.integers(8, 64)), reserve_mode=reserve_mode,
+        requests=requests, arrivals=arrivals,
+        chunk=int(rng.integers(1, 8)), prefill_chunk=int(rng.integers(1, 8)),
+        eos_draw=_eos_hash(seed, 5) if seed % 2 else _eos_none)
+    assert len(res.served) + len(res.aborted) == n
+
+
+def test_ewma_tracks_observations():
+    e = GenLenEWMA(alpha=0.5)
+    assert e.expected(40) == 40                    # no signal: worst case
+    e.observe(4)
+    assert e.expected(40) == 4
+    e.observe(12)                                  # 4 + 0.5*(12-4) = 8
+    assert e.expected(40) == 8
+    assert e.expected(6) == 6                      # capped at the quota
+    assert e.expected(0) == 1                      # never below 1
+
+
+def test_ewma_reservations_admit_more_concurrently():
+    """After observing short generations, EOS-aware mode co-admits
+    requests whose worst-case reservations would not fit together."""
+    for mode, expect in (("worst", 1), ("ewma", 2)):
+        s = Scheduler(ubatch=2, num_ubs=1, cache_tokens=40, gen_len=8,
+                      reserve_mode=mode)
+        s.gen_ewma.observe(4)
+        for _ in range(2):
+            s.submit(np.arange(10, dtype=np.int32), 25)   # worst: 35 each
+        assert len(s.admit_to_slots()) == expect
+
+
+def test_enforce_budget_preempts_youngest_and_requeues_fcfs():
+    s = Scheduler(ubatch=2, num_ubs=1, cache_tokens=40, gen_len=8,
+                  reserve_mode="ewma")
+    s.gen_ewma.observe(2)                          # optimistic estimate
+    r0 = s.submit(np.arange(10, dtype=np.int32), 25)
+    r1 = s.submit(np.arange(10, dtype=np.int32), 25)
+    slots = s.admit_to_slots()
+    assert [sl.req.rid for sl in slots] == [r0, r1]
+    for sl in slots:
+        sl.req.generated.append(0)                 # prefill's first token
+        s.start_decode(sl)
+    # both run long: footprints 10+9 each; next chunk of 8 would need
+    # 2*(19+8) = 54 > 40 -> the YOUNGEST must be evicted
+    for sl in slots:
+        sl.req.generated.extend([0] * 8)
+    preempted = s.enforce_budget(0, chunk=8)
+    assert [r.rid for r in preempted] == [r1]
+    assert s.queue and s.queue[0].rid == r1        # re-queued at the head
+    assert s.requests[r1].preemptions == 1
+    assert len(s.requests[r1].generated) == 9      # transcript intact
+    # its re-admission prefills prompt + transcript
+    assert len(s.requests[r1].effective_prompt) == 19
+    # survivor untouched; solo always fits, so no further eviction
+    assert s.slots[0][0].req.rid == r0
+    assert s.enforce_budget(0, chunk=8) == []
+
+
+def test_preempted_request_keeps_fcfs_priority_over_later_arrivals():
+    s = Scheduler(ubatch=1, num_ubs=1, cache_tokens=30, gen_len=8,
+                  reserve_mode="ewma")
+    r0 = s.submit(np.arange(4, dtype=np.int32), 20)
+    (slot,) = s.admit_to_slots()
+    slot.req.generated.append(0)
+    s.start_decode(slot)
+    r1 = s.submit(np.arange(4, dtype=np.int32), 20)   # arrives later
+    s.preempt(slot)
+    assert [r.rid for r in s.queue] == [r0, r1]
+
+
+def test_prefill_progress_substate():
+    s = Scheduler(ubatch=1, num_ubs=1, cache_tokens=64, gen_len=8)
+    s.submit(np.arange(20, dtype=np.int32), 4)
+    (slot,) = s.admit_to_slots()
+    assert slot.state is SlotState.PREFILL and slot.prefill_pos == 0
+    s.prefill_progress(slot, 8)
+    s.prefill_progress(slot, 8)
+    assert slot.prefill_pos == 16
+    s.start_decode(slot)
+    slot.req.generated.extend([0] * 4)
+    s.finish(slot)
+    assert slot.state is SlotState.FREE and slot.prefill_pos == 0
+    assert s.gen_ewma.count == 1

@@ -1,0 +1,168 @@
+"""Serving step functions: the ragged-prompt prefill regression
+(make_prefill_fill_step must take logits at each row's true final
+position, not the padded bucket tail) and the chunked-prefill step
+(incremental KV fill at a row offset must reproduce the monolithic
+prefill — logits, cache contents, and greedy continuations)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import kvcache
+from repro.models.params import init_params
+from repro.serving import steps as serve_steps
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").smoke(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.key(5))
+    return cfg, params
+
+
+# ------------------------------------------------- ragged prefill fix
+
+def test_prefill_fill_step_uses_true_lengths(setup):
+    """Regression: a batch of ragged prompts padded to one bucket width
+    must yield, per row, the same logits as that prompt prefilled alone
+    at its exact length (hidden[:, -1] read the zero-pad tail instead)."""
+    cfg, params = setup
+    step = jax.jit(serve_steps.make_prefill_fill_step(cfg))
+    rng = np.random.default_rng(0)
+    lens = [3, 9, 6]
+    S = 16
+    toks = np.zeros((len(lens), S), np.int32)
+    prompts = []
+    for i, n in enumerate(lens):
+        p = rng.integers(2, cfg.vocab_size, n)
+        prompts.append(p)
+        toks[i, :n] = p
+    cache = kvcache.init_cache(cfg, len(lens), 32)
+    logits, cache = step(params, jnp.asarray(toks), cache,
+                         jnp.asarray(lens, np.int32))
+    np.testing.assert_array_equal(np.asarray(cache["pos"]), lens)
+    for i, (p, n) in enumerate(zip(prompts, lens)):
+        solo_cache = kvcache.init_cache(cfg, 1, 32)
+        solo_logits, _ = step(params, jnp.asarray(p[None, :]), solo_cache,
+                              jnp.asarray([n], np.int32))
+        np.testing.assert_allclose(np.asarray(logits[i]),
+                                   np.asarray(solo_logits[0]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------- chunked prefill
+
+def _chunked_prefill(cfg, params, prompt, max_seq, widths):
+    """Drain `prompt` through chunks of the given widths (padded to each
+    width); returns (final-position logits, cache)."""
+    chunk_fns = {w: jax.jit(serve_steps.make_prefill_chunk(cfg))
+                 for w in set(widths)}
+    cache = kvcache.init_cache(cfg, 1, max_seq)
+    t = 0
+    logits = None
+    for w in widths:
+        if t == len(prompt):
+            break
+        n = min(w, len(prompt) - t)
+        toks = np.zeros((1, w), np.int32)
+        toks[0, :n] = prompt[t:t + n]
+        logits, cache = chunk_fns[w](params, jnp.asarray(toks), cache,
+                                     jnp.asarray([n], np.int32))
+        t += n
+    assert t == len(prompt)
+    return logits, cache
+
+
+@pytest.mark.parametrize("widths", [(4, 4, 4, 4), (8, 8), (8, 4, 4),
+                                    (16,), (8, 8, 2)])
+def test_chunked_prefill_matches_monolithic(setup, widths):
+    """Any chunking of the prompt — including a padded final chunk —
+    must agree with the monolithic prefill on final-position logits (the
+    next sampled token) and leave an equivalent ring cache behind."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    n = min(sum(widths), 14)                      # ragged vs last width
+    prompt = rng.integers(2, cfg.vocab_size, n)
+    full = jax.jit(serve_steps.make_prefill_fill_step(cfg))
+    ref_logits, ref_cache = full(params, jnp.asarray(prompt[None, :]),
+                                 kvcache.init_cache(cfg, 1, 32),
+                                 jnp.asarray([n], np.int32))
+    logits, cache = _chunked_prefill(cfg, params, prompt, 32, widths)
+    assert int(jnp.argmax(logits[0])) == int(jnp.argmax(ref_logits[0]))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-4, atol=2e-4)
+    assert int(cache["pos"][0]) == n
+    # ring contents agree on every slot holding a true prompt position
+    sp = np.asarray(cache["p0"]["slot_pos"][0, 0])
+    ref_sp = np.asarray(ref_cache["p0"]["slot_pos"][0, 0])
+    real = (ref_sp >= 0) & (ref_sp < n)
+    np.testing.assert_array_equal(sp[real], ref_sp[real])
+    np.testing.assert_allclose(
+        np.asarray(cache["p0"]["k"][0, 0][real]),
+        np.asarray(ref_cache["p0"]["k"][0, 0][real]), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_prefill_pad_tail_stays_masked(setup):
+    """Padded chunk-tail positions are clamped to one-past-the-end: they
+    must never overwrite a true prompt slot nor mark a slot as holding a
+    causally-visible position."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(2, cfg.vocab_size, 5)
+    _, cache = _chunked_prefill(cfg, params, prompt, 32, (8,))
+    sp = np.asarray(cache["p0"]["slot_pos"][0, 0])
+    # slots 0..4 hold the prompt; slot 5 holds the clamped pad writes
+    np.testing.assert_array_equal(sp[:5], np.arange(5))
+    assert sp[5] == 5                 # > final pos 4: causally masked
+    assert (sp[6:] == -1).all()
+
+
+# ------------------------------------------------- partial slot insert
+
+def test_insert_slot_span_writes_only_offset_range(qwen_f32):
+    cfg = qwen_f32
+    pool = kvcache.init_cache(cfg, 3, 16)
+    single = kvcache.init_cache(cfg, 1, 16)
+    single["pos"] = jnp.asarray([12], jnp.int32)
+    single["p0"] = jax.tree.map(lambda a: a + 2, single["p0"])
+    out = kvcache.insert_slot_span(pool, single, 1, 4, length=8)
+    for name in ("k", "v", "slot_pos"):
+        # target row: ring slots [4, 12) copied, the rest untouched
+        np.testing.assert_array_equal(
+            np.asarray(out["p0"][name][:, 1, 4:12]),
+            np.asarray(single["p0"][name][:, 0, 4:12]))
+        np.testing.assert_array_equal(
+            np.asarray(out["p0"][name][:, 1, :4]),
+            np.asarray(pool["p0"][name][:, 1, :4]))
+        np.testing.assert_array_equal(
+            np.asarray(out["p0"][name][:, 1, 12:]),
+            np.asarray(pool["p0"][name][:, 1, 12:]))
+        # neighbors untouched
+        for row in (0, 2):
+            np.testing.assert_array_equal(
+                np.asarray(out["p0"][name][:, row]),
+                np.asarray(pool["p0"][name][:, row]))
+    assert int(out["pos"][1]) == 12
+
+
+def test_insert_slot_span_wraps_ring(qwen_f32):
+    """Span indices are taken modulo the ring width (sliding-window
+    layers wrap mid-span)."""
+    cfg = qwen_f32
+    pool = kvcache.init_cache(cfg, 2, 8)
+    single = kvcache.init_cache(cfg, 1, 8)
+    single["p0"] = jax.tree.map(lambda a: a + 3, single["p0"])
+    out = kvcache.insert_slot_span(pool, single, 0, 6, length=4)
+    # positions 6,7,8,9 -> slots 6,7,0,1
+    touched = [6, 7, 0, 1]
+    untouched = [2, 3, 4, 5]
+    np.testing.assert_array_equal(
+        np.asarray(out["p0"]["k"][:, 0, touched]),
+        np.asarray(single["p0"]["k"][:, 0, touched]))
+    np.testing.assert_array_equal(
+        np.asarray(out["p0"]["k"][:, 0, untouched]),
+        np.asarray(pool["p0"]["k"][:, 0, untouched]))
