@@ -41,7 +41,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=12)
-    ap.add_argument("--paged", action="store_true", default=True)
+    # --paged / --no-paged; default (neither) runs BOTH and shows the
+    # comparison (the old `store_true, default=True` made --paged a no-op
+    # and left the unpaged baseline unreachable)
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="paged-weight streaming; omit to run both "
+                         "paged and resident and compare")
     ap.add_argument("--mode", choices=("continuous", "static"),
                     default="continuous")
     ap.add_argument("--skew", action="store_true",
@@ -66,32 +72,46 @@ def main():
           f" r_w={p.w_gpu_ratio} (est {advice['best']['throughput']:.0f}"
           f" tok/s on L4)")
 
-    # 2-4. run the engine (CPU-scaled micro-batches; same code path)
+    # 2-4. run the engine (CPU-scaled micro-batches; same code path);
+    # default shows BOTH weight layouts back to back
     params = init_params(LM_110M, jax.random.key(0))
-    eng = Engine(LM_110M, params,
-                 EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
-                              paged=args.paged, page_elems=1 << 18,
-                              mode=args.mode, overlap=args.overlap,
-                              prefill_chunk=16))
     rng = np.random.default_rng(0)
     lo, hi = (16, 49) if args.long_prompts else (4, 25)
+    requests = []
     for i in range(args.requests):
         n = int(rng.integers(lo, hi))
         gen = (max(1, args.gen_len // 4) if args.skew and i % 2 == 0
                else args.gen_len)
-        eng.submit(rng.integers(2, LM_110M.vocab_size, n), gen)
-    t0 = time.time()
-    out = eng.run_until_idle()
-    dt = time.time() - t0
-    toks = sum(len(v) for v in out.values())
-    print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s, paged={args.paged}, mode={args.mode}, "
-          f"overlap={args.overlap}, engine ticks={eng.steps})")
-    if args.mode == "continuous":
-        fills = [len(s.history)
-                 for grp in eng.scheduler.slots for s in grp]
-        print(f"slot pool: {len(fills)} slots, "
-              f"{sum(fills)} admissions (max reuse {max(fills)}x)")
+        requests.append((rng.integers(2, LM_110M.vocab_size, n), gen))
+
+    variants = [(True,), (False,)] if args.paged is None else [(args.paged,)]
+    outs = {}
+    for (paged,) in variants:
+        eng = Engine(LM_110M, params,
+                     EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
+                                  paged=paged, page_elems=1 << 18,
+                                  mode=args.mode, overlap=args.overlap,
+                                  prefill_chunk=16))
+        for prompt, gen in requests:
+            eng.submit(prompt, gen)
+        t0 = time.time()
+        out = eng.run_until_idle()
+        dt = time.time() - t0
+        outs[paged] = out
+        toks = sum(len(v) for v in out.values())
+        traffic = eng.weight_traffic()
+        print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
+              f"({toks / dt:.1f} tok/s, paged={paged}, mode={args.mode}, "
+              f"overlap={args.overlap}, engine ticks={eng.steps}, "
+              f"H2D weight bytes={traffic['h2d_bytes'] / 1e6:.0f}MB)")
+        if args.mode == "continuous":
+            fills = [len(s.history)
+                     for grp in eng.scheduler.slots for s in grp]
+            print(f"slot pool: {len(fills)} slots, "
+                  f"{sum(fills)} admissions (max reuse {max(fills)}x)")
+    if len(outs) == 2:
+        print(f"greedy transcripts identical across paged/resident: "
+              f"{outs[True] == outs[False]}")
 
 
 if __name__ == "__main__":

@@ -149,17 +149,27 @@ class LayerWorkload:
 
     All quantities are for ONE transformer layer processing N tokens
     (batch) with average context length `ctx`.
-    """
+
+    For MoE layers the weight bytes are split: ``bytes_w_shared``
+    (attention projections + shared experts — touched every step) vs
+    ``bytes_w_expert`` (the *activated* routed-expert bytes, whose H2D
+    traffic the expert-granular residency cache can absorb at the
+    measured/assumed ``popularity`` hit rate).  ``bytes_w`` stays their
+    sum for the intensity definitions."""
     flops_attn: float        # attention score+value flops (excl. qkvo proj)
     bytes_kv: float          # KV cache bytes touched
     flops_ffn: float         # FFN (MoE) flops incl. router+shared
     bytes_w: float           # layer weight bytes (experts + attn proj)
     bytes_hidden: float      # D1/D2-class transfers: activations per ub hop
     flops_proj: float        # qkvo projection flops
+    bytes_w_shared: float = 0.0   # non-routed weight bytes (= bytes_w if dense)
+    bytes_w_expert: float = 0.0   # expected activated routed-expert bytes
+    num_experts: int = 0          # routed expert count (0 = dense layer)
+    popularity: Optional[object] = None  # (E,) or (L, E) routing frequency
 
     @classmethod
     def decode(cls, cfg, batch: int, ctx: float, dtype_bytes: int = 2,
-               experts_hit: Optional[float] = None):
+               experts_hit: Optional[float] = None, popularity=None):
         h1 = cfg.d_model
         hd = cfg.head_dim or 1
         nq = max(cfg.num_heads, 1)
@@ -173,21 +183,29 @@ class LayerWorkload:
             flops_attn = 2 * batch * ctx * nq * hd * 2
         bytes_kv = batch * ctx * kv_row * dtype_bytes
 
+        w_expert = 0.0
+        num_experts = 0
         if cfg.is_moe:
             k = cfg.top_k + cfg.num_shared_experts
             f_flops = 2 * 3 * h1 * cfg.d_ff * k * batch
             n_hit = experts_hit if experts_hit is not None else min(
                 cfg.num_experts, batch * cfg.top_k)
             w_ffn = (n_hit + cfg.num_shared_experts) * 3 * h1 * cfg.d_ff
+            w_expert = n_hit * 3 * h1 * cfg.d_ff
+            num_experts = cfg.num_experts
         else:
             f_flops = 2 * 3 * h1 * (cfg.d_ff or cfg.ssm_expand * h1) * batch
             w_ffn = 3 * h1 * (cfg.d_ff or cfg.ssm_expand * h1)
         w_attn = (2 * h1 * nq * hd + 2 * h1 * nkv * hd) if nq else 0
         flops_proj = 2 * w_attn * batch
+        bytes_w = (w_ffn + w_attn) * dtype_bytes
         return cls(flops_attn=flops_attn, bytes_kv=bytes_kv, flops_ffn=f_flops,
-                   bytes_w=(w_ffn + w_attn) * dtype_bytes,
+                   bytes_w=bytes_w,
                    bytes_hidden=2 * batch * h1 * dtype_bytes,
-                   flops_proj=flops_proj)
+                   flops_proj=flops_proj,
+                   bytes_w_shared=bytes_w - w_expert * dtype_bytes,
+                   bytes_w_expert=w_expert * dtype_bytes,
+                   num_experts=num_experts, popularity=popularity)
 
     # Operational intensities (paper Definition 3.1)
     def intensity_attn_vs_kv(self) -> float:
@@ -195,6 +213,37 @@ class LayerWorkload:
 
     def intensity_ffn_vs_weights(self) -> float:
         return self.flops_ffn / max(self.bytes_w, 1.0)
+
+
+def expert_hit_rate(w_gpu_ratio: float, num_experts: int,
+                    popularity=None) -> float:
+    """Expected P(activated expert is device-resident) when the residency
+    cache (core.residency) pins the hottest ``⌊r_w·E⌋`` expert spans per
+    layer out of a pool sized by the policy's ``r_w``.
+
+    Uniform routing → exactly ``r_w`` (the whole-layer model's implicit
+    assumption).  A measured popularity vector — (E,) or per-layer
+    (L, E), e.g. the residency EWMA table — → the retained top mass,
+    which is ≥ r_w: skewed routing makes a small cache disproportionately
+    effective, and this is precisely what lets the policy search trade
+    ``r_w`` against hit rate instead of against raw resident bytes."""
+    import numpy as np
+    r = min(max(w_gpu_ratio, 0.0), 1.0)
+    if num_experts <= 0:
+        return r
+    if popularity is None:
+        return r
+    p = np.atleast_2d(np.asarray(popularity, float))
+    sums = p.sum(axis=1, keepdims=True)
+    uniform = np.full_like(p, 1.0 / num_experts)
+    p = np.where(sums > 0, p / np.maximum(sums, 1e-30), uniform)
+    k = int(r * num_experts)
+    frac = r * num_experts - k
+    srt = np.sort(p, axis=1)[:, ::-1]
+    hit = srt[:, :k].sum(axis=1)
+    if k < num_experts:
+        hit = hit + frac * srt[:, k]
+    return float(np.clip(hit.mean(), 0.0, 1.0))
 
 
 # ---------------------------------------------------------------------------
@@ -237,7 +286,17 @@ def layer_latency(hw: Hardware, wl: LayerWorkload, policy) -> Dict[str, float]:
 
     # ---- FFN ----
     if policy.ffn_on_gpu:
-        w_from_cpu = wl.bytes_w * (1 - policy.w_gpu_ratio)
+        if wl.num_experts and wl.bytes_w_expert:
+            # expert-granular paging: the shared span streams at (1-r_w)
+            # as before, but the routed-expert traffic is *expected
+            # activated bytes × miss rate* — the residency cache absorbs
+            # the hits, so r_w buys hit rate, not just resident bytes
+            hit = expert_hit_rate(policy.w_gpu_ratio, wl.num_experts,
+                                  wl.popularity)
+            w_from_cpu = (wl.bytes_w_shared * (1 - policy.w_gpu_ratio)
+                          + wl.bytes_w_expert * (1 - hit))
+        else:
+            w_from_cpu = wl.bytes_w * (1 - policy.w_gpu_ratio)
         comm_ctg += w_from_cpu
         t_ffn = max(time_comp(wl.flops_ffn + wl.flops_proj, gpu.p_peak),
                     time_comm(wl.bytes_w, gpu.b_peak))

@@ -12,12 +12,26 @@ The page pool layout is (num_pages, page_elems) so a layer fetch is a
 single contiguous gather — the TPU analogue of the paper's paged
 cudaMemcpyAsync batches, and the unit the Pallas MoE-FFN kernel's page
 table indexes into.
+
+Two manifest granularities:
+
+  * whole-layer (``pack_layer_stack`` / ``pack_block_groups``): one flat
+    span per layer; every page streams every layer — the paper's baseline
+    layout, kept as the reference path;
+  * split (``pack_layer_stack_split`` / ``pack_block_groups_split``): each
+    layer's manifest is divided into a *shared* span (attention / norm /
+    router / shared-expert leaves, streamed every layer as before) and
+    per-(layer, expert) spans for the routed expert weights, with a
+    ``(layer, expert) → page ids`` table.  Top-k routing touches only a
+    fraction of the experts, so the serving engine can gather just the
+    activated experts' spans (core.residency keeps the popular ones
+    device-resident) instead of the full E-expert block.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +119,173 @@ def fetch_layer(pages: jax.Array, manifest: PageManifest, layer) -> Dict:
 
 def fetch_pages(pages: jax.Array, page_ids) -> jax.Array:
     return pages[jnp.asarray(page_ids)]
+
+
+# ---------------------------------------------------------------------------
+# Split manifests: shared span + per-(layer, expert) spans
+# ---------------------------------------------------------------------------
+
+# Routed-expert leaves inside a "moe" subtree (shared experts stay in the
+# shared span — they run for every token, so streaming them per layer is
+# already optimal).  The int8 dequant scales (wi_scale/wo_scale) also stay
+# in the shared span: they are 4 bytes per expert — page-padding them into
+# expert spans would waste a page each, and the expert pool is packed at
+# the expert-weight dtype, which would truncate float32 scales.  moe_paged
+# gathers them per activated expert from the shared params instead.
+EXPERT_LEAF_NAMES = ("wi", "wo")
+
+
+def _is_expert_leaf(path: Tuple[str, ...]) -> bool:
+    return ("moe" in path and "shared" not in path
+            and path[-1] in EXPERT_LEAF_NAMES)
+
+
+def _tree_from_leaves(leaves):
+    out: Dict = {}
+    for path, leaf in leaves:
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = leaf
+    return out
+
+
+@dataclass
+class ExpertManifest:
+    """Per-(layer, expert) page spans for one stacked layer group.  The
+    span unit is ONE expert's weights in ONE layer — the granularity the
+    residency cache pins/evicts and the router-gated gather fetches."""
+    page_elems: int
+    expert_elems: int            # padded flat elements per (layer, expert)
+    pages_per_expert: int
+    num_layers: int
+    num_experts: int
+    leaves: List[LeafEntry]      # paths relative to the moe subtree
+    dtype: str
+
+    def expert_pages(self, layer: int, expert: int) -> np.ndarray:
+        """The (layer, expert) → page ids table (flat pool numbering)."""
+        start = ((layer * self.num_experts + expert)
+                 * self.pages_per_expert)
+        return np.arange(start, start + self.pages_per_expert)
+
+    @property
+    def span_bytes(self) -> int:
+        """H2D bytes one expert span moves (padded, what a transfer costs)."""
+        return (self.pages_per_expert * self.page_elems
+                * np.dtype(self.dtype).itemsize)
+
+
+@dataclass
+class SplitManifest:
+    shared: PageManifest
+    experts: Optional[ExpertManifest]
+
+
+def pack_expert_stack(expert_leaves, page_elems: int = 1 << 20
+                      ) -> Tuple[jax.Array, ExpertManifest]:
+    """expert_leaves: [(path, arr (L, E, ...))].  Returns
+    (pages (L, E, pages_per_expert, page_elems), manifest).  Leaf paths in
+    the manifest are stored relative to the ``moe`` subtree so a gathered
+    span unflattens straight into the MoE param dict."""
+    L, NE = expert_leaves[0][1].shape[:2]
+    dtype = expert_leaves[0][1].dtype
+    entries: List[LeafEntry] = []
+    offset = 0
+    for path, leaf in expert_leaves:
+        assert leaf.shape[:2] == (L, NE), f"expert stack mismatch at {path}"
+        rel = path[path.index("moe") + 1:]
+        per = int(np.prod(leaf.shape[2:])) if leaf.ndim > 2 else 1
+        entries.append(LeafEntry(rel, tuple(leaf.shape[2:]), str(leaf.dtype),
+                                 offset))
+        offset += per
+    pages_per_expert = math.ceil(offset / page_elems)
+    expert_elems = pages_per_expert * page_elems
+
+    flat = jnp.concatenate(
+        [leaf.reshape(L, NE, -1).astype(dtype) for _, leaf in expert_leaves],
+        axis=2)
+    pad = expert_elems - flat.shape[2]
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, pad)))
+    pages = flat.reshape(L, NE, pages_per_expert, page_elems)
+    manifest = ExpertManifest(page_elems, expert_elems, pages_per_expert,
+                              L, NE, entries, str(dtype))
+    return pages, manifest
+
+
+def unflatten_expert_span(span: jax.Array, em: ExpertManifest) -> Dict:
+    """Rebuild expert params from page spans with arbitrary leading batch
+    dims: span (..., pages_per_expert, page_elems) -> pytree whose leaves
+    have shape (..., *leaf_shape) — the compacted (A, ...) expert subset
+    the two-phase MoE step computes on."""
+    lead = span.shape[:-2]
+    flat = span.reshape(lead + (-1,))
+    out: Dict = {}
+    for e in em.leaves:
+        n = int(np.prod(e.shape)) if e.shape else 1
+        leaf = flat[..., e.offset:e.offset + n].reshape(lead + e.shape)
+        node = out
+        for p in e.path[:-1]:
+            node = node.setdefault(p, {})
+        node[e.path[-1]] = leaf
+    return out
+
+
+def pack_layer_stack_split(stacked: Dict, page_elems: int = 1 << 20
+                           ) -> Tuple[jax.Array, Optional[jax.Array],
+                                      SplitManifest]:
+    """Split one stacked layer group into a shared span (everything that
+    streams every layer: attention, norms, router, shared experts) and
+    per-(layer, expert) spans for the routed expert weights.
+
+    Returns (shared_pages (L*ppl, page_elems),
+             expert_pages (L, E, pages_per_expert, page_elems) or None,
+             SplitManifest)."""
+    leaves = _flatten_with_paths(stacked)
+    expert_leaves = [(p, l) for p, l in leaves if _is_expert_leaf(p)]
+    shared_leaves = [(p, l) for p, l in leaves if not _is_expert_leaf(p)]
+    shared_pages, shared_manifest = pack_layer_stack(
+        _tree_from_leaves(shared_leaves), page_elems)
+    if not expert_leaves:
+        return shared_pages, None, SplitManifest(shared_manifest, None)
+    expert_pages, em = pack_expert_stack(expert_leaves, page_elems)
+    return shared_pages, expert_pages, SplitManifest(shared_manifest, em)
+
+
+@dataclass
+class PagedWeights:
+    """Engine-facing bundle for split (expert-granular) paging: per-group
+    shared spans shaped for the layer scan, plus the per-(layer, expert)
+    page pools and manifests for every MoE group.  Groups without routed
+    experts appear only in ``pages``/``manifests`` (identical to the
+    whole-layer path)."""
+    pages: Dict[str, jax.Array]              # key -> (L, ppl, page_elems)
+    manifests: Dict[str, PageManifest]
+    expert_pages: Dict[str, jax.Array]       # key -> (L, E, ppe, page_elems)
+    expert_manifests: Dict[str, ExpertManifest]
+
+    def shared_layer_bytes(self, key: str) -> int:
+        m = self.manifests[key]
+        return (m.pages_per_layer * m.page_elems
+                * np.dtype(m.dtype).itemsize)
+
+
+def pack_block_groups_split(blocks: Dict, page_elems: int = 1 << 20
+                            ) -> PagedWeights:
+    """Split-pack every period-position group of a model's stacked block
+    params (the expert-granular analogue of ``pack_block_groups``)."""
+    pages, manifests, epages, emanifests = {}, {}, {}, {}
+    for key, group in blocks.items():
+        shared, experts, sm = pack_layer_stack_split(group, page_elems)
+        L = sm.shared.num_layers
+        pages[key] = shared.reshape(L, sm.shared.pages_per_layer,
+                                    sm.shared.page_elems)
+        manifests[key] = sm.shared
+        if experts is not None:
+            epages[key] = experts
+            emanifests[key] = sm.experts
+    return PagedWeights(pages, manifests, epages, emanifests)
 
 
 def unflatten_span(span: jax.Array, manifest: PageManifest) -> Dict:

@@ -85,10 +85,16 @@ def memory_usage(cfg: ModelConfig, wl: Workload, pol: Policy,
 # ---------------------------------------------------------------------------
 
 def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
-             dtype_bytes: int = 2) -> Dict[str, float]:
+             dtype_bytes: int = 2, expert_popularity=None) -> Dict[str, float]:
     """Per-layer decode latency (Eq. 12) and end-to-end generation
-    throughput (tokens/s) including prefill amortization."""
-    lw = H.LayerWorkload.decode(cfg, pol.batch, wl.avg_ctx, dtype_bytes)
+    throughput (tokens/s) including prefill amortization.
+
+    expert_popularity: optional measured routing-frequency table ((E,) or
+    (L, E), e.g. core.residency's EWMA) — MoE weight traffic then uses
+    expected activated-expert bytes × miss rate of the r_w-sized resident
+    cache (H.expert_hit_rate) instead of the uniform (1 - r_w) stream."""
+    lw = H.LayerWorkload.decode(cfg, pol.batch, wl.avg_ctx, dtype_bytes,
+                                popularity=expert_popularity)
     lat = H.layer_latency(hw, lw, pol)
     t_layer = lat["t_layer"]
     # prefill: compute-bound on the accelerator, overlapped with weight
@@ -114,10 +120,16 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
            dtype_bytes: int = 2,
            ub_grid=(4, 8, 16, 32, 36, 64, 100, 128, 256),
            mult_grid=(1, 2, 4, 8, 15, 16, 26, 32, 61, 64, 92, 128, 256),
-           ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0)) -> Dict:
+           ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0),
+           expert_popularity=None) -> Dict:
     """Exact enumeration over the 6-tuple.  Returns the best feasible
     policy and its estimate; also the best with attention forced to each
-    device (for the §6.3-style case study)."""
+    device (for the §6.3-style case study).
+
+    With ``expert_popularity`` (a measured routing-frequency table), the
+    MoE weight-traffic term becomes expected activated-expert bytes ×
+    residency miss rate, so the search genuinely trades r_w against hit
+    rate — skewed routing shifts the optimum toward smaller r_w."""
     gpu_cap = hw.level("gpu").capacity
     cpu_cap = hw.level("cpu").capacity
     best: Optional[Dict] = None
@@ -132,7 +144,8 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
                 mem = memory_usage(cfg, wl, pol, dtype_bytes)
                 if mem["gpu"] > gpu_cap or mem["cpu"] > cpu_cap:
                     continue
-                est = estimate(cfg, hw, wl, pol, dtype_bytes)
+                est = estimate(cfg, hw, wl, pol, dtype_bytes,
+                               expert_popularity=expert_popularity)
                 cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
                         "mem_cpu": mem["cpu"]}
                 if best is None or cand["throughput"] > best["throughput"]:

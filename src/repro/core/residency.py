@@ -1,0 +1,222 @@
+"""Device-resident expert cache (control plane for expert-granular paging).
+
+The paper's policy tuple sizes a weight budget with ``r_w`` but the seed
+paging layer streamed every layer's full page span regardless — all E
+experts — even though top-k routing touches a fraction of them.  This
+module turns ``r_w`` into an actual placement decision: a fixed device
+page pool holds ``capacity`` expert spans (``slots_from_ratio`` converts
+the policy ratio into a span count), an activation-popularity EWMA (the
+``core.batching.GenLenEWMA`` pattern lifted to a (layer, expert) table)
+decides which spans deserve the slots, and hit/miss + H2D-byte counters
+make the traffic observable (``benchmarks/bench_paging.py`` reports them).
+
+Split of responsibilities:
+
+  * data plane — functional JAX: the pool array and the
+    ``(layer, expert) → slot`` resident map are *arguments* to the jitted
+    serving steps; the in-scan gather reads resident spans from the pool
+    and streams misses from the host store (models.moe.moe_paged);
+  * control plane — this module, host-side numpy: which span occupies
+    which slot, popularity, pins, counters.  The engine snapshots
+    ``slot_of`` into the step call, so evicting *after* a chunk is
+    dispatched can never corrupt it (the chunk holds its snapshot);
+    pins additionally protect the spans an in-flight chunk may read so
+    the router-ahead prefetch for the *next* group cannot recycle them.
+
+Accounting model (consistent with DESIGN.md §2 — on the CPU validation
+container traffic is accounted, not physically transferred):
+
+  * an activated expert whose span is resident is a **hit** (0 bytes);
+  * an activated non-resident expert is a **miss** and streams its span
+    inline (``span_bytes`` H2D).  Demand-admitting it into the pool in
+    the same step reuses that stream (no second charge);
+  * a router-ahead **prefetch** admits a predicted span before use and
+    pays ``span_bytes`` up front; its later activation is then a hit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Pair = Tuple[int, int]                       # (layer, expert)
+
+
+def slots_from_ratio(w_gpu_ratio: float, num_layers: int,
+                     num_experts: int) -> int:
+    """Pool capacity (in expert spans) implied by the policy's ``r_w``:
+    the fraction of all (layer, expert) spans that fits device-resident."""
+    total = num_layers * num_experts
+    return int(np.clip(round(w_gpu_ratio * total), 0, total))
+
+
+@dataclass
+class ResidencyCounters:
+    hits: int = 0            # activated & resident (0 bytes)
+    misses: int = 0          # activated & streamed inline (span_bytes)
+    prefetches: int = 0      # admitted ahead of use (span_bytes)
+    demand_admits: int = 0   # miss stream landed in a pool slot (no charge)
+    evictions: int = 0
+    refusals: int = 0        # admission declined (pinned/hotter cache)
+    h2d_bytes: int = 0       # expert-span H2D traffic booked
+
+    @property
+    def fetches(self) -> int:
+        """Total activated-expert fetch events (hits + misses)."""
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.fetches if self.fetches else 0.0
+
+
+class ExpertResidency:
+    """Fixed-capacity residency manager for one stacked layer group.
+
+    Invariants (enforced by tests/test_residency.py):
+      * occupancy ≤ capacity, and ``slot_of``/``owner`` stay a bijection
+        between resident pairs and occupied slots;
+      * a pinned span (in use by an in-flight chunk) is never evicted;
+      * ``counters.fetches == hits + misses`` counts every activated
+        expert fetch exactly once.
+    """
+
+    def __init__(self, num_layers: int, num_experts: int, *, capacity: int,
+                 span_bytes: int, alpha: float = 0.25):
+        assert 0.0 < alpha <= 1.0
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.capacity = int(max(0, min(capacity, num_layers * num_experts)))
+        self.span_bytes = span_bytes
+        self.alpha = alpha
+        self.slot_of = np.full((num_layers, num_experts), -1, np.int32)
+        self.owner = np.full((self.capacity,), -1, np.int64)  # flat pair id
+        self.free: List[int] = list(range(self.capacity))
+        self.pinned: set = set()                              # flat pair ids
+        self.popularity = np.zeros((num_layers, num_experts), np.float64)
+        self.counters = ResidencyCounters()
+
+    # ------------------------------------------------------------- ids
+    def _pid(self, layer: int, expert: int) -> int:
+        return int(layer) * self.num_experts + int(expert)
+
+    def _pair(self, pid: int) -> Pair:
+        return divmod(int(pid), self.num_experts)
+
+    # ---------------------------------------------------------- queries
+    def is_resident(self, layer: int, expert: int) -> bool:
+        return self.slot_of[layer, expert] >= 0
+
+    def occupancy(self) -> int:
+        return int((self.slot_of >= 0).sum())
+
+    def resident_pairs(self) -> List[Pair]:
+        return [self._pair(o) for o in self.owner if o >= 0]
+
+    # ------------------------------------------------------------- pins
+    def pin(self, pairs: Sequence[Pair]) -> None:
+        """Protect spans an in-flight chunk may read in place: they cannot
+        be evicted until ``unpin_all`` (called once the chunk's results
+        are back on the host)."""
+        self.pinned.update(self._pid(l, e) for l, e in pairs)
+
+    def pin_resident(self) -> None:
+        """Pin every currently-resident span: a dispatched chunk may read
+        any of them in place, so none may be evicted until it lands."""
+        self.pinned.update(int(o) for o in self.owner if o >= 0)
+
+    def unpin_all(self) -> None:
+        self.pinned.clear()
+
+    # ----------------------------------------------- observe (accounting)
+    def observe(self, activated: np.ndarray,
+                token_counts: Optional[np.ndarray] = None,
+                resident_mask: Optional[np.ndarray] = None) -> List[Pair]:
+        """Record one forward step's router decisions.
+
+        activated: (L, E) bool — experts gated this step; token_counts
+        optionally weights the popularity update by tokens routed.
+        Updates the popularity EWMA, books hits / misses (+ inline H2D
+        bytes for misses), and returns the missed pairs hottest-first —
+        the admission candidates for the engine's prefetch queue.
+
+        resident_mask: (L, E) bool snapshot of residency *at dispatch* of
+        the step being booked — hits/misses must be judged against the
+        map the step actually read, not the live one (prefetch/demand
+        admissions may have landed since)."""
+        activated = np.asarray(activated, bool)
+        w = (np.asarray(token_counts, np.float64) if token_counts is not None
+             else activated.astype(np.float64))
+        denom = np.maximum(w.sum(axis=1, keepdims=True), 1.0)
+        self.popularity += self.alpha * (w / denom - self.popularity)
+
+        res = (np.asarray(resident_mask, bool) if resident_mask is not None
+               else self.slot_of >= 0)
+        missed: List[Pair] = []
+        for l, e in zip(*np.nonzero(activated)):
+            if res[l, e]:
+                self.counters.hits += 1
+            else:
+                self.counters.misses += 1
+                self.counters.h2d_bytes += self.span_bytes
+                missed.append((int(l), int(e)))
+        missed.sort(key=lambda p: -self.popularity[p])
+        return missed
+
+    # ------------------------------------------------------- admit/evict
+    def admit(self, layer: int, expert: int, *, demand: bool = False,
+              allow_evict: bool = True) -> Optional[int]:
+        """Grant (layer, expert) a pool slot; the caller must then copy
+        the span into it.  Uses a free slot if any, else (when
+        ``allow_evict``) evicts the coldest unpinned resident — only if
+        it is strictly colder than the candidate (no thrash when the
+        cache is already hotter), and never a pinned (in-flight) span.
+        Returns the slot id, or None when already resident / refused /
+        capacity is zero.
+
+        demand=True marks a miss stream landing directly in the pool (the
+        bytes were already booked by ``observe``); otherwise this is a
+        router-ahead prefetch and pays ``span_bytes`` now.  The engine's
+        demand path passes allow_evict=False — misses only fill free
+        slots, and popularity-driven *replacement* is the prefetch
+        path's job — so the two admission flows stay observable in the
+        counters."""
+        if self.capacity == 0 or self.is_resident(layer, expert):
+            return None
+        if self.free:
+            slot = self.free.pop()
+        elif not allow_evict:
+            self.counters.refusals += 1
+            return None
+        else:
+            cands = [(self.popularity[self._pair(o)], s)
+                     for s, o in enumerate(self.owner)
+                     if o not in self.pinned]
+            if not cands:
+                self.counters.refusals += 1
+                return None
+            vpop, slot = min(cands)
+            if vpop >= self.popularity[layer, expert]:
+                self.counters.refusals += 1
+                return None
+            self.evict(slot)
+            self.free.remove(slot)
+        self.owner[slot] = self._pid(layer, expert)
+        self.slot_of[layer, expert] = slot
+        if demand:
+            self.counters.demand_admits += 1
+        else:
+            self.counters.prefetches += 1
+            self.counters.h2d_bytes += self.span_bytes
+        return slot
+
+    def evict(self, slot: int) -> None:
+        pid = int(self.owner[slot])
+        assert pid >= 0, f"evicting empty slot {slot}"
+        assert pid not in self.pinned, \
+            f"evicting pinned span {self._pair(pid)} (in-flight)"
+        self.slot_of[self._pair(pid)] = -1
+        self.owner[slot] = -1
+        self.free.append(slot)
+        self.counters.evictions += 1

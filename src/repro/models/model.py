@@ -26,7 +26,7 @@ from repro.models.attention import attn_forward, gqa_forward
 from repro.models.common import (act_fn, apply_norm, sinusoidal_positions,
                                  softcap)
 from repro.models.mamba import mamba_forward
-from repro.models.moe import gated_ffn, moe_apply
+from repro.models.moe import gated_ffn, moe_apply, moe_apply_paged
 
 
 @dataclass
@@ -38,6 +38,38 @@ class ExecPolicy:
     use_kernels: bool = False
     remat: bool = False
     scan_unroll: int = 1
+
+
+@dataclass
+class _ExpertCtx:
+    """Scan-invariant state for one group's expert-granular paged weights:
+    the host page store, its manifest, and (optionally) the device
+    residency pool + (layer, expert) → slot map snapshot."""
+    pages: Any                            # (L, E, ppe, page_elems) host store
+    manifest: Any                         # paging.ExpertManifest
+    pool: Optional[Any] = None            # (slots, ppe, page_elems) device
+    resident_map: Optional[Any] = None    # (L, E) int32, -1 = host only
+
+    def make_fetch(self, layer):
+        """Bind the traced layer index: fetch(sel (A,)) gathers the
+        activated experts' spans — resident spans read in place from the
+        pool, misses stream from the host store (on TPU the store lives in
+        pinned host memory, so this gather IS the H2D transfer) — and
+        rebuilds the compacted (A, ...) expert params."""
+        from repro.core import paging as _paging
+
+        def fetch(sel):
+            host_span = self.pages[layer][sel]          # (A, ppe, pe)
+            if self.pool is not None:
+                slot = self.resident_map[layer][sel]    # (A,)
+                pool_span = self.pool[jnp.maximum(slot, 0)]
+                span = jnp.where((slot >= 0)[:, None, None],
+                                 pool_span, host_span)
+            else:
+                span = host_span
+            return _paging.unflatten_expert_span(span, self.manifest)
+
+        return fetch
 
 
 # ---------------------------------------------------------------------------
@@ -61,9 +93,16 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p: Dict, x, *,
                 positions, cache: Optional[Dict], mode: str,
                 pos: Optional[jax.Array], enc_out: Optional[jax.Array],
                 xattn_cache: Optional[Dict], policy: Optional[ExecPolicy],
-                causal: bool = True):
-    """Returns (x, new_cache, new_xattn_cache, aux_loss)."""
+                causal: bool = True, expert_fetch=None):
+    """Returns (x, new_cache, new_xattn_cache, aux_loss, expert_counts).
+
+    With ``expert_fetch`` set (expert-granular paged weights), the MoE FFN
+    runs the two-phase step: router first, then a gather of only the
+    activated experts' page spans; ``expert_counts`` (E,) reports the
+    routing so the host-side residency cache can learn popularity and
+    account hits/misses.  Otherwise expert_counts is None."""
     aux = jnp.float32(0.0)
+    ecounts = None
     new_cache, new_x = cache, xattn_cache
 
     if spec.kind == "mamba":
@@ -101,13 +140,17 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p: Dict, x, *,
     if spec.ffn:
         h = apply_norm(cfg, p.get("ffn_norm", {}), x)
         if spec.moe:
-            y, aux = moe_apply(cfg, p["moe"], h, policy)
+            if expert_fetch is not None:
+                y, aux, ecounts = moe_apply_paged(cfg, p["moe"], h,
+                                                  expert_fetch, policy)
+            else:
+                y, aux = moe_apply(cfg, p["moe"], h, policy)
         else:
             y = dense_ffn(cfg, p["ffn"], h)
         if cfg.post_block_norm:
             y = apply_norm(cfg, p["post_ffn_norm"], y)
         x = x + y
-    return x, new_cache, new_x, aux
+    return x, new_cache, new_x, aux, ecounts
 
 
 # ---------------------------------------------------------------------------
@@ -120,15 +163,22 @@ def _tree_index(tree, i):
 
 def _run_group(cfg, specs, stacked_p, x, *, n_steps, positions, cache_group,
                mode, pos, enc_out, xattn_group, policy, causal=True,
-               manifests=None):
+               manifests=None, expert_ctx=None):
     """Scan `n_steps` times over a group of layer specs whose params (and
     caches) are stacked on the leading axis.  When `manifests` maps a
     group key to a PageManifest, that group's xs entry is a page span
-    (paged weights, paper Appendix A.1) rebuilt in-scan."""
+    (paged weights, paper Appendix A.1) rebuilt in-scan.  When
+    `expert_ctx` maps a group key to an _ExpertCtx, that group's span is
+    the *shared* span only and the MoE expert weights are fetched
+    router-gated per layer (two-phase step); the scan then also stacks
+    per-layer expert activation counts for the residency control plane.
+
+    Returns (x, aux, new_cache, new_xattn, expert_counts) where
+    expert_counts is {key: (n_steps, E)} (empty without expert_ctx)."""
 
     def body(carry, xs):
         x, aux = carry
-        p_sl, cache_sl, xattn_sl = xs
+        p_sl, cache_sl, xattn_sl, layer = xs
         if manifests:
             from repro.core import paging as _paging
             p_sl = {k: (_paging.unflatten_span(v, manifests[k])
@@ -136,19 +186,23 @@ def _run_group(cfg, specs, stacked_p, x, *, n_steps, positions, cache_group,
                     for k, v in p_sl.items()}
         has_cache = isinstance(cache_sl, dict)
         has_xc = isinstance(xattn_sl, dict)
-        new_caches, new_xs = {}, {}
+        new_caches, new_xs, counts = {}, {}, {}
         for i, spec in enumerate(specs):
             key = f"p{i}"
-            x, nc, nx, a = block_apply(
+            fetch = (expert_ctx[key].make_fetch(layer)
+                     if expert_ctx and key in expert_ctx else None)
+            x, nc, nx, a, ec = block_apply(
                 cfg, spec, p_sl[key], x, positions=positions,
                 cache=cache_sl.get(key) if has_cache else None, mode=mode,
                 pos=pos, enc_out=enc_out,
                 xattn_cache=xattn_sl if (spec.cross_attn and has_xc) else None,
-                policy=policy, causal=causal)
+                policy=policy, causal=causal, expert_fetch=fetch)
             if nc is not None and has_cache:
                 new_caches[key] = nc
             if nx is not None:
                 new_xs = nx
+            if ec is not None:
+                counts[key] = ec
             aux = aux + a
         if new_xs:
             out_xattn = new_xs
@@ -156,7 +210,7 @@ def _run_group(cfg, specs, stacked_p, x, *, n_steps, positions, cache_group,
             out_xattn = xattn_sl
         else:
             out_xattn = jnp.int32(0)
-        return (x, aux), (new_caches, out_xattn)
+        return (x, aux), (new_caches, out_xattn, counts)
 
     if policy and policy.remat and mode == "train":
         body = jax.checkpoint(body, prevent_cse=False)
@@ -170,12 +224,13 @@ def _run_group(cfg, specs, stacked_p, x, *, n_steps, positions, cache_group,
           cache_stacked if cache_stacked is not None else
           jnp.zeros((n_steps,), jnp.int32),
           xattn_stacked if xattn_stacked is not None else
-          jnp.zeros((n_steps,), jnp.int32))
-    (x, aux), (new_cache, new_xattn) = jax.lax.scan(
+          jnp.zeros((n_steps,), jnp.int32),
+          jnp.arange(n_steps))
+    (x, aux), (new_cache, new_xattn, counts) = jax.lax.scan(
         body, (x, jnp.float32(0.0)), xs,
         unroll=policy.scan_unroll if policy else 1)
     return x, aux, (new_cache if cache_group else None), \
-        (new_xattn if has_x else None)
+        (new_xattn if has_x else None), counts
 
 
 # ---------------------------------------------------------------------------
@@ -201,7 +256,7 @@ def encoder_forward(cfg: ModelConfig, params, frames, policy=None):
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     x = frames + sinusoidal_positions(positions, E).astype(frames.dtype)
     enc = params["encoder"]
-    x, _, _, _ = _run_group(
+    x, _, _, _, _ = _run_group(
         cfg, (LayerSpec(cross_attn=False),), enc["blocks"], x,
         n_steps=cfg.encoder_layers, positions=positions, cache_group=None,
         mode="encode", pos=None, enc_out=None, xattn_group=None,
@@ -211,7 +266,7 @@ def encoder_forward(cfg: ModelConfig, params, frames, policy=None):
 
 def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
             frames=None, patches=None, policy: Optional[ExecPolicy] = None,
-            paged_blocks=None, fill_len=None):
+            paged_blocks=None, fill_len=None, expert_state=None):
     """tokens: (B,S) int32.  mode: train | prefill | decode | chunk_prefill.
     Returns dict(hidden, cache, aux_loss).  Call `unembed` for logits.
 
@@ -226,7 +281,16 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
     paged_blocks: optional (pages_dict, manifests) from
     core.paging.pack_block_groups — replaces params['blocks'] with paged
     weight spans consumed layer-by-layer inside the scan (the offloaded
-    serving path; pages may live in host memory on TPU)."""
+    serving path; pages may live in host memory on TPU) — OR a
+    core.paging.PagedWeights from pack_block_groups_split for the
+    expert-granular path: the scan streams only each layer's *shared*
+    span and the MoE experts are fetched router-gated per layer.
+    `expert_state` then optionally maps each MoE group key to
+    (pool (slots, ppe, page_elems), resident_map (L, E) int32): spans
+    whose map entry is >= 0 are read in place from the device pool,
+    the rest stream from the host store.  The result dict gains
+    "expert_counts" ({key: (n_steps, E)} tokens-routed counts) so the
+    host residency cache can learn popularity and account traffic."""
     B, S = tokens.shape
     if mode == "decode":
         assert cache is not None
@@ -257,7 +321,7 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
     new_cache = dict(cache) if cache is not None else None
 
     if cfg.prologue:
-        x, aux, npc, _ = _run_group(
+        x, aux, npc, _, _ = _run_group(
             cfg, (cfg.prologue[0],), {"p0": params["prologue"]["p0"]}, x,
             n_steps=len(cfg.prologue), positions=positions,
             cache_group={"p0": cache["prologue"]} if cache is not None else None,
@@ -277,14 +341,25 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
 
     blocks = params["blocks"]
     manifests = None
+    expert_ctx = None
     if paged_blocks is not None:
-        blocks, manifests = paged_blocks
-    x, aux, npc, nxc = _run_group(
+        from repro.core import paging as _paging
+        if isinstance(paged_blocks, _paging.PagedWeights):
+            blocks, manifests = paged_blocks.pages, paged_blocks.manifests
+            if paged_blocks.expert_manifests:
+                expert_ctx = {}
+                for k, em in paged_blocks.expert_manifests.items():
+                    pool, rmap = (expert_state or {}).get(k, (None, None))
+                    expert_ctx[k] = _ExpertCtx(paged_blocks.expert_pages[k],
+                                               em, pool, rmap)
+        else:
+            blocks, manifests = paged_blocks
+    x, aux, npc, nxc, ecounts = _run_group(
         cfg, cfg.period, blocks, x, n_steps=cfg.num_periods,
         positions=positions, cache_group=cache_group,
         mode=run_mode if run_mode in ("decode", "chunk") else "full",
         pos=pos, enc_out=enc_out, xattn_group=xattn_group, policy=policy,
-        manifests=manifests)
+        manifests=manifests, expert_ctx=expert_ctx)
     aux_total += aux
     if new_cache is not None:
         if npc is not None:
@@ -297,7 +372,10 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
         new_cache["pos"] = cache["pos"] + step
 
     x = apply_norm(cfg, params.get("final_norm", {}), x)
-    return {"hidden": x, "cache": new_cache, "aux_loss": aux_total}
+    out = {"hidden": x, "cache": new_cache, "aux_loss": aux_total}
+    if expert_ctx is not None:
+        out["expert_counts"] = ecounts
+    return out
 
 
 def unembed(cfg: ModelConfig, params, hidden):

@@ -25,7 +25,7 @@ sigmoid scoring with top-k renormalization (deepseek-v3 ``router_scale``).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -167,17 +167,26 @@ def moe_grouped(cfg: ModelConfig, p: Dict, x, *, capacity_factor=None,
 # Expert-parallel bodies (to be wrapped in shard_map by distributed.sharding)
 # ---------------------------------------------------------------------------
 
+def _axis_size(name) -> int:
+    """Static mesh-axis size inside shard_map: jax.lax.axis_size on new
+    jax; jax.core.axis_frame(name) (which returns the size) on 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    from jax import core as _core
+    return _core.axis_frame(name)
+
+
 def _combined_axis_index(axis_names):
     idx = jnp.int32(0)
     for a in axis_names:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _combined_axis_size(axis_names):
     m = 1
     for a in axis_names:
-        m *= jax.lax.axis_size(a)
+        m *= _axis_size(a)
     return m
 
 
@@ -283,6 +292,116 @@ def moe_ep_a2a_local(cfg: ModelConfig, p_local: Dict, x, *, expert_axes,
         out = out + sh
     aux = jax.lax.pmean(aux, expert_axes)
     return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-granular paged path (two-phase layer step)
+# ---------------------------------------------------------------------------
+
+def activated_experts(idx, num_experts: int, max_active: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Compact the routed expert set: idx (T, K) -> (sel, index_map, n_act).
+
+    sel (max_active,): activated expert ids in ascending order, padded with
+    0 beyond n_act (padding slots never receive tokens — the index map only
+    targets real compact slots, and subset compute masks them to a weight
+    of exactly zero).  index_map (E,): expert id → compact slot, -1 if not
+    activated.  ``max_active`` must be ≥ min(E, T*K) for exactness; the
+    callers derive it from static shapes so this always holds."""
+    hit = jnp.zeros((num_experts,), bool).at[idx.reshape(-1)].set(True)
+    index_map = jnp.where(hit, jnp.cumsum(hit) - 1, -1).astype(jnp.int32)
+    sel = jnp.nonzero(hit, size=max_active, fill_value=0)[0].astype(jnp.int32)
+    return sel, index_map, jnp.sum(hit).astype(jnp.int32)
+
+
+def _dense_subset(cfg: ModelConfig, ep: Dict, x, w, idx, sel, n_act):
+    """Dense-oracle compute on a compacted expert subset.  Accumulates in
+    ascending activated-expert order, so the result matches ``moe_dense``
+    bit-for-bit up to ±0 (the experts it skips contribute exactly zero
+    there)."""
+    A = ep["wi"].shape[0]
+    wi_all, wo_all = expert_weights(ep, x.dtype)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for a in range(A):
+        y = gated_ffn(cfg, wi_all[a], wo_all[a], x)
+        we = jnp.sum(jnp.where(idx == sel[a], w, 0.0), axis=-1)     # (T,)
+        we = jnp.where(a < n_act, we, 0.0)     # mask pad slots (sel[a] == 0)
+        out = out + y.astype(jnp.float32) * we[:, None]
+    return out.astype(x.dtype)
+
+
+def _grouped_subset(cfg: ModelConfig, ep: Dict, x, w, idx, index_map,
+                    capacity_factor=None, use_kernel: bool = False):
+    """Capacity-bucketed grouped compute on a compacted subset.  Capacity
+    and keep/drop decisions use the FULL expert count (cfg.num_experts),
+    so drops are identical to ``moe_grouped`` on the full set."""
+    T, D = x.shape
+    NE, K = cfg.num_experts, cfg.top_k
+    A = ep["wi"].shape[0]
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(1, int(T * K * cf / NE + 0.999))
+
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_w = w.reshape(-1)
+    dest = index_map[flat_e]                   # compact slot, always >= 0
+    slot, keep = _bucket(dest, A, cap)
+    e_safe = jnp.where(keep, dest, 0)
+    s_safe = jnp.where(keep, slot, cap - 1)
+
+    xbuf = jnp.zeros((A, cap, D), x.dtype)
+    xbuf = xbuf.at[e_safe, s_safe].add(
+        jnp.where(keep[:, None], x[flat_t], 0).astype(x.dtype))
+    ybuf = grouped_ffn(cfg, ep["wi"], ep["wo"], xbuf, use_kernel,
+                       ep.get("wi_scale"), ep.get("wo_scale"))
+    y = ybuf[e_safe, s_safe]
+    y = jnp.where(keep[:, None], y, 0) * flat_w[:, None].astype(x.dtype)
+    return jnp.zeros_like(x).at[flat_t].add(y)
+
+
+def moe_paged(cfg: ModelConfig, p: Dict, x, *, fetch_experts,
+              policy=None, max_active: Optional[int] = None
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-phase MoE step for expert-granular paged weights: run the
+    router FIRST, then fetch only the activated experts' page spans
+    (``fetch_experts(sel (A,)) -> {wi (A,...), wo (A,...)[, scales]}`` —
+    resident spans read in place from the device pool, misses stream from
+    the host store) and compute on the compacted subset.
+
+    x: (T, D).  Returns (out, aux_loss, counts (E,) int32 — tokens routed
+    to each expert, the residency EWMA's observation).  Numerics match
+    moe_dense / moe_grouped on the full expert set (skipped experts
+    contribute exactly zero there), so greedy transcripts are
+    bit-identical to whole-layer streaming."""
+    T, D = x.shape
+    NE, K = cfg.num_experts, cfg.top_k
+    A = max_active if max_active is not None else min(NE, T * K)
+    w, idx, aux = route(cfg, p["router"], x)
+    counts = jnp.zeros((NE,), jnp.int32).at[idx.reshape(-1)].add(1)
+    sel, index_map, n_act = activated_experts(idx, NE, A)
+    ep = fetch_experts(sel)
+    if "wi_scale" in p:
+        # int8 dequant scales live in the shared span (see
+        # paging.EXPERT_LEAF_NAMES): gather the activated experts' scales
+        ep = dict(ep, wi_scale=p["wi_scale"][sel], wo_scale=p["wo_scale"][sel])
+    if policy is not None and policy.moe_impl == "grouped":
+        out = _grouped_subset(cfg, ep, x, w, idx, index_map,
+                              use_kernel=policy.use_kernels)
+    else:
+        out = _dense_subset(cfg, ep, x, w, idx, sel, n_act)
+    if cfg.num_shared_experts:
+        out = out + gated_ffn(cfg, p["shared"]["wi"], p["shared"]["wo"], x)
+    return out, aux, counts
+
+
+def moe_apply_paged(cfg: ModelConfig, p: Dict, x3, fetch_experts,
+                    policy=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(B, S, D) wrapper around moe_paged (the expert-granular analogue of
+    moe_apply)."""
+    B, S, D = x3.shape
+    out, aux, counts = moe_paged(cfg, p, x3.reshape(B * S, D),
+                                 fetch_experts=fetch_experts, policy=policy)
+    return out.reshape(B, S, D), aux, counts
 
 
 def moe_apply(cfg: ModelConfig, p: Dict, x3, policy=None) -> Tuple[jax.Array, jax.Array]:

@@ -52,19 +52,32 @@ bit-identical across static / continuous / overlapped admission.
 ``paged=True`` routes weights through core.paging (pack_block_groups) —
 the 2×W_L double-buffer lives in XLA's scan pipelining on TPU.
 
-See DESIGN.md for the slot pool + admission walkthrough.
+``expert_paged=True`` switches to the expert-granular path
+(pack_block_groups_split): the layer scan streams only each layer's
+*shared* span (attention/norm/router), the MoE expert weights are
+fetched router-gated per layer — resident spans read in place from a
+fixed device pool sized by ``w_gpu_ratio`` (core.residency), misses
+streamed from the host store — and, while group j's decode chunk is in
+flight, the engine prefetches the expert set group j+1's router gated
+last chunk (the request-level analogue of Algorithm 1's j+2 lookahead),
+drained in ``paging.transfer_plan`` slices so the H2D work rides
+alongside every rotation position's compute.  ``weight_traffic()``
+reports the accounted bytes + hit/miss counters.
+
+See DESIGN.md for the slot pool + admission walkthrough and the paged
+weights / expert residency section.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import paging
+from repro.core import paging, residency
 from repro.models import kvcache
 from repro.models.model import ExecPolicy
 from repro.serving import steps as serve_steps
@@ -92,6 +105,12 @@ class EngineConfig:
     # default = the physical pool slice (max_seq × ubatch).  A tighter
     # budget (e.g. from the HRM policy) is what makes EOS-aware
     # reservations bite: more concurrent admissions, preemption on miss.
+    # ------------------------------------ expert-granular paged weights
+    expert_paged: bool = False        # per-(layer, expert) spans + residency
+    w_gpu_ratio: float = 0.25         # r_w — sizes the resident expert pool
+    expert_slots: Optional[int] = None  # explicit pool size (spans) override
+    prefetch: bool = True             # router-ahead prefetch for group j+1
+    residency_alpha: float = 0.25     # expert-popularity EWMA step
 
 
 class _SlotGroup:
@@ -101,6 +120,10 @@ class _SlotGroup:
     def __init__(self, cache, ubatch: int):
         self.cache = cache
         self.last_tok = np.zeros((ubatch,), np.int32)
+        # expert-paged: the expert set this group's router gated on the
+        # last step of its previous chunk ({key: (L, E) bool}) — the
+        # router-ahead prefetch prediction for its next chunk
+        self.pred: Dict[str, np.ndarray] = {}
 
 
 class _ActiveBatch:
@@ -110,6 +133,7 @@ class _ActiveBatch:
         self.requests = requests
         self.cache = cache
         self.last_tokens = last_tokens       # (μ,) next input token
+        self.pred: Dict[str, np.ndarray] = {}
 
 
 class Engine:
@@ -129,7 +153,34 @@ class Engine:
         self.active: List[_ActiveBatch] = []          # static mode only
         self.key = jax.random.key(ecfg.seed)
         self.paged_blocks = None
-        if ecfg.paged:
+        # -------------------------------- expert-granular paged weights
+        self.residency: Dict[str, residency.ExpertResidency] = {}
+        self._expert_pool: Dict[str, jax.Array] = {}
+        self._pending: List[Tuple[str, int, int]] = []   # prefetch queue
+        self._pending_set: set = set()
+        self._fwd_passes = 0          # forward passes dispatched (traffic)
+        if ecfg.expert_paged:
+            pw = paging.pack_block_groups_split(params["blocks"],
+                                                ecfg.page_elems)
+            if not pw.expert_manifests:
+                raise ValueError("expert_paged requires a MoE config "
+                                 "(no routed-expert leaves found)")
+            self.paged_blocks = pw
+            for key, em in pw.expert_manifests.items():
+                slots = (ecfg.expert_slots if ecfg.expert_slots is not None
+                         else residency.slots_from_ratio(
+                             ecfg.w_gpu_ratio, em.num_layers,
+                             em.num_experts))
+                self.residency[key] = residency.ExpertResidency(
+                    em.num_layers, em.num_experts, capacity=slots,
+                    span_bytes=em.span_bytes, alpha=ecfg.residency_alpha)
+                self._expert_pool[key] = jnp.zeros(
+                    (max(1, slots), em.pages_per_expert, em.page_elems),
+                    pw.expert_pages[key].dtype)
+            self._pool_write = jax.jit(
+                lambda pool, span, slot: pool.at[slot].set(span),
+                donate_argnums=(0,))
+        elif ecfg.paged:
             self.paged_blocks = paging.pack_block_groups(
                 params["blocks"], ecfg.page_elems)
         self._prefill = jax.jit(serve_steps.make_prefill_fill_step(
@@ -218,14 +269,177 @@ class Engine:
             w <<= 1
         return min(w, self.ecfg.prefill_chunk)
 
-    def _decode_group(self, cache, last_tok, active, rem):
+    # ---------------------------------- expert residency (data+control)
+    def _expert_state(self):
+        """Snapshot of the residency data plane for one jitted call: the
+        device pool plus the (layer, expert) → slot map.  The jit holds
+        this snapshot, so control-plane mutations after dispatch can
+        never corrupt an in-flight chunk."""
+        return {k: (self._expert_pool[k],
+                    jnp.asarray(self.residency[k].slot_of))
+                for k in self.residency}
+
+    def _copy_span(self, key: str, l: int, e: int, slot: int) -> None:
+        span = self.paged_blocks.expert_pages[key][l, e]
+        self._expert_pool[key] = self._pool_write(
+            self._expert_pool[key], span, jnp.int32(slot))
+
+    def _resident_snap(self) -> Dict[str, np.ndarray]:
+        """Residency mask at dispatch time — what the jitted call's map
+        snapshot says is resident; later admissions must not be booked as
+        hits for this call's steps."""
+        return {k: (r.slot_of >= 0).copy()
+                for k, r in self.residency.items()}
+
+    def _account_counts(self, counts, holder=None, snap=None) -> None:
+        """Book a call's expert activation counts ({key: (..., P, E)}):
+        per forward pass, hits/misses against the residency snapshot the
+        pass actually read, then demand-admit the missed spans — hottest
+        first, so the miss stream doubles as cache fill.  Updates
+        `holder.pred` with the last pass's gating (the router-ahead
+        prediction for that group's next chunk)."""
+        for key, arr in counts.items():
+            r = self.residency[key]
+            a = np.asarray(arr)
+            steps = a.reshape(-1, *a.shape[-2:])          # (n_fwd, P, E)
+            mask = snap[key] if snap is not None else None
+            want: Dict[Tuple[int, int], bool] = {}
+            for s in steps:
+                for pair in r.observe(s > 0, token_counts=s,
+                                      resident_mask=mask):
+                    want[pair] = True
+            for l, e in want:
+                # misses fill free slots only; popularity-driven
+                # replacement is the router-ahead prefetch path's job
+                slot = r.admit(l, e, demand=True, allow_evict=False)
+                if slot is not None:
+                    self._copy_span(key, l, e, slot)
+            if holder is not None:
+                holder.pred[key] = steps[-1] > 0
+
+    def _enqueue_prediction(self, gid: int) -> None:
+        """Queue the expert set group ``gid+1``'s router gated on the last
+        step of its previous chunk (the request-level analogue of
+        Algorithm 1's j+2 weight lookahead), hottest-first."""
+        nxt = self.groups[(gid + 1) % len(self.groups)]
+        for key, act in nxt.pred.items():
+            r = self.residency[key]
+            pairs = [(int(l), int(e)) for l, e in zip(*np.nonzero(act))
+                     if not r.is_resident(l, e)]
+            pairs.sort(key=lambda p: -r.popularity[p])
+            for p in pairs:
+                t = (key, *p)
+                if t not in self._pending_set:
+                    self._pending.append(t)
+                    self._pending_set.add(t)
+
+    def _drain_prefetch(self, gid: int, *, retry_refused: bool) -> None:
+        """Transfer this rotation position's ``paging.transfer_plan``
+        slice of the pending prefetch queue into the pool.  While a chunk
+        is in flight every resident span is pinned, so only free slots
+        fill (H2D overlapping compute); refused entries are re-queued to
+        retry after the chunk lands (``retry_refused=True``) or dropped
+        (the cache is hotter than the prediction)."""
+        if not self._pending:
+            return
+        plan = paging.transfer_plan(len(self._pending), self.ecfg.num_ubs)
+        take = set(plan[gid % self.ecfg.num_ubs])
+        chosen = [t for i, t in enumerate(self._pending) if i in take]
+        keep = [t for i, t in enumerate(self._pending) if i not in take]
+        requeued = []
+        for key, l, e in chosen:
+            r = self.residency[key]
+            if r.is_resident(l, e):
+                self._pending_set.discard((key, l, e))
+                continue
+            slot = r.admit(l, e)      # prefetch: charges span bytes
+            if slot is not None:
+                self._copy_span(key, l, e, slot)
+                self._pending_set.discard((key, l, e))
+            elif retry_refused:
+                requeued.append((key, l, e))
+            else:
+                self._pending_set.discard((key, l, e))
+        self._pending = keep + requeued
+
+    def weight_traffic(self) -> Dict[str, float]:
+        """Accounted H2D weight traffic (DESIGN.md §2: on this container
+        traffic is modeled, not physically moved).  Whole-layer paging
+        streams every group's full span each forward pass; the
+        expert-granular path streams the shared spans plus the
+        missed/prefetched expert spans booked by core.residency."""
+        out: Dict[str, float] = {"fwd_passes": self._fwd_passes,
+                                 "tokens_out": self.tokens_out}
+        if self.residency:
+            pw = self.paged_blocks
+            shared = sum(pw.shared_layer_bytes(k) * pw.manifests[k].num_layers
+                         for k in pw.manifests)
+            expert_full = sum(
+                em.span_bytes * em.num_experts * em.num_layers
+                for em in pw.expert_manifests.values())
+            c = [r.counters for r in self.residency.values()]
+            out.update(
+                mode="expert_paged",
+                shared_bytes=shared * self._fwd_passes,
+                expert_bytes=sum(x.h2d_bytes for x in c),
+                hits=sum(x.hits for x in c),
+                misses=sum(x.misses for x in c),
+                prefetches=sum(x.prefetches for x in c),
+                evictions=sum(x.evictions for x in c),
+                hit_rate=(sum(x.hits for x in c)
+                          / max(1, sum(x.fetches for x in c))),
+                # what whole-layer streaming would have moved for the
+                # same passes (shared + every expert span every layer)
+                whole_layer_bytes=(shared + expert_full) * self._fwd_passes,
+            )
+            out["h2d_bytes"] = out["shared_bytes"] + out["expert_bytes"]
+        elif self.ecfg.paged:
+            _, manifests = self.paged_blocks
+            per_pass = sum(
+                m.pages_per_layer * m.page_elems * m.num_layers
+                * np.dtype(m.dtype).itemsize for m in manifests.values())
+            out.update(mode="paged", h2d_bytes=per_pass * self._fwd_passes)
+        else:
+            out.update(mode="resident", h2d_bytes=0)
+        return out
+
+    def _decode_group(self, cache, last_tok, active, rem, *, holder=None,
+                      gid: Optional[int] = None):
         """Run one masked decode chunk; returns (cache, new_last_tok,
         still_active, toks (T,B), emitted (T,B)) as host arrays where
-        relevant."""
+        relevant.  On the expert-paged path: pins every resident span for
+        the duration of the dispatch (the chunk may read any of them in
+        place), issues the router-ahead prefetch for the next rotation
+        group while the chunk is in flight, then books the returned
+        activation counts."""
         self.key, k = jax.random.split(self.key)
-        cache, tok, act2, _, toks, emitted = self._decode_chunk(
-            self.params, cache, jnp.asarray(last_tok[:, None]),
-            jnp.asarray(active), jnp.asarray(rem), k)
+        args = (self.params, cache, jnp.asarray(last_tok[:, None]),
+                jnp.asarray(active), jnp.asarray(rem), k)
+        chunk = self.ecfg.decode_chunk if self.ecfg.mode == "continuous" else 1
+        self._fwd_passes += chunk
+        if self.residency:
+            snap = self._resident_snap()
+            for r in self.residency.values():
+                r.pin_resident()
+            cache, tok, act2, _, toks, emitted, counts = self._decode_chunk(
+                *args, self._expert_state())
+            prefetching = (self.ecfg.prefetch and gid is not None
+                           and self.groups)
+            if prefetching:
+                # in flight: fill free slots for group gid+1's predicted
+                # set (H2D overlaps the dispatched compute)
+                self._enqueue_prediction(gid)
+                self._drain_prefetch(gid, retry_refused=True)
+            res = (cache, np.array(tok)[:, 0], np.asarray(act2),
+                   np.asarray(toks), np.asarray(emitted))   # sync
+            for r in self.residency.values():
+                r.unpin_all()
+            if prefetching:
+                # landed: retry the refused slice, evictions now allowed
+                self._drain_prefetch(gid, retry_refused=False)
+            self._account_counts(counts, holder=holder, snap=snap)
+            return res
+        cache, tok, act2, _, toks, emitted = self._decode_chunk(*args)
         return (cache, np.array(tok)[:, 0], np.asarray(act2),
                 np.asarray(toks), np.asarray(emitted))
 
@@ -246,6 +460,20 @@ class Engine:
         return int(np.asarray(
             sample(logits, k, temperature=self.ecfg.temperature))[0])
 
+    def _run_prefill(self, step_fn, *args):
+        """Shared prefill wrapper (monolithic fill AND staged chunk)
+        absorbing the expert-paged protocol: one fwd pass booked, the
+        residency snapshot taken at dispatch, activation counts
+        accounted.  Returns (logits, cache)."""
+        self._fwd_passes += 1
+        if self.residency:
+            snap = self._resident_snap()
+            logits, cache, counts = step_fn(self.params, *args,
+                                            self._expert_state())
+            self._account_counts(counts, snap=snap)
+            return logits, cache
+        return step_fn(self.params, *args)
+
     # ------------------------------------------------- continuous mode
     def _admit_continuous(self):
         """Fill freed slots: per admitted request, prefill at its own
@@ -257,8 +485,8 @@ class Engine:
             S = self._bucket(len(eff))
             toks = np.zeros((1, S), np.int32)
             toks[0, :len(eff)] = eff
-            logits, single = self._prefill(
-                self.params, jnp.asarray(toks), self._prefill_scratch,
+            logits, single = self._run_prefill(
+                self._prefill, jnp.asarray(toks), self._prefill_scratch,
                 jnp.asarray([len(eff)], np.int32))
             first = self._sample_first(logits)
             r.generated.append(first)
@@ -292,8 +520,8 @@ class Engine:
         n = min(rem, width)
         toks = np.zeros((1, width), np.int32)
         toks[0, :n] = eff[t:t + n]
-        logits, self._stage_scratch = self._prefill_chunk(
-            self.params, jnp.asarray(toks), self._stage_scratch,
+        logits, self._stage_scratch = self._run_prefill(
+            self._prefill_chunk, jnp.asarray(toks), self._stage_scratch,
             jnp.asarray([n], np.int32))
         # partial slot insert at the row offset: the chunk lands in the
         # pool immediately, so the final flip to DECODE copies nothing
@@ -351,7 +579,8 @@ class Engine:
                 [s.req.remaining if s.state == SlotState.DECODE else 0
                  for s in slots], np.int32)
             group.cache, group.last_tok, act2, toks, emitted = \
-                self._decode_group(group.cache, group.last_tok, active, rem)
+                self._decode_group(group.cache, group.last_tok, active, rem,
+                                   holder=group, gid=gid)
             self.tokens_out += self._emit(
                 toks, emitted, [s.req if s.state == SlotState.DECODE else None
                                 for s in slots])
@@ -376,8 +605,9 @@ class Engine:
                 lens[i] = r.input_len
             # rows beyond len(group) are padding rows (len 0 → masked)
             cache = kvcache.init_cache(self.cfg, mu, self.ecfg.max_seq)
-            logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                          cache, jnp.asarray(lens))
+            logits, cache = self._run_prefill(self._prefill,
+                                              jnp.asarray(toks), cache,
+                                              jnp.asarray(lens))
             self.key, k = jax.random.split(self.key)
             first = np.asarray(
                 sample(logits, k, temperature=self.ecfg.temperature))
@@ -405,7 +635,7 @@ class Engine:
                 continue
             ab.cache, ab.last_tokens, act2, toks, emitted = \
                 self._decode_group(ab.cache, np.asarray(ab.last_tokens),
-                                   active, rem)
+                                   active, rem, holder=ab)
             row_req = [ab.requests[i] if i < len(ab.requests) else None
                        for i in range(mu)]
             self.tokens_out += self._emit(toks, emitted, row_req)

@@ -3,6 +3,14 @@ multi-token ``decode_chunk`` used by the continuous-batching engine.
 
 These are the functions the dry-run lowers for the ``prefill_*`` /
 ``decode_*`` / ``long_*`` shapes, and the engine jits for real serving.
+
+Expert-granular paging (core.paging.PagedWeights with expert manifests)
+changes the step signatures: each step takes a trailing ``expert_state``
+pytree ({key: (pool, resident_map)} — the device residency snapshot) and
+returns per-layer expert activation counts so the engine's host-side
+residency cache can learn popularity and account H2D traffic.
+``_expert_granular`` is the single switch deciding which shape a factory
+produces.
 """
 from __future__ import annotations
 
@@ -12,8 +20,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import paging
 from repro.models.model import ExecPolicy, forward, unembed
 from repro.serving.sampling import sample
+
+
+def _expert_granular(paged_blocks) -> bool:
+    return (isinstance(paged_blocks, paging.PagedWeights)
+            and bool(paged_blocks.expert_manifests))
 
 
 def make_prefill_step(cfg: ModelConfig,
@@ -39,15 +53,20 @@ def make_prefill_fill_step(cfg: ModelConfig,
     position (hidden[:, -1] would read the zero-padded tail for any row
     shorter than the bucket width) and the cache's pos is set per row."""
 
-    def prefill_step(params, tokens, cache, lens):
+    expert = _expert_granular(paged_blocks)
+
+    def prefill_step(params, tokens, cache, lens, expert_state=None):
         out = forward(cfg, params, tokens, cache=cache, mode="prefill",
-                      policy=policy, paged_blocks=paged_blocks)
+                      policy=policy, paged_blocks=paged_blocks,
+                      expert_state=expert_state)
         cache = out["cache"]
         cache["pos"] = lens.astype(jnp.int32)
         idx = jnp.maximum(lens - 1, 0)
         hidden = jnp.take_along_axis(
             out["hidden"], idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         logits = unembed(cfg, params, hidden)
+        if expert:
+            return logits, cache, out["expert_counts"]
         return logits, cache
 
     return prefill_step
@@ -70,14 +89,18 @@ def make_prefill_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
     sequence drains a prompt of any length through one compiled shape per
     chunk-width bucket."""
 
-    def prefill_chunk(params, tokens, cache, fill_len):
+    expert = _expert_granular(paged_blocks)
+
+    def prefill_chunk(params, tokens, cache, fill_len, expert_state=None):
         out = forward(cfg, params, tokens, cache=cache, mode="chunk_prefill",
                       policy=policy, paged_blocks=paged_blocks,
-                      fill_len=fill_len)
+                      fill_len=fill_len, expert_state=expert_state)
         idx = jnp.maximum(fill_len - 1, 0)
         hidden = jnp.take_along_axis(
             out["hidden"], idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         logits = unembed(cfg, params, hidden)
+        if expert:
+            return logits, out["cache"], out["expert_counts"]
         return logits, out["cache"]
 
     return prefill_chunk
@@ -120,14 +143,24 @@ def make_decode_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
     still scatters a KV write at their frozen `pos % W` slot each step,
     so a drained row's cache content is garbage until `reset_slot` +
     refill — it must never be read without that reset.
+
+    Expert-granular paging adds a trailing ``expert_state`` arg (the
+    residency snapshot, constant across the chunk) and a trailing
+    ``counts`` output ({key: (chunk, n_steps, E)} — per inner step, so
+    the host accounting books each step's distinct activations against
+    the snapshot it actually read).
     """
 
-    def decode_chunk(params, cache, tok, active, rem, key):
+    expert = _expert_granular(paged_blocks)
+
+    def decode_chunk(params, cache, tok, active, rem, key,
+                     expert_state=None):
         def body(carry, _):
             cache, tok, active, rem, key = carry
             pos0 = cache["pos"]
             out = forward(cfg, params, tok, cache=cache, mode="decode",
-                          policy=policy, paged_blocks=paged_blocks)
+                          policy=policy, paged_blocks=paged_blocks,
+                          expert_state=expert_state)
             logits = unembed(cfg, params, out["hidden"][:, -1])
             key, sub = jax.random.split(key)
             nxt = sample(logits, sub, temperature=temperature)
@@ -137,10 +170,15 @@ def make_decode_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
             rem2 = rem - emitted.astype(jnp.int32)
             active2 = active & (nxt != eos_id) & (rem2 > 0)
             tok2 = jnp.where(active, nxt, tok[:, 0])[:, None]
-            return (new_cache, tok2, active2, rem2, key), (nxt, emitted)
+            ys = (nxt, emitted) + ((out["expert_counts"],) if expert else ())
+            return (new_cache, tok2, active2, rem2, key), ys
 
-        (cache, tok, active, rem, key), (toks, emitted) = jax.lax.scan(
+        (cache, tok, active, rem, key), ys = jax.lax.scan(
             body, (cache, tok, active, rem, key), None, length=chunk)
+        if expert:
+            toks, emitted, counts = ys
+            return cache, tok, active, rem, toks, emitted, counts
+        toks, emitted = ys
         return cache, tok, active, rem, toks, emitted
 
     return decode_chunk

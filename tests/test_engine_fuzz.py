@@ -2,10 +2,13 @@
 bit-identical per-request greedy transcripts across every execution
 strategy the engine offers — static whole-micro-batch, continuous
 slot-pool at several decode-chunk sizes, overlapped chunked-prefill
-admission at several prefill-chunk widths, and EOS-aware (EWMA)
-reservations with recompute preemption under a tight budget.  A small
-instance runs in the fast CI subset; the wide sweep (more seeds, chunk
-sizes 1/4/8, early-EOS round) carries the `slow` marker."""
+admission at several prefill-chunk widths, EOS-aware (EWMA)
+reservations with recompute preemption under a tight budget, and (on
+the MoE config) the paged weight layouts: whole-layer streaming and
+expert-granular residency in hit-heavy / miss-heavy / prefetch-off
+regimes.  A small instance runs in the fast CI subset; the wide sweep
+(more seeds, chunk sizes 1/4/8, early-EOS round, paged sweeps) carries
+the `slow` marker."""
 import dataclasses
 
 import jax
@@ -60,6 +63,56 @@ def test_cross_mode_transcripts_identical_fast(setup):
         "static": dict(mode="static"),
         "continuous": dict(decode_chunk=4),
         "overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4),
+    })
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.key(4))
+    return cfg, params
+
+
+def test_paged_expert_transcripts_identical_fast(moe_setup):
+    """Weight layout / residency regime must never change greedy output:
+    resident, whole-layer paged, and expert-granular (tight pool) agree."""
+    cfg, params = moe_setup
+    work = _workload(cfg, seed=0, n_requests=5, max_len=24, max_quota=8)
+    _assert_all_identical(cfg, params, work, {
+        "resident": dict(decode_chunk=4),
+        "paged_layer": dict(decode_chunk=4, paged=True, page_elems=4096),
+        "expert_tight": dict(decode_chunk=4, expert_paged=True,
+                             page_elems=4096, w_gpu_ratio=0.25),
+    })
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 2])
+def test_paged_expert_transcripts_identical_sweep(moe_setup, seed):
+    cfg, params = moe_setup
+    work = _workload(cfg, seed=seed, n_requests=8, max_len=32)
+    _assert_all_identical(cfg, params, work, {
+        "static": dict(mode="static"),
+        "resident": dict(decode_chunk=4),
+        "paged_layer": dict(decode_chunk=4, paged=True, page_elems=4096),
+        "expert_stream": dict(decode_chunk=4, expert_paged=True,
+                              page_elems=4096, w_gpu_ratio=0.0),
+        "expert_hit": dict(decode_chunk=4, expert_paged=True,
+                           page_elems=4096, w_gpu_ratio=1.0),
+        "expert_miss": dict(decode_chunk=4, expert_paged=True,
+                            page_elems=4096, expert_slots=1),
+        "expert_noprefetch": dict(decode_chunk=4, expert_paged=True,
+                                  page_elems=4096, w_gpu_ratio=0.25,
+                                  prefetch=False),
+        "expert_overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
+                               expert_paged=True, page_elems=4096,
+                               w_gpu_ratio=0.5),
+        "expert_static": dict(mode="static", expert_paged=True,
+                              page_elems=4096, w_gpu_ratio=0.25),
+        "expert_ewma": dict(decode_chunk=4, expert_paged=True,
+                            page_elems=4096, w_gpu_ratio=0.25,
+                            reserve_mode="ewma", cache_tokens=100),
     })
 
 

@@ -98,6 +98,47 @@ def test_fig10_more_link_bw_more_offload(mixtral):
     assert rws[-1] <= rws[0]
 
 
+def test_expert_hit_rate_uniform_equals_ratio(mixtral):
+    """Uniform routing: the r_w-sized residency cache hits at exactly r_w
+    — the expert-granular traffic term then reduces to the whole-layer
+    (1 - r_w) stream, keeping the legacy policy-search results intact."""
+    for r in (0.0, 0.25, 0.5, 1.0):
+        assert H.expert_hit_rate(r, 8) == pytest.approx(r)
+    import numpy as np
+    uniform = np.full(8, 1 / 8)
+    assert H.expert_hit_rate(0.25, 8, uniform) == pytest.approx(0.25)
+
+
+def test_expert_hit_rate_skew_beats_uniform():
+    """Skewed routing makes a small cache disproportionately effective:
+    the retained top mass exceeds r_w."""
+    import numpy as np
+    skew = np.array([0.5, 0.3, 0.1, 0.04, 0.03, 0.02, 0.005, 0.005])
+    assert H.expert_hit_rate(0.25, 8, skew) == pytest.approx(0.8)
+    # per-layer (L, E) tables average over layers
+    two = np.stack([skew, np.full(8, 1 / 8)])
+    assert H.expert_hit_rate(0.25, 8, two) == pytest.approx((0.8 + 0.25) / 2)
+
+
+def test_skewed_popularity_cuts_weight_traffic(mixtral, l4):
+    """The policy's weight-traffic term is expected activated-expert bytes
+    × miss rate: measured skew lowers per-layer comm bytes at the same
+    r_w, so r_w genuinely trades against hit rate."""
+    import dataclasses as dc
+    import numpy as np
+    pol = P.Policy(batch=256, ubatch=32, attn_on_gpu=False, ffn_on_gpu=True,
+                   w_gpu_ratio=0.25, kv_gpu_ratio=0.0)
+    wl_uni = H.LayerWorkload.decode(mixtral, batch=256, ctx=512)
+    skew = np.array([0.5, 0.3, 0.1, 0.04, 0.03, 0.02, 0.005, 0.005])
+    wl_skew = dc.replace(wl_uni, popularity=skew)
+    lat_uni = H.layer_latency(l4, wl_uni, pol)
+    lat_skew = H.layer_latency(l4, wl_skew, pol)
+    assert lat_skew["comm_bytes"] < lat_uni["comm_bytes"]
+    # uniform == the legacy whole-layer formula (D2 hidden + weight stream)
+    expect = wl_uni.bytes_hidden + wl_uni.bytes_w * (1 - pol.w_gpu_ratio)
+    assert lat_uni["comm_bytes"] == pytest.approx(expect)
+
+
 def test_tpu_adaptation_compute_at_kv_shard(mixtral):
     """The §6.3 case study re-run with v5e constants — the HRM derivation
     behind DESIGN.md §2:
