@@ -1,0 +1,120 @@
+"""Device-KV footprint report: dense max_seq-wide slot pool vs the
+block-granular paged pool with a host-RAM tier.
+
+Serves the same seeded *skewed* workload (half short, half long
+generations over varied prompt lengths — the shape whose actual
+footprints a max_seq-wide pool over-allocates hardest) on the mixtral
+smoke config through four KV layouts —
+
+  * ``dense``    — the seed baseline: one max_seq-wide ring per slot,
+    entirely on device;
+  * ``paged_rc{25,50,100}`` — the shared block arena sized by
+    r_c ∈ {0.25, 0.5, 1.0}: block page tables, cold blocks spilled to
+    the host tier and streamed back through transfer_plan slices.
+
+— and reports device KV bytes (absolute and per served token), arena
+occupancy, block hit/miss/spill/prefetch counters, and wall-clock
+tokens/s, asserting nothing (the acceptance test lives in
+tests/test_kv_paging.py).  Traffic is the engine's own accounting
+(DESIGN.md §2: on the CPU container the tiers are modeled, not
+physically separate memories; the byte counts are exactly what the TPU
+host-offload path would transfer).
+
+``--smoke`` shrinks the workload for the nightly CI job, which uploads
+the emitted ``BENCH_kv.json`` as a workflow artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models.params import init_params
+from repro.serving.engine import Engine, EngineConfig
+
+BLOCK_TOKENS = 16
+RATIOS = (0.25, 0.5, 1.0)
+
+
+def _serve(cfg, params, requests, **kw):
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           decode_chunk=4,
+                                           block_tokens=BLOCK_TOKENS, **kw))
+    for prompt, gen in requests:
+        eng.submit(prompt, gen)
+    t0 = time.perf_counter()
+    out = eng.run_until_idle()
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    return eng, out, toks, dt
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_kv.json"):
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    n_req, short_gen, long_gen = (8, 4, 12) if smoke else (16, 4, 24)
+    requests = [(rng.integers(2, cfg.vocab_size, int(rng.integers(4, 20))),
+                 short_gen if i % 2 == 0 else long_gen)
+                for i in range(n_req)]
+
+    variants = {"dense": {}}
+    for rc in RATIOS:
+        variants[f"paged_rc{int(rc * 100)}"] = dict(kv_paged=True,
+                                                    kv_gpu_ratio=rc)
+    report = {"config": cfg.name, "block_tokens": BLOCK_TOKENS,
+              "ratios": list(RATIOS), "variants": {}}
+    outs = {}
+    for name, kw in variants.items():
+        eng, out, toks, dt = _serve(cfg, params, requests, **kw)
+        outs[name] = out
+        t = eng.kv_traffic()
+        row = {
+            "tokens": toks,
+            "tokens_per_s": toks / dt,
+            "device_kv_bytes": int(t["device_kv_bytes"]),
+            "kv_bytes_per_token": t["device_kv_bytes"] / max(1, toks),
+            "dense_equiv_bytes": int(t["dense_equiv_bytes"]),
+            "device_bytes_reduction_vs_dense":
+                t["dense_equiv_bytes"] / max(1, t["device_kv_bytes"]),
+            "h2d_bytes": int(t["h2d_bytes"]),
+            "d2h_bytes": int(t["d2h_bytes"]),
+        }
+        for k in ("device_blocks", "peak_blocks_in_use",
+                  "arena_utilization", "hits", "misses", "spills",
+                  "prefetches", "hit_rate"):
+            if k in t:
+                row[k] = t[k]
+        report["variants"][name] = row
+        emit(f"kv_{name}", dt * 1e6,
+             f"tok_per_s={toks / dt:.1f},"
+             f"dev_kv_mb={t['device_kv_bytes'] / 1e6:.2f},"
+             f"reduction={row['device_bytes_reduction_vs_dense']:.2f}x"
+             + (f",hit_rate={t['hit_rate']:.2f}" if "hit_rate" in t else ""))
+
+    report["greedy_identical"] = all(outs[n] == outs["dense"] for n in outs)
+    tight = report["variants"][f"paged_rc{int(RATIOS[0] * 100)}"]
+    emit("kv_device_bytes_reduction", 0.0,
+         f"rc={RATIOS[0]},"
+         f"reduction={tight['device_bytes_reduction_vs_dense']:.2f}x,"
+         f"occupancy={tight['arena_utilization']:.2f},"
+         f"greedy_identical={report['greedy_identical']}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk workload for the nightly CI job")
+    ap.add_argument("--out", default="BENCH_kv.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

@@ -11,12 +11,19 @@ with batched requests through the full MoE-Lightning pipeline —
 
   PYTHONPATH=src python examples/offloaded_serving.py \
       [--requests 32] [--mode continuous|static] [--skew] \
-      [--overlap] [--long-prompts]
+      [--overlap] [--long-prompts] \
+      [--kv-paged | --no-kv-paged] [--kv-gpu-ratio 0.25] [--block-tokens 16]
 
 ``--overlap`` stages admission as chunked prefill interleaved with the
 decode chunks (request-level CGOPipe); pair with ``--long-prompts`` to
 see it matter — long varied-length prompts otherwise stall every decode
 group for a whole-prompt (freshly compiled) prefill.
+
+``--kv-paged`` swaps the dense max_seq-wide KV rings for the
+block-granular paged pool (shared arena + page tables) with the host
+tier sized from ``--kv-gpu-ratio`` (the policy's r_c); omitting the
+flag runs BOTH layouts and prints paged-vs-dense device KV bytes/token
+alongside the weight-paging comparison.
 """
 import argparse
 import time
@@ -59,6 +66,18 @@ def main():
     ap.add_argument("--long-prompts", action="store_true",
                     help="draw prompts from 16..48 tokens instead of "
                          "4..24 (shows what --overlap buys)")
+    # --kv-paged / --no-kv-paged; omit to run both layouts and compare
+    ap.add_argument("--kv-paged", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="block-granular paged KV pool (shared arena + "
+                         "page tables + host tier); omit to run both "
+                         "paged and dense and compare bytes/token")
+    ap.add_argument("--kv-gpu-ratio", type=float, default=0.25,
+                    help="r_c — fraction of KV blocks resident in the "
+                         "device arena (rest spills to the host tier)")
+    ap.add_argument("--block-tokens", type=int, default=16,
+                    help="ring positions per KV block (must divide "
+                         "max_seq)")
     args = ap.parse_args()
 
     print(f"params: {count_params(LM_110M) / 1e6:.1f}M")
@@ -84,34 +103,58 @@ def main():
                else args.gen_len)
         requests.append((rng.integers(2, LM_110M.vocab_size, n), gen))
 
-    variants = [(True,), (False,)] if args.paged is None else [(args.paged,)]
+    w_variants = [True, False] if args.paged is None else [args.paged]
+    kv_variants = [True, False] if args.kv_paged is None else [args.kv_paged]
     outs = {}
-    for (paged,) in variants:
-        eng = Engine(LM_110M, params,
-                     EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
-                                  paged=paged, page_elems=1 << 18,
-                                  mode=args.mode, overlap=args.overlap,
-                                  prefill_chunk=16))
-        for prompt, gen in requests:
-            eng.submit(prompt, gen)
-        t0 = time.time()
-        out = eng.run_until_idle()
-        dt = time.time() - t0
-        outs[paged] = out
-        toks = sum(len(v) for v in out.values())
-        traffic = eng.weight_traffic()
-        print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
-              f"({toks / dt:.1f} tok/s, paged={paged}, mode={args.mode}, "
-              f"overlap={args.overlap}, engine ticks={eng.steps}, "
-              f"H2D weight bytes={traffic['h2d_bytes'] / 1e6:.0f}MB)")
-        if args.mode == "continuous":
-            fills = [len(s.history)
-                     for grp in eng.scheduler.slots for s in grp]
-            print(f"slot pool: {len(fills)} slots, "
-                  f"{sum(fills)} admissions (max reuse {max(fills)}x)")
-    if len(outs) == 2:
-        print(f"greedy transcripts identical across paged/resident: "
-              f"{outs[True] == outs[False]}")
+    kv_rows = {}
+    for paged in w_variants:
+        for kv_paged in kv_variants:
+            eng = Engine(LM_110M, params,
+                         EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
+                                      paged=paged, page_elems=1 << 18,
+                                      mode=args.mode, overlap=args.overlap,
+                                      prefill_chunk=16, kv_paged=kv_paged,
+                                      kv_gpu_ratio=args.kv_gpu_ratio,
+                                      block_tokens=args.block_tokens))
+            for prompt, gen in requests:
+                eng.submit(prompt, gen)
+            t0 = time.time()
+            out = eng.run_until_idle()
+            dt = time.time() - t0
+            outs[(paged, kv_paged)] = out
+            toks = sum(len(v) for v in out.values())
+            traffic = eng.weight_traffic()
+            kvt = eng.kv_traffic()
+            kv_rows[kv_paged] = kvt
+            kv_note = (f", KV dev bytes/tok="
+                       f"{kvt['device_kv_bytes'] / max(1, toks):.0f}"
+                       + (f" (arena occ {kvt['arena_utilization']:.2f}, "
+                          f"KV H2D {kvt['h2d_bytes'] / 1e6:.1f}MB)"
+                          if kv_paged else ""))
+            print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
+                  f"({toks / dt:.1f} tok/s, paged={paged}, "
+                  f"kv_paged={kv_paged}, mode={args.mode}, "
+                  f"overlap={args.overlap}, engine ticks={eng.steps}, "
+                  f"H2D weight bytes={traffic['h2d_bytes'] / 1e6:.0f}MB"
+                  f"{kv_note})")
+            if args.mode == "continuous":
+                fills = [len(s.history)
+                         for grp in eng.scheduler.slots for s in grp]
+                print(f"slot pool: {len(fills)} slots, "
+                      f"{sum(fills)} admissions (max reuse {max(fills)}x)")
+    if len(kv_rows) == 2:
+        toks = sum(len(v) for v in next(iter(outs.values())).values())
+        dense_bt = kv_rows[False]["device_kv_bytes"] / max(1, toks)
+        paged_bt = kv_rows[True]["device_kv_bytes"] / max(1, toks)
+        print(f"device KV bytes/token: dense={dense_bt:.0f} "
+              f"paged={paged_bt:.0f} "
+              f"({dense_bt / max(1.0, paged_bt):.2f}x smaller at "
+              f"r_c={args.kv_gpu_ratio})")
+    if len(outs) > 1:
+        base = next(iter(outs.values()))
+        print(f"greedy transcripts identical across all "
+              f"{len(outs)} weight/KV layouts: "
+              f"{all(o == base for o in outs.values())}")
 
 
 if __name__ == "__main__":

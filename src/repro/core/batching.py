@@ -42,6 +42,24 @@ class GenLenEWMA:
         return max(1, min(max_new_tokens, math.ceil(self.value)))
 
 
+def blocks_for_tokens(tokens: int, block_tokens: int) -> int:
+    """Fixed-size KV blocks covering `tokens` ring positions (ceil; 0 for
+    an empty footprint).  The unit of the block-granular paged KV cache's
+    admission accounting: a request occupies whole blocks of the shared
+    arena, so budget charges round up to the block boundary."""
+    if tokens <= 0:
+        return 0
+    return -(-tokens // block_tokens)
+
+
+def round_to_blocks(tokens: int, block_tokens: Optional[int]) -> int:
+    """Token charge of a footprint under block-granular accounting
+    (identity when block_tokens is None — the dense max_seq-wide pool)."""
+    if not block_tokens:
+        return tokens
+    return blocks_for_tokens(tokens, block_tokens) * block_tokens
+
+
 @dataclass(frozen=True)
 class Request:
     rid: int

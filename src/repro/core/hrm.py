@@ -166,10 +166,14 @@ class LayerWorkload:
     bytes_w_expert: float = 0.0   # expected activated routed-expert bytes
     num_experts: int = 0          # routed expert count (0 = dense layer)
     popularity: Optional[object] = None  # (E,) or (L, E) routing frequency
+    kv_hit: Optional[float] = None  # measured device-hit fraction of KV
+    # block touches (core.blockpool counters); None -> the r_c-linear
+    # placement assumption (resident fraction == hit fraction)
 
     @classmethod
     def decode(cls, cfg, batch: int, ctx: float, dtype_bytes: int = 2,
-               experts_hit: Optional[float] = None, popularity=None):
+               experts_hit: Optional[float] = None, popularity=None,
+               kv_hit: Optional[float] = None):
         h1 = cfg.d_model
         hd = cfg.head_dim or 1
         nq = max(cfg.num_heads, 1)
@@ -205,7 +209,8 @@ class LayerWorkload:
                    flops_proj=flops_proj,
                    bytes_w_shared=bytes_w - w_expert * dtype_bytes,
                    bytes_w_expert=w_expert * dtype_bytes,
-                   num_experts=num_experts, popularity=popularity)
+                   num_experts=num_experts, popularity=popularity,
+                   kv_hit=kv_hit)
 
     # Operational intensities (paper Definition 3.1)
     def intensity_attn_vs_kv(self) -> float:
@@ -213,6 +218,24 @@ class LayerWorkload:
 
     def intensity_ffn_vs_weights(self) -> float:
         return self.flops_ffn / max(self.bytes_w, 1.0)
+
+
+def kv_block_hit_rate(kv_gpu_ratio: float, num_ubs: int = 1) -> float:
+    """Expected device-hit fraction of a decode step's KV block touches
+    under the block-granular paged cache with CGOPipe rotation.
+
+    The arena holds ``r_c`` of the total KV blocks, but only the decoding
+    group's blocks — ``1/num_ubs`` of the total — are touched per step,
+    so the fraction of the active working set still resident when its
+    turn comes back around is ``min(1, r_c · num_ubs)`` under fair
+    (oldest-first) spilling.  ``num_ubs = 1`` degenerates to the dense
+    placement assumption hit = r_c; rotation is exactly what makes a
+    small arena disproportionately effective — the same shape as
+    ``expert_hit_rate`` for skewed routing.  KV traffic per layer is then
+    ``miss_rate × touched block bytes`` (each transfer moves whole
+    blocks, which is what the engine's BlockPool counters measure)."""
+    r = min(max(kv_gpu_ratio, 0.0), 1.0)
+    return float(min(1.0, r * max(1, num_ubs)))
 
 
 def expert_hit_rate(w_gpu_ratio: float, num_experts: int,
@@ -272,10 +295,16 @@ def layer_latency(hw: Hardware, wl: LayerWorkload, policy) -> Dict[str, float]:
 
     # ---- attention ----
     if policy.attn_on_gpu:
-        kv_from_cpu = wl.bytes_kv * (1 - policy.kv_gpu_ratio)
+        # KV traffic term: miss rate × touched KV bytes.  The default
+        # (kv_hit = r_c) is the dense placement assumption — a fixed r_c
+        # fraction resident; a measured/modelled block hit rate (paged
+        # pool, kv_block_hit_rate) lets the search trade r_c against r_w
+        # on the same link budget.
+        kv_hit = wl.kv_hit if wl.kv_hit is not None else policy.kv_gpu_ratio
+        kv_from_cpu = wl.bytes_kv * (1 - kv_hit)
         comm_ctg += kv_from_cpu
         t_attn = max(time_comp(wl.flops_attn, gpu.p_peak),
-                     time_comm(wl.bytes_kv * policy.kv_gpu_ratio, gpu.b_peak)
+                     time_comm(wl.bytes_kv * kv_hit, gpu.b_peak)
                      + time_comm(kv_from_cpu, b_cg))
         t_gpu += t_attn
     else:

@@ -85,16 +85,30 @@ def memory_usage(cfg: ModelConfig, wl: Workload, pol: Policy,
 # ---------------------------------------------------------------------------
 
 def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
-             dtype_bytes: int = 2, expert_popularity=None) -> Dict[str, float]:
+             dtype_bytes: int = 2, expert_popularity=None,
+             kv_hit_rate: Optional[float] = None,
+             kv_paged: bool = False) -> Dict[str, float]:
     """Per-layer decode latency (Eq. 12) and end-to-end generation
     throughput (tokens/s) including prefill amortization.
 
     expert_popularity: optional measured routing-frequency table ((E,) or
     (L, E), e.g. core.residency's EWMA) — MoE weight traffic then uses
     expected activated-expert bytes × miss rate of the r_w-sized resident
-    cache (H.expert_hit_rate) instead of the uniform (1 - r_w) stream."""
+    cache (H.expert_hit_rate) instead of the uniform (1 - r_w) stream.
+
+    kv_hit_rate: optional measured device-hit fraction of KV block
+    touches (core.blockpool counters) — the attention traffic term then
+    becomes miss rate × touched block bytes instead of the r_c-linear
+    stream.  kv_paged=True models the block-granular pool instead:
+    H.kv_block_hit_rate(r_c, num_ubs) — rotation makes a small arena
+    disproportionately effective, so the search can trade r_c down and
+    spend the memory on r_w."""
+    kv_hit = kv_hit_rate
+    if kv_hit is None and kv_paged:
+        kv_hit = H.kv_block_hit_rate(pol.kv_gpu_ratio, pol.num_ubs)
     lw = H.LayerWorkload.decode(cfg, pol.batch, wl.avg_ctx, dtype_bytes,
-                                popularity=expert_popularity)
+                                popularity=expert_popularity,
+                                kv_hit=kv_hit)
     lat = H.layer_latency(hw, lw, pol)
     t_layer = lat["t_layer"]
     # prefill: compute-bound on the accelerator, overlapped with weight
@@ -121,7 +135,7 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
            ub_grid=(4, 8, 16, 32, 36, 64, 100, 128, 256),
            mult_grid=(1, 2, 4, 8, 15, 16, 26, 32, 61, 64, 92, 128, 256),
            ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0),
-           expert_popularity=None) -> Dict:
+           expert_popularity=None, kv_paged: bool = False) -> Dict:
     """Exact enumeration over the 6-tuple.  Returns the best feasible
     policy and its estimate; also the best with attention forced to each
     device (for the §6.3-style case study).
@@ -129,7 +143,14 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
     With ``expert_popularity`` (a measured routing-frequency table), the
     MoE weight-traffic term becomes expected activated-expert bytes ×
     residency miss rate, so the search genuinely trades r_w against hit
-    rate — skewed routing shifts the optimum toward smaller r_w."""
+    rate — skewed routing shifts the optimum toward smaller r_w.
+
+    With ``kv_paged`` the KV traffic term models the block-granular
+    paged pool (H.kv_block_hit_rate): rotation over num_ubs groups means
+    an arena of r_c × total blocks serves ~min(1, r_c·num_ubs) of each
+    step's touches from device, so smaller r_c stays feasible at the
+    same latency and the freed memory can buy r_w — the search trades
+    the two on one budget."""
     gpu_cap = hw.level("gpu").capacity
     cpu_cap = hw.level("cpu").capacity
     best: Optional[Dict] = None
@@ -145,7 +166,8 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
                 if mem["gpu"] > gpu_cap or mem["cpu"] > cpu_cap:
                     continue
                 est = estimate(cfg, hw, wl, pol, dtype_bytes,
-                               expert_popularity=expert_popularity)
+                               expert_popularity=expert_popularity,
+                               kv_paged=kv_paged)
                 cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
                         "mem_cpu": mem["cpu"]}
                 if best is None or cand["throughput"] > best["throughput"]:

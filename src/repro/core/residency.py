@@ -83,13 +83,21 @@ class ExpertResidency:
     """
 
     def __init__(self, num_layers: int, num_experts: int, *, capacity: int,
-                 span_bytes: int, alpha: float = 0.25):
+                 span_bytes: int, alpha: float = 0.25,
+                 victim_quota: int = 0):
         assert 0.0 < alpha <= 1.0
         self.num_layers = num_layers
         self.num_experts = num_experts
         self.capacity = int(max(0, min(capacity, num_layers * num_experts)))
         self.span_bytes = span_bytes
         self.alpha = alpha
+        # demand-path eviction allowance: misses normally fill free slots
+        # only, but up to `victim_quota` demand admits per chunk may evict
+        # a (strictly colder, unpinned) victim — so a cold cache under a
+        # hot steady-state converges instead of refusing until the
+        # prefetch path happens to agree (``begin_chunk`` refreshes it)
+        self.victim_quota = int(max(0, victim_quota))
+        self._victims_left = self.victim_quota
         self.slot_of = np.full((num_layers, num_experts), -1, np.int32)
         self.owner = np.full((self.capacity,), -1, np.int64)  # flat pair id
         self.free: List[int] = list(range(self.capacity))
@@ -128,6 +136,12 @@ class ExpertResidency:
 
     def unpin_all(self) -> None:
         self.pinned.clear()
+
+    def begin_chunk(self) -> None:
+        """Refresh the per-chunk demand-eviction allowance (see
+        ``victim_quota``); the engine calls this once per accounting
+        round."""
+        self._victims_left = self.victim_quota
 
     # ----------------------------------------------- observe (accounting)
     def observe(self, activated: np.ndarray,
@@ -181,12 +195,16 @@ class ExpertResidency:
         demand path passes allow_evict=False — misses only fill free
         slots, and popularity-driven *replacement* is the prefetch
         path's job — so the two admission flows stay observable in the
-        counters."""
+        counters.  Exception: up to ``victim_quota`` demand admits per
+        chunk may evict anyway (same strictly-colder/unpinned rules), so
+        a cold cache under a hot steady state converges faster."""
         if self.capacity == 0 or self.is_resident(layer, expert):
             return None
+        use_quota = (not allow_evict and demand and not self.free
+                     and self._victims_left > 0)
         if self.free:
             slot = self.free.pop()
-        elif not allow_evict:
+        elif not allow_evict and not use_quota:
             self.counters.refusals += 1
             return None
         else:
@@ -202,6 +220,8 @@ class ExpertResidency:
                 return None
             self.evict(slot)
             self.free.remove(slot)
+            if use_quota:
+                self._victims_left -= 1
         self.owner[slot] = self._pid(layer, expert)
         self.slot_of[layer, expert] = slot
         if demand:

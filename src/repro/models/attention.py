@@ -136,12 +136,21 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
     if mode == "decode":
         assert S == 1 and cache is not None
         new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
-        new_cache = kvcache.write_decode(cache, new, pos)
-        valid = decode_valid_mask(new_cache["slot_pos"], pos, window)
-        if quantized:
-            kc, vc = kvcache.dequantize_kv(new_cache)
+        if kvcache.is_paged(cache):
+            # block-paged pool: scatter through the page table, then
+            # gather a dense ring view of the mapped blocks — identical
+            # layout and masking to the dense path, so greedy output is
+            # bit-identical in every tier regime
+            new_cache = kvcache.write_decode_paged(cache, new, pos)
+            ring = kvcache.paged_view(new_cache)
         else:
-            kc, vc = new_cache["k"], new_cache["v"]
+            new_cache = kvcache.write_decode(cache, new, pos)
+            ring = new_cache
+        valid = decode_valid_mask(ring["slot_pos"], pos, window)
+        if quantized:
+            kc, vc = kvcache.dequantize_kv(ring)
+        else:
+            kc, vc = ring["k"], ring["v"]
         args = (q[:, 0], kc, vc, valid)
         kw = dict(scale=scale, attn_softcap=cfg.attn_softcap)
         if sharded_fn is not None:
@@ -155,8 +164,11 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
         # against the whole ring (history + the chunk itself) under the
         # slot_pos validity mask.  Padded chunk tail positions are clamped
         # by the caller to one-past-the-end, so they land in a single slot
-        # that stays causally masked until decode overwrites it.
+        # that stays causally masked until decode overwrites it.  Prefill
+        # always runs on a dense scratch; the paged pool is written by
+        # the slot-insert ops, never by prefill directly.
         assert cache is not None and kv_override is None
+        assert not kvcache.is_paged(cache)
         new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
         # admission chunks run on a batch-1 scratch (or rows sharing one
         # offset), so the ring scatter uses row 0's positions
@@ -221,19 +233,26 @@ def mla_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
     new_cache = cache
     if mode == "decode":
         assert S == 1 and cache is not None
-        new_cache = kvcache.write_decode(cache, {"ckv": ckv, "kr": kr}, pos)
-        valid = decode_valid_mask(new_cache["slot_pos"], pos, 0)
+        if kvcache.is_paged(cache):
+            new_cache = kvcache.write_decode_paged(
+                cache, {"ckv": ckv, "kr": kr}, pos)
+            ring = kvcache.paged_view(new_cache)
+        else:
+            new_cache = kvcache.write_decode(
+                cache, {"ckv": ckv, "kr": kr}, pos)
+            ring = new_cache
+        valid = decode_valid_mask(ring["slot_pos"], pos, 0)
         # absorbed queries: q_lat (B,H,r) = q_nope @ W_uk^T
         q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                            wuk.astype(jnp.float32))
         # fold the rope part in by concatenating along the "latent" dim:
         # score = q_lat . ckv + q_rope . kr
         qcat = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], -1)
-        kcat = jnp.concatenate([new_cache["ckv"], new_cache["kr"]],
+        kcat = jnp.concatenate([ring["ckv"], ring["kr"]],
                                -1)[:, :, None, :]               # (B,W,1,r+dr)
         kw = dict(scale=scale, attn_softcap=0.0)
         args = (qcat.astype(x.dtype), kcat.astype(x.dtype),
-                new_cache["ckv"][:, :, None, :], valid)
+                ring["ckv"][:, :, None, :], valid)
         if sharded_fn is not None:
             o_lat = sharded_fn(*args, **kw)
         else:

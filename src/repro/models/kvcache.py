@@ -16,6 +16,21 @@ W is the ring-buffer width: ``min(window, max_seq)`` for sliding-window
 layers, ``max_seq`` otherwise.  ``slot_pos`` stores the absolute position
 held in each ring slot (-1 = empty), which makes masking exact for both
 full and windowed layers without modular-arithmetic case analysis.
+
+Block-granular paged pool (the ``r_c`` execution path): full-attention
+kv/mla period positions can swap their per-slot dense rings for one
+shared **arena** of fixed-size token blocks plus a
+``(slot, logical_block) → physical_block`` page table
+(``init_paged_arena`` / ``paged_view`` / ``write_decode_paged``; the
+slot ops below are paged-aware).  A paged layer cache is recognized by
+its ``page_table`` leaf; attention gathers a dense ring view of the
+mapped blocks under the same ``slot_pos`` masking, so paged and dense
+execution are bit-identical.  Sliding-window rings stay dense (the ring
+already bounds their footprint at ``window``), as do SSM state and
+encoder cross-attention.  The arena's last physical block is the
+**trash block**: the scatter target for rows/positions with no mapped
+block — its contents are never read, because gathers force
+``slot_pos = -1`` wherever the page table is unmapped.
 """
 from __future__ import annotations
 
@@ -73,10 +88,14 @@ def _spec_cache(cfg: ModelConfig, spec: LayerSpec, stack: int, batch: int,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=None) -> Dict:
+               dtype=None, *, skip_keys=()) -> Dict:
+    """`skip_keys` omits those period positions (the paged-pool engine
+    allocates them as a shared block arena instead of per-slot rings)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     cache: Dict = {"pos": jnp.zeros((batch,), jnp.int32)}
     for i, spec in enumerate(cfg.period):
+        if f"p{i}" in skip_keys:
+            continue
         cache[f"p{i}"] = _spec_cache(cfg, spec, cfg.num_periods, batch,
                                      max_seq, dtype)
     if cfg.prologue:
@@ -98,6 +117,96 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
 
 
 # ---------------------------------------------------------------------------
+# Block-granular paged KV pool.  One shared arena of fixed-size token
+# blocks replaces the per-slot dense rings of the pageable period
+# positions; a (slot, logical_block) -> physical_block page table (managed
+# host-side by core.blockpool, passed in as a device array) maps each
+# slot's logical ring onto arena blocks.  Attention gathers a dense ring
+# view (`paged_view`) so the math — and therefore greedy output — is
+# bit-identical to the dense path.
+# ---------------------------------------------------------------------------
+
+_PAGED_KINDS = ("kv", "mla")
+
+
+def paged_period_keys(cfg: ModelConfig) -> tuple:
+    """Period positions whose KV ring is block-pageable: full-attention
+    kv/mla layers.  Sliding-window layers are exempt (their ring already
+    bounds the footprint at `window`), as are SSM state (O(1)) and
+    encoder cross-attention; prologue layers stay dense for simplicity."""
+    return tuple(f"p{i}" for i, spec in enumerate(cfg.period)
+                 if spec.cache_kind() in _PAGED_KINDS
+                 and spec.attn != ATTN_WINDOW)
+
+
+def init_paged_arena(cfg: ModelConfig, device_blocks: int,
+                     block_tokens: int, dtype=None) -> Dict:
+    """Shared physical-block arena for the pageable period positions:
+    every data leaf of the dense layer cache with its per-slot ring
+    (B, W, ...) replaced by (device_blocks + 1) blocks of `block_tokens`
+    ring slots each.  Block index `device_blocks` is the trash block."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    arena: Dict = {}
+    for key in paged_period_keys(cfg):
+        spec = cfg.period[int(key[1:])]
+        arena[key] = _spec_cache(cfg, spec, cfg.num_periods,
+                                 device_blocks + 1, block_tokens, dtype)
+    return arena
+
+
+def is_paged(layer_cache: Dict) -> bool:
+    return "page_table" in layer_cache
+
+
+def paged_view(layer_cache: Dict) -> Dict:
+    """Gather a dense (B, W, ...) ring view of a paged layer cache slice
+    ({leaf: (n_blocks+1, bt, ...), "page_table": (B, MB)}), with
+    W = MB * bt.  Logical block lb covers ring positions
+    [lb*bt, (lb+1)*bt), exactly the dense ring's layout; unmapped blocks
+    read the trash block but their slot_pos is forced to -1, so they are
+    invisible to the validity masks."""
+    pt = layer_cache["page_table"]                     # (B, MB)
+    B, MB = pt.shape
+    trash = layer_cache["slot_pos"].shape[0] - 1
+    bt = layer_cache["slot_pos"].shape[1]
+    mapped = pt >= 0
+    idx = jnp.where(mapped, pt, trash)
+    out = {}
+    for name, a in layer_cache.items():
+        if name == "page_table":
+            continue
+        g = jnp.take(a, idx.reshape(-1), axis=0)
+        g = g.reshape((B, MB) + a.shape[1:])
+        if name == "slot_pos":
+            g = jnp.where(mapped[:, :, None], g, -1)
+        out[name] = g.reshape((B, MB * bt) + a.shape[2:])
+    return out
+
+
+def write_decode_paged(layer_cache: Dict, new: Dict, pos: jax.Array) -> Dict:
+    """Paged analogue of `write_decode`: scatter one token per row into
+    the arena block its page table maps for ring position pos % W.  Rows
+    with no mapped block there (masked/free slots) scatter into the
+    trash block instead — harmless by construction."""
+    pt = layer_cache["page_table"]                     # (B, MB)
+    B, MB = pt.shape
+    trash = layer_cache["slot_pos"].shape[0] - 1
+    bt = layer_cache["slot_pos"].shape[1]
+    i = (pos % (MB * bt)).astype(jnp.int32)            # (B,) ring index
+    lb = i // bt
+    off = i % bt
+    pb = jnp.take_along_axis(pt, lb[:, None], axis=1)[:, 0]
+    pb = jnp.where(pb >= 0, pb, trash)
+    out = dict(layer_cache)
+    for name in new:
+        buf = layer_cache[name]
+        out[name] = buf.at[pb, off].set(new[name][:, 0].astype(buf.dtype))
+    out["slot_pos"] = layer_cache["slot_pos"].at[pb, off].set(
+        pos.astype(jnp.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Slot-pool operations.  A cache allocated once with batch = number of slots
 # is treated as a pool of independent per-row "slots": a finished row can be
 # reset and refilled with a new request without touching its neighbors
@@ -116,11 +225,16 @@ def _map_named_leaves(tree: Dict, fn) -> Dict:
 def reset_slot(cache: Dict, row) -> Dict:
     """Return `cache` with batch row `row` restored to its init_cache state
     (slot_pos = -1, pos = 0, zeros elsewhere) and all other rows untouched.
-    `row` may be a traced scalar, so one jit covers every slot."""
+    `row` may be a traced scalar, so one jit covers every slot.  Paged
+    groups are left alone: a freed slot maps no arena blocks (the block
+    pool released them on drain), and fresh allocations clear their
+    slot_pos plane at map time."""
     out = {}
     for k, v in cache.items():
         if k == "pos":
             out[k] = v.at[row].set(0)
+        elif isinstance(v, dict) and is_paged(v):
+            out[k] = v
         else:
             out[k] = _map_named_leaves(
                 v, lambda name, a: a.at[:, row].set(
@@ -128,17 +242,42 @@ def reset_slot(cache: Dict, row) -> Dict:
     return out
 
 
-def insert_slot(cache: Dict, single: Dict, row) -> Dict:
-    """Slot-indexed prefill write: copy batch row 0 of `single` (a cache
-    built with batch=1, e.g. freshly prefilled for one request) into batch
-    row `row` of the pooled `cache`.  Only that row changes."""
+def _insert_row_blocks(group: Dict, single_group: Dict, row, src) -> Dict:
+    """Copy a dense ring row of `single_group` into the arena blocks the
+    page table maps for slot `row`: one static loop over the slot's
+    logical blocks, each landing in its physical block (or the trash
+    block where unmapped — content discarded, exactly what the dense
+    ring's unwritten slot_pos=-1 span represents)."""
+    pt = group["page_table"][0, row]                   # (MB,) layer-invariant
+    MB = pt.shape[0]
+    trash = group["slot_pos"].shape[1] - 1
+    bt = group["slot_pos"].shape[2]
+    out = dict(group)
+    for lb in range(MB):
+        pb = jnp.where(pt[lb] >= 0, pt[lb], trash)
+        for name, a in group.items():
+            if name == "page_table":
+                continue
+            blk = single_group[name][:, src, lb * bt:(lb + 1) * bt]
+            out[name] = out[name].at[:, pb].set(blk.astype(a.dtype))
+    return out
+
+
+def insert_slot(cache: Dict, single: Dict, row, src=0) -> Dict:
+    """Slot-indexed prefill write: copy batch row `src` of `single` (a
+    dense cache, e.g. freshly prefilled for one request) into batch row
+    `row` of the pooled `cache`.  Only that row changes.  Paged groups
+    scatter the dense ring into the slot's mapped arena blocks (the block
+    pool must have mapped blocks covering the row's footprint first)."""
     out = {}
     for k, v in cache.items():
         if k == "pos":
-            out[k] = v.at[row].set(single[k][0])
+            out[k] = v.at[row].set(single[k][src])
+        elif isinstance(v, dict) and is_paged(v):
+            out[k] = _insert_row_blocks(v, single[k], row, src)
         else:
             out[k] = jax.tree.map(
-                lambda a, b: a.at[:, row].set(b[:, 0].astype(a.dtype)),
+                lambda a, b: a.at[:, row].set(b[:, src].astype(a.dtype)),
                 v, single[k])
     return out
 
@@ -164,7 +303,10 @@ def insert_slot_span(cache: Dict, single: Dict, row, start,
     NOTE unlike `insert_slot`, a span write does not clear the rest of the
     row — callers must `reset_slot` the target row once before the first
     span of a new request (stale `slot_pos` entries from the previous
-    occupant would otherwise leak into attention masks)."""
+    occupant would otherwise leak into attention masks).  Paged groups
+    instead copy only the arena blocks the span overlaps (whole blocks:
+    the scratch ring is the source of truth for the slot's entire prefix,
+    so re-copying a block's pre-span part is an idempotent overwrite)."""
     span = jnp.asarray(start, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
 
     def copy(name, a, b):
@@ -174,6 +316,33 @@ def insert_slot_span(cache: Dict, single: Dict, row, start,
         idx = span % a.shape[2]
         return a.at[:, row, idx].set(b[:, 0, idx].astype(a.dtype))
 
+    def copy_paged(group, single_group):
+        pt = group["page_table"][0, row]               # (MB,)
+        MB = pt.shape[0]
+        trash = group["slot_pos"].shape[1] - 1
+        bt = group["slot_pos"].shape[2]
+        s0 = jnp.asarray(start, jnp.int32)
+        first = s0 // bt
+        out_g = dict(group)
+        # blocks the span can overlap, in unwrapped coordinates; the ring
+        # index lb % MB matches the dense branch's `span % W` wrap.  The
+        # MB cap keeps scatter targets unique (spans longer than the ring
+        # would revisit a block; the dense branch degrades identically).
+        for j in range(min(length // bt + 2, MB)):
+            lb = first + j
+            lb_c = lb % MB
+            pb = jnp.take(pt, lb_c)
+            hit = ((pb >= 0)
+                   & (lb * bt < s0 + length) & ((lb + 1) * bt > s0))
+            pb = jnp.where(hit, pb, trash)
+            for name, a in group.items():
+                if name == "page_table":
+                    continue
+                blk = jax.lax.dynamic_slice_in_dim(
+                    single_group[name], lb_c * bt, bt, axis=2)[:, 0]
+                out_g[name] = out_g[name].at[:, pb].set(blk.astype(a.dtype))
+        return out_g
+
     out = {}
     for k, v in cache.items():
         if k == "pos":
@@ -182,6 +351,8 @@ def insert_slot_span(cache: Dict, single: Dict, row, start,
             out[k] = jax.tree.map(
                 lambda a, b: a.at[:, row].set(b[:, 0].astype(a.dtype)),
                 v, single[k])
+        elif isinstance(v, dict) and is_paged(v):
+            out[k] = copy_paged(v, single[k])
         else:
             out[k] = {}
             for name in v:

@@ -77,7 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import paging, residency
+from repro.core import blockpool, paging, residency
+from repro.core.batching import blocks_for_tokens
 from repro.models import kvcache
 from repro.models.model import ExecPolicy
 from repro.serving import steps as serve_steps
@@ -111,6 +112,16 @@ class EngineConfig:
     expert_slots: Optional[int] = None  # explicit pool size (spans) override
     prefetch: bool = True             # router-ahead prefetch for group j+1
     residency_alpha: float = 0.25     # expert-popularity EWMA step
+    residency_victim_quota: int = 1   # demand misses may evict this many
+                                      # victims per chunk (cold-start aid)
+    # ---------------------------------------- block-granular paged KV (r_c)
+    kv_paged: bool = False            # shared block arena + page tables
+    block_tokens: int = 16            # ring positions per KV block
+    kv_gpu_ratio: float = 1.0         # r_c — sizes the device arena; the
+                                      # remainder lives in the host tier
+    kv_prefetch: bool = True          # stream the next rotation group's
+                                      # spilled blocks back in
+                                      # paging.transfer_plan slices
 
 
 class _SlotGroup:
@@ -129,11 +140,13 @@ class _SlotGroup:
 class _ActiveBatch:
     """Static mode: a micro-batch admitted (and retired) as a unit."""
 
-    def __init__(self, requests: List[ServeRequest], cache, last_tokens):
+    def __init__(self, requests: List[ServeRequest], cache, last_tokens,
+                 gid: Optional[int] = None):
         self.requests = requests
         self.cache = cache
         self.last_tokens = last_tokens       # (μ,) next input token
         self.pred: Dict[str, np.ndarray] = {}
+        self.gid = gid                       # paged-KV slot group (kv_paged)
 
 
 class Engine:
@@ -149,7 +162,8 @@ class Engine:
             cache_tokens=ecfg.cache_tokens or ecfg.max_seq * ecfg.ubatch,
             gen_len=32, max_input_len=ecfg.max_seq,
             on_long_prompt=ecfg.on_long_prompt,
-            reserve_mode=ecfg.reserve_mode)
+            reserve_mode=ecfg.reserve_mode,
+            block_tokens=ecfg.block_tokens if ecfg.kv_paged else None)
         self.active: List[_ActiveBatch] = []          # static mode only
         self.key = jax.random.key(ecfg.seed)
         self.paged_blocks = None
@@ -173,7 +187,8 @@ class Engine:
                              em.num_experts))
                 self.residency[key] = residency.ExpertResidency(
                     em.num_layers, em.num_experts, capacity=slots,
-                    span_bytes=em.span_bytes, alpha=ecfg.residency_alpha)
+                    span_bytes=em.span_bytes, alpha=ecfg.residency_alpha,
+                    victim_quota=ecfg.residency_victim_quota)
                 self._expert_pool[key] = jnp.zeros(
                     (max(1, slots), em.pages_per_expert, em.page_elems),
                     pw.expert_pages[key].dtype)
@@ -183,6 +198,69 @@ class Engine:
         elif ecfg.paged:
             self.paged_blocks = paging.pack_block_groups(
                 params["blocks"], ecfg.page_elems)
+        # ---------------------------------- block-granular paged KV (r_c)
+        # dense-equivalent device bytes of the max_seq-wide slot pool: the
+        # baseline every paged-KV report compares against
+        dense_abs = kvcache.abstract_cache(cfg, ecfg.ubatch, ecfg.max_seq)
+        self._kv_dense_bytes = ecfg.num_ubs * sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(dense_abs))
+        self._kv: Optional[blockpool.BlockPool] = None
+        self._kv_arena: Dict[str, Dict] = {}
+        self._kv_keys: Tuple[str, ...] = ()
+        if ecfg.kv_paged:
+            if ecfg.max_seq % ecfg.block_tokens:
+                raise ValueError("max_seq must be a multiple of "
+                                 "block_tokens for the paged KV pool")
+            self._kv_keys = kvcache.paged_period_keys(cfg)
+            if not self._kv_keys:
+                raise ValueError("kv_paged requires at least one "
+                                 "full-attention kv/mla period position")
+            mb = ecfg.max_seq // ecfg.block_tokens    # blocks per slot
+            n_slots = ecfg.num_ubs * ecfg.ubatch
+            total = n_slots * mb
+            # r_c sizes the arena; the floor keeps one admission's worst
+            # case (one slot continuous, one micro-batch static) mappable
+            # so progress is always possible — kv_traffic() reports the
+            # bytes actually allocated, never the un-clamped ratio
+            floor = mb * (ecfg.ubatch if ecfg.mode == "static" else 1)
+            device_blocks = min(total, max(
+                floor, int(round(ecfg.kv_gpu_ratio * total))))
+            self._kv_arena = kvcache.init_paged_arena(
+                cfg, device_blocks, ecfg.block_tokens)
+            self._kv_trash = device_blocks
+            block_bytes = sum(
+                int(a[:, 0].nbytes) for g in self._kv_arena.values()
+                for a in g.values())
+            self._kv = blockpool.BlockPool(n_slots, mb, device_blocks,
+                                           block_bytes)
+            # host tier: big enough to hold every spillable block
+            self._kv_host = {
+                key: {name: np.zeros((a.shape[0], total) + a.shape[2:],
+                                     a.dtype)
+                      for name, a in g.items()}
+                for key, g in self._kv_arena.items()}
+            self._kv_read = jax.jit(lambda a, i: a[:, i])
+            self._kv_write = jax.jit(lambda a, i, v: a.at[:, i].set(v),
+                                     donate_argnums=(0,))
+            self._kv_clear = jax.jit(lambda sp, idx: sp.at[:, idx].set(-1),
+                                     donate_argnums=(0,))
+            self._kv_pending: List[Tuple[int, int]] = []
+            self._kv_pending_set: set = set()
+            self._static_gids: List[int] = list(range(ecfg.num_ubs))
+            # constant byte terms for kv_traffic(): the arena itself, the
+            # dense remainder (window/SSM/prologue/xattn rings), and the
+            # page tables
+            rem_abs = jax.eval_shape(
+                lambda: kvcache.init_cache(cfg, ecfg.ubatch, ecfg.max_seq,
+                                           skip_keys=self._kv_keys))
+            self._kv_device_bytes = (
+                sum(int(a.nbytes) for g in self._kv_arena.values()
+                    for a in g.values())
+                + ecfg.num_ubs * sum(
+                    int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in jax.tree.leaves(rem_abs))
+                + int(self._kv.dev.nbytes))
         self._prefill = jax.jit(serve_steps.make_prefill_fill_step(
             cfg, policy, paged_blocks=self.paged_blocks))
         chunk = ecfg.decode_chunk if ecfg.mode == "continuous" else 1
@@ -197,8 +275,12 @@ class Engine:
         self.groups: List[_SlotGroup] = []
         self._prefill_scratch = None
         if ecfg.mode == "continuous":
+            # with kv_paged the paged period positions live in the shared
+            # arena; each group holds only the dense remainder (pos,
+            # window/SSM rings, prologue, cross-attention)
             self.groups = [
-                _SlotGroup(kvcache.init_cache(cfg, ecfg.ubatch, ecfg.max_seq),
+                _SlotGroup(kvcache.init_cache(cfg, ecfg.ubatch, ecfg.max_seq,
+                                              skip_keys=self._kv_keys),
                            ecfg.ubatch)
                 for _ in range(ecfg.num_ubs)]
             # batch-1 admission-prefill input: _prefill is functional, so
@@ -300,6 +382,7 @@ class Engine:
         prediction for that group's next chunk)."""
         for key, arr in counts.items():
             r = self.residency[key]
+            r.begin_chunk()          # refresh the demand-evict victim quota
             a = np.asarray(arr)
             steps = a.reshape(-1, *a.shape[-2:])          # (n_fwd, P, E)
             mask = snap[key] if snap is not None else None
@@ -333,6 +416,15 @@ class Engine:
                     self._pending.append(t)
                     self._pending_set.add(t)
 
+    def _plan_slice(self, pending: List, gid: int) -> Tuple[List, List]:
+        """This rotation position's ``paging.transfer_plan`` slice of a
+        pending transfer queue (shared by the weight and KV prefetch
+        drains); returns (chosen, keep)."""
+        plan = paging.transfer_plan(len(pending), self.ecfg.num_ubs)
+        take = set(plan[gid % self.ecfg.num_ubs])
+        return ([t for i, t in enumerate(pending) if i in take],
+                [t for i, t in enumerate(pending) if i not in take])
+
     def _drain_prefetch(self, gid: int, *, retry_refused: bool) -> None:
         """Transfer this rotation position's ``paging.transfer_plan``
         slice of the pending prefetch queue into the pool.  While a chunk
@@ -342,10 +434,7 @@ class Engine:
         (the cache is hotter than the prediction)."""
         if not self._pending:
             return
-        plan = paging.transfer_plan(len(self._pending), self.ecfg.num_ubs)
-        take = set(plan[gid % self.ecfg.num_ubs])
-        chosen = [t for i, t in enumerate(self._pending) if i in take]
-        keep = [t for i, t in enumerate(self._pending) if i not in take]
+        chosen, keep = self._plan_slice(self._pending, gid)
         requeued = []
         for key, l, e in chosen:
             r = self.residency[key]
@@ -401,6 +490,180 @@ class Engine:
             out.update(mode="paged", h2d_bytes=per_pass * self._fwd_passes)
         else:
             out.update(mode="resident", h2d_bytes=0)
+        return out
+
+    # ------------------------------ block-granular paged KV (data+control)
+    def _slot_of(self, slot) -> int:
+        return slot.gid * self.ecfg.ubatch + slot.row
+
+    def _compose_kv(self, dense_cache: Dict, gid: int) -> Dict:
+        """Assemble the jit-call cache for slot group `gid`: its dense
+        per-slot leaves plus the shared block arena and a fresh device
+        page-table snapshot for the group's rows.  The control plane is
+        host-side (core.blockpool); every dispatch reads the map at call
+        time, mirroring the expert-residency snapshot discipline."""
+        b = self.ecfg.ubatch
+        pt = self._kv.device_table(range(gid * b, (gid + 1) * b))
+        ptj = jnp.asarray(np.ascontiguousarray(
+            np.broadcast_to(pt[None], (self.cfg.num_periods,) + pt.shape)))
+        cache = dict(dense_cache)
+        for key, g in self._kv_arena.items():
+            cache[key] = {**g, "page_table": ptj}
+        return cache
+
+    def _absorb_kv(self, cache: Dict) -> Dict:
+        """Take the (possibly donated-and-rebuilt) arena arrays back out
+        of a returned cache; the remainder is the group's dense part."""
+        out = dict(cache)
+        for key in self._kv_arena:
+            g = dict(out.pop(key))
+            g.pop("page_table")
+            self._kv_arena[key] = g
+        return out
+
+    def _kv_exec(self, ops) -> None:
+        """Execute a BlockPool plan in order: ``spill`` copies an arena
+        block out to the host store (D2H), ``fetch`` copies a host block
+        back in (H2D), ``alloc`` marks a fresh block (its slot_pos plane
+        is cleared in one batched scatter at the end — stale positions
+        from the previous owner must never satisfy a validity mask)."""
+        fresh = []
+        for op in ops:
+            if op[0] == "spill":
+                _, _s, _lb, pb, hb = op
+                for key, g in self._kv_arena.items():
+                    for name in g:
+                        self._kv_host[key][name][:, hb] = np.asarray(
+                            self._kv_read(g[name], jnp.int32(pb)))
+            elif op[0] == "fetch":
+                _, _s, _lb, hb, pb = op
+                for key, g in self._kv_arena.items():
+                    for name in list(g):
+                        g[name] = self._kv_write(
+                            g[name], jnp.int32(pb),
+                            jnp.asarray(self._kv_host[key][name][:, hb]))
+            else:                                       # ("alloc", s, lb, pb)
+                fresh.append(op[3])
+        if fresh:
+            # pad to a power-of-two bucket (aimed at the trash block) so
+            # the clear scatter compiles a handful of shapes, not one per
+            # allocation count
+            n = 1
+            while n < len(fresh):
+                n <<= 1
+            idx = np.full((n,), self._kv_trash, np.int32)
+            idx[:len(fresh)] = fresh
+            idxj = jnp.asarray(idx)
+            for key, g in self._kv_arena.items():
+                g["slot_pos"] = self._kv_clear(g["slot_pos"], idxj)
+
+    def _kv_sweep(self) -> None:
+        """Release arena/host blocks of any slot that fell back to FREE
+        outside the engine's own retire path (budget preemption)."""
+        for grp in self.scheduler.slots:
+            for s in grp:
+                if s.state == SlotState.FREE:
+                    idx = self._slot_of(s)
+                    if self._kv.slot_in_use(idx):
+                        self._kv.free_slot(idx)
+
+    def _kv_prepare_group(self, gid: int, chunk: int) -> None:
+        """Pre-dispatch guard for the paged pool: every decoding row's
+        mapped blocks must be device-resident (attention gathers its
+        whole history) and the blocks its next `chunk` tokens will write
+        must be mapped.  Cold blocks of other slots spill to the host
+        tier to make room; on arena exhaustion the youngest decoding
+        request in the group is preempted (recompute preemption — blocks
+        freed, request re-queued with its transcript intact).  Retries
+        resume each slot at its first unsatisfied block, so every needed
+        block books exactly one hit or miss per preparation."""
+        slots = self.scheduler.slots[gid]
+        booked: Dict[int, int] = {}          # slot idx -> blocks satisfied
+        while True:
+            decoding = [s for s in slots if s.state == SlotState.DECODE]
+            protect = [self._slot_of(s) for s in decoding]
+            ok = True
+            for s in decoding:
+                idx = self._slot_of(s)
+                need = self._kv.blocks_needed(
+                    s.req.footprint + min(chunk, s.req.remaining),
+                    self.ecfg.block_tokens)
+                if booked.get(idx, 0) >= need:
+                    continue
+                ops, ok, nxt = self._kv.ensure_range(
+                    idx, booked.get(idx, 0), need, protect)
+                self._kv_exec(ops)
+                booked[idx] = nxt
+                if not ok:
+                    break
+            if ok:
+                return
+            assert len(decoding) > 1, \
+                "single request exceeds the KV arena (device_blocks floor)"
+            victim = max(decoding, key=lambda s: s.req.rid)   # youngest
+            self.scheduler.preempt(victim)
+            self._kv.free_slot(self._slot_of(victim))
+            booked.pop(self._slot_of(victim), None)
+
+    def _kv_enqueue_prefetch(self, gid: int) -> None:
+        """Queue the next rotation group's spilled blocks (the KV
+        analogue of Algorithm 1's weight lookahead): while group `gid`'s
+        chunk is in flight, group gid+1's history can stream back."""
+        nxt = self.scheduler.slots[(gid + 1) % self.ecfg.num_ubs]
+        for s in nxt:
+            if s.state != SlotState.DECODE:
+                continue
+            idx = self._slot_of(s)
+            for lb in self._kv.host_resident_blocks(idx):
+                t = (idx, lb)
+                if t not in self._kv_pending_set:
+                    self._kv_pending.append(t)
+                    self._kv_pending_set.add(t)
+
+    def _kv_drain_prefetch(self, gid: int) -> None:
+        """Promote this rotation position's ``paging.transfer_plan``
+        slice of the pending block queue into free arena blocks (no
+        demotions on the prefetch path — mirroring residency's
+        miss-fills-free-slots rule); entries that became stale or found
+        no free block fall back to the demand path."""
+        if not self._kv_pending:
+            return
+        chosen, self._kv_pending = self._plan_slice(self._kv_pending, gid)
+        self._kv_pending_set.difference_update(chosen)
+        for idx, lb in chosen:
+            op = self._kv.prefetch(idx, lb)
+            if op is not None:
+                self._kv_exec([op])
+
+    def kv_traffic(self) -> Dict[str, float]:
+        """Device-KV accounting: bytes the KV pool actually occupies on
+        device vs the dense max_seq-wide equivalent, plus the host-tier
+        stream counters (same modeled-traffic discipline as
+        ``weight_traffic``)."""
+        out: Dict[str, float] = {"tokens_out": self.tokens_out,
+                                 "dense_equiv_bytes": self._kv_dense_bytes}
+        if self._kv is None:
+            out.update(mode="kv_dense",
+                       device_kv_bytes=self._kv_dense_bytes,
+                       h2d_bytes=0, d2h_bytes=0)
+            return out
+        arena_bytes = sum(int(a.nbytes) for g in self._kv_arena.values()
+                          for a in g.values())
+        c = self._kv.counters
+        out.update(
+            mode="kv_paged",
+            block_tokens=self.ecfg.block_tokens,
+            device_blocks=self._kv.device_blocks,
+            peak_blocks_in_use=self._kv.peak_in_use,
+            arena_utilization=(self._kv.peak_in_use
+                               / max(1, self._kv.device_blocks)),
+            device_kv_bytes=self._kv_device_bytes,
+            arena_bytes=arena_bytes,
+            hits=c.hits, misses=c.misses, prefetches=c.prefetches,
+            spills=c.spills, allocs=c.allocs, frees=c.frees,
+            h2d_bytes=c.h2d_bytes, d2h_bytes=c.d2h_bytes,
+            hit_rate=c.hit_rate,
+        )
         return out
 
     def _decode_group(self, cache, last_tok, active, rem, *, holder=None,
@@ -491,7 +754,19 @@ class Engine:
             first = self._sample_first(logits)
             r.generated.append(first)
             group = self.groups[slot.gid]
-            group.cache = self._insert(group.cache, single, slot.row)
+            if self._kv is not None:
+                # book the prompt's blocks (alloc/fetch/spill-to-make-room)
+                # before the slot-insert scatters through the page table
+                idx = self._slot_of(slot)
+                ops, ok, _ = self._kv.ensure_tokens(
+                    idx, len(eff), self.ecfg.block_tokens, (idx,))
+                self._kv_exec(ops)
+                assert ok, "admission exceeds the KV arena floor"
+                pooled = self._insert(self._compose_kv(group.cache, slot.gid),
+                                      single, slot.row)
+                group.cache = self._absorb_kv(pooled)
+            else:
+                group.cache = self._insert(group.cache, single, slot.row)
             group.last_tok[slot.row] = first
             if len(r.generated) >= r.max_new_tokens:
                 self._retire_slot(slot)          # quota met at prefill
@@ -525,9 +800,26 @@ class Engine:
             jnp.asarray([n], np.int32))
         # partial slot insert at the row offset: the chunk lands in the
         # pool immediately, so the final flip to DECODE copies nothing
-        group.cache = self._insert_span(
-            group.cache, self._stage_scratch, np.int32(slot.row),
-            np.int32(t), length=width)
+        if self._kv is not None:
+            # only the span's blocks need to be mapped & device-resident
+            # for the insert; earlier prompt blocks may stay spilled until
+            # the slot flips to DECODE (the chunk attends to the scratch
+            # ring, never to the pool row)
+            idx = self._slot_of(slot)
+            ops, ok, _ = self._kv.ensure_range(
+                idx, t // self.ecfg.block_tokens,
+                blocks_for_tokens(t + width, self.ecfg.block_tokens),
+                (idx,))
+            self._kv_exec(ops)
+            assert ok, "staged prefill chunk exceeds the KV arena floor"
+            pooled = self._insert_span(
+                self._compose_kv(group.cache, slot.gid), self._stage_scratch,
+                np.int32(slot.row), np.int32(t), length=width)
+            group.cache = self._absorb_kv(pooled)
+        else:
+            group.cache = self._insert_span(
+                group.cache, self._stage_scratch, np.int32(slot.row),
+                np.int32(t), length=width)
         self.scheduler.prefill_progress(slot, n)
         if slot.prefill_pos >= len(eff):         # final chunk: first token
             first = self._sample_first(logits)
@@ -549,7 +841,11 @@ class Engine:
         # no cache reset here: the row stays masked while free, and the
         # next admission's insert_slot overwrites every leaf of the row
         # (kvcache.reset_slot exists for paths that must hand back a
-        # clean row without refilling it)
+        # clean row without refilling it).  Paged KV: the slot's arena
+        # and host blocks return to the free lists; fresh allocations
+        # clear their slot_pos plane at map time.
+        if self._kv is not None:
+            self._kv.free_slot(self._slot_of(slot))
         self.scheduler.finish(slot)
 
     def _step_continuous(self) -> bool:
@@ -571,6 +867,10 @@ class Engine:
             # EOS-aware reservations are optimistic: preempt (recompute)
             # the youngest rows if this chunk could blow the group budget
             self.scheduler.enforce_budget(gid, self.ecfg.decode_chunk)
+            if self._kv is not None:
+                self._kv_sweep()          # blocks of budget-preempted slots
+                # fetch/alloc this group's working set (may preempt more)
+                self._kv_prepare_group(gid, self.ecfg.decode_chunk)
             slots = self.scheduler.slots[gid]
             active = np.array([s.state == SlotState.DECODE for s in slots])
             if not active.any():
@@ -578,22 +878,35 @@ class Engine:
             rem = np.array(
                 [s.req.remaining if s.state == SlotState.DECODE else 0
                  for s in slots], np.int32)
-            group.cache, group.last_tok, act2, toks, emitted = \
-                self._decode_group(group.cache, group.last_tok, active, rem,
+            cache = (self._compose_kv(group.cache, gid)
+                     if self._kv is not None else group.cache)
+            cache, group.last_tok, act2, toks, emitted = \
+                self._decode_group(cache, group.last_tok, active, rem,
                                    holder=group, gid=gid)
+            group.cache = (self._absorb_kv(cache)
+                           if self._kv is not None else cache)
             self.tokens_out += self._emit(
                 toks, emitted, [s.req if s.state == SlotState.DECODE else None
                                 for s in slots])
             for i, s in enumerate(slots):
                 if s.state == SlotState.DECODE and not act2[i]:
                     self._retire_slot(s)
+            if self._kv is not None and self.ecfg.kv_prefetch:
+                # the KV analogue of the router-ahead weight prefetch:
+                # while this group's results land, stream the next
+                # group's spilled blocks back in transfer_plan slices
+                self._kv_enqueue_prefetch(gid)
+                self._kv_drain_prefetch(gid)
         self.steps += 1
         return True
 
     # ----------------------------------------------------- static mode
     def _admit_static(self):
         # the pool budget is num_ubs rotation groups: only admit into
-        # capacity actually freed by retired micro-batches
+        # capacity actually freed by retired micro-batches (with kv_paged
+        # every admission additionally books its rows' blocks against the
+        # shared arena — the policy budget is enforced by allocation, not
+        # by the group cap alone)
         avail = self.ecfg.num_ubs - len(self.active)
         for group in self.scheduler.admit(avail):
             mu = self.ecfg.ubatch
@@ -615,8 +928,50 @@ class Engine:
                 r.generated.append(int(first[i]))
                 if len(r.generated) >= r.max_new_tokens:
                     r.done = True                 # 1-token request
+            gid = None
+            if self._kv is not None:
+                # land the dense prefill in arena blocks: book each row's
+                # prompt, then scatter the rows through the page table
+                gid = self._static_gids.pop(0)
+                rows = list(range(gid * mu, (gid + 1) * mu))
+                for i, r in enumerate(group):
+                    ops, ok, _ = self._kv.ensure_tokens(
+                        rows[i], r.input_len, self.ecfg.block_tokens, rows)
+                    self._kv_exec(ops)
+                    assert ok, "static micro-batch exceeds the KV arena"
+                pooled = self._compose_kv(
+                    kvcache.init_cache(self.cfg, mu, self.ecfg.max_seq,
+                                       skip_keys=self._kv_keys), gid)
+                for i in range(len(group)):
+                    pooled = self._insert(pooled, cache, np.int32(i),
+                                          np.int32(i))
+                cache = self._absorb_kv(pooled)
             self.active.append(_ActiveBatch(
-                list(group), cache, np.asarray(first, np.int32)))
+                list(group), cache, np.asarray(first, np.int32), gid))
+
+    def _release_static(self, ab) -> None:
+        self.active.remove(ab)
+        if self._kv is not None and ab.gid is not None:
+            for row in range(ab.gid * self.ecfg.ubatch,
+                             (ab.gid + 1) * self.ecfg.ubatch):
+                self._kv.free_slot(row)
+            self._static_gids.append(ab.gid)
+
+    def _kv_prepare_static(self, ab, active) -> None:
+        """Static analogue of `_kv_prepare_group`: every live row's
+        blocks device-resident plus its next token's block mapped (no
+        preemption — the arena floor guarantees one micro-batch fits;
+        other batches' blocks spill to make room)."""
+        rows = list(range(ab.gid * self.ecfg.ubatch,
+                          (ab.gid + 1) * self.ecfg.ubatch))
+        protect = [rows[i] for i in range(len(ab.requests)) if active[i]]
+        for i, r in enumerate(ab.requests):
+            if not active[i]:
+                continue
+            ops, ok, _ = self._kv.ensure_tokens(
+                rows[i], r.footprint + 1, self.ecfg.block_tokens, protect)
+            self._kv_exec(ops)
+            assert ok, "static micro-batch exceeds the KV arena"
 
     def _step_static(self) -> bool:
         self._admit_static()
@@ -631,11 +986,18 @@ class Engine:
                     active[i] = True
                     rem[i] = r.max_new_tokens - len(r.generated)
             if not active.any():          # e.g. every quota met at prefill
-                self.active.remove(ab)
+                self._release_static(ab)
                 continue
-            ab.cache, ab.last_tokens, act2, toks, emitted = \
-                self._decode_group(ab.cache, np.asarray(ab.last_tokens),
+            if self._kv is not None:
+                self._kv_prepare_static(ab, active)
+                cache = self._compose_kv(ab.cache, ab.gid)
+            else:
+                cache = ab.cache
+            cache, ab.last_tokens, act2, toks, emitted = \
+                self._decode_group(cache, np.asarray(ab.last_tokens),
                                    active, rem, holder=ab)
+            ab.cache = (self._absorb_kv(cache)
+                        if self._kv is not None else cache)
             row_req = [ab.requests[i] if i < len(ab.requests) else None
                        for i in range(mu)]
             self.tokens_out += self._emit(toks, emitted, row_req)
@@ -643,6 +1005,6 @@ class Engine:
                 if active[i] and not act2[i]:
                     r.done = True
             if all(r.done for r in ab.requests):
-                self.active.remove(ab)
+                self._release_static(ab)
         self.steps += 1
         return True

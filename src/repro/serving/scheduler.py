@@ -44,7 +44,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.batching import (GenLenEWMA, Request, batch_requests,
-                                 place_request)
+                                 place_request, round_to_blocks)
 
 
 @dataclass
@@ -104,12 +104,17 @@ class Scheduler:
     def __init__(self, *, ubatch: int, num_ubs: int, cache_tokens: int,
                  gen_len: int, max_input_len: Optional[int] = None,
                  on_long_prompt: str = "reject",
-                 reserve_mode: str = "worst", ewma_alpha: float = 0.25):
+                 reserve_mode: str = "worst", ewma_alpha: float = 0.25,
+                 block_tokens: Optional[int] = None):
         self.ubatch = ubatch
         self.num_ubs = num_ubs
         self.cache_tokens = cache_tokens
         self.gen_len = gen_len
         self.max_input_len = max_input_len
+        # block-granular paged KV: a request occupies whole arena blocks,
+        # so every budget charge rounds up to the block boundary (None =
+        # dense max_seq-wide pool, token-exact accounting as before)
+        self.block_tokens = block_tokens
         assert on_long_prompt in ("reject", "truncate")
         self.on_long_prompt = on_long_prompt
         assert reserve_mode in ("worst", "ewma")
@@ -190,6 +195,11 @@ class Scheduler:
         expected = self.gen_ewma.expected(req.max_new_tokens)
         return max(1, min(worst, expected - len(req.generated)))
 
+    def _charge(self, tokens: int) -> int:
+        """Budget charge of a footprint: block-rounded when the paged
+        arena is in play (whole blocks are occupied), exact otherwise."""
+        return round_to_blocks(tokens, self.block_tokens)
+
     def group_load(self, gid: int) -> Tuple[int, int]:
         """(token footprint + reservations over occupied slots, live
         request count).  Footprints are actual (prompt + generated so
@@ -198,7 +208,7 @@ class Scheduler:
         toks = cnt = 0
         for s in self.slots[gid]:
             if s.state in (SlotState.PREFILL, SlotState.DECODE) and s.req:
-                toks += s.req.footprint + self._reserve(s.req)
+                toks += self._charge(s.req.footprint + self._reserve(s.req))
                 cnt += 1
         return toks, cnt
 
@@ -223,7 +233,7 @@ class Scheduler:
             # (effective_prompt grows with the transcript) for callers
             # that skipped the submit guard.
             worst = req.footprint + req.remaining
-            if worst > self.cache_tokens or \
+            if self._charge(worst) > self.cache_tokens or \
                     (self.max_input_len is not None
                      and worst > self.max_input_len):
                 self.queue.pop(0)
@@ -235,10 +245,12 @@ class Scheduler:
             counts = [c for _, c in loads]
             open_mask = [any(s.state == SlotState.FREE for s in grp)
                          for grp in self.slots]
-            gid = place_request(req.footprint, sums, counts,
-                                gen_len=0, reserve=self._reserve(req),
-                                cache_size=self.cache_tokens,
-                                open_mask=open_mask)
+            # the candidate's whole-block charge rides in as input_len
+            # (reserve folded in) so paged admission books arena blocks
+            gid = place_request(
+                self._charge(req.footprint + self._reserve(req)),
+                sums, counts, gen_len=0, reserve=0,
+                cache_size=self.cache_tokens, open_mask=open_mask)
             if gid is None:
                 break                      # wait for a slot/budget to free
             slot = next(s for s in self.slots[gid]
@@ -267,9 +279,12 @@ class Scheduler:
                     if s.state in (SlotState.PREFILL, SlotState.DECODE)
                     and s.req]
             decoding = [s for s in live if s.state == SlotState.DECODE]
-            occ = sum(s.req.footprint for s in live)
-            need = sum(min(chunk, s.req.remaining) for s in decoding)
-            if occ + need <= self.cache_tokens or not decoding:
+            occ_need = sum(
+                self._charge(s.req.footprint
+                             + (min(chunk, s.req.remaining)
+                                if s.state == SlotState.DECODE else 0))
+                for s in live)
+            if occ_need <= self.cache_tokens or not decoding:
                 return preempted
             victim = max(decoding, key=lambda s: s.req.rid)   # youngest
             preempted.append(victim.req)

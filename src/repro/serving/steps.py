@@ -11,6 +11,17 @@ returns per-layer expert activation counts so the engine's host-side
 residency cache can learn popularity and account H2D traffic.
 ``_expert_granular`` is the single switch deciding which shape a factory
 produces.
+
+Block-granular paged KV changes no signatures at all: the cache pytree
+the engine composes per dispatch carries the shared block arena plus a
+``page_table`` leaf per paged period position, and
+``models.attention`` dispatches decode writes/gathers on its presence
+(``kvcache.is_paged``).  ``decode_chunk`` therefore runs unchanged over
+dense and paged pools — the masked-row semantics (frozen ``pos``,
+garbage scatter at the frozen slot) land in the trash block when a row
+maps no blocks there.  Prefill (monolithic fill AND staged chunks)
+always runs on a dense scratch; the paged pool is only ever written by
+the slot-insert ops, with blocks booked host-side by core.blockpool.
 """
 from __future__ import annotations
 

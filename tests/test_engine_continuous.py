@@ -99,6 +99,34 @@ def test_continuous_paged_matches_resident(qwen_engine_setup):
     assert outs[0] == outs[1]
 
 
+def test_static_admission_books_against_block_arena(qwen_engine_setup):
+    """The ROADMAP's static-mode over-allocation note, resolved: with the
+    paged pool, every static admission books its rows' blocks against the
+    shared arena — a deep queue can never allocate device KV beyond the
+    arena (the old failure was silent over-allocation past the policy
+    budget), and drained batches give every block back."""
+    cfg, params = qwen_engine_setup
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           mode="static", kv_paged=True,
+                                           kv_gpu_ratio=0.5))
+    rng = np.random.default_rng(7)
+    for _ in range(11):                        # deep queue vs 4 slots
+        eng.submit(rng.integers(2, cfg.vocab_size, int(rng.integers(3, 30))),
+                   int(rng.integers(1, 8)))
+    out = eng.run_until_idle()
+    assert all(r.done for r in eng.scheduler.requests.values())
+    assert sum(len(v) for v in out.values()) > 0
+    # arena invariant: occupancy peaked at or below the device arena, and
+    # every block was released when its micro-batch retired
+    assert eng._kv.peak_in_use <= eng._kv.device_blocks
+    assert eng._kv.in_use_device() == 0
+    eng._kv.check_invariants()
+    # and the whole pool honors the r_c sizing (ubatch-floor aside)
+    total = 2 * 2 * (64 // eng.ecfg.block_tokens)
+    assert eng._kv.device_blocks == max(2 * (64 // eng.ecfg.block_tokens),
+                                        round(0.5 * total))
+
+
 # ------------------------------------------------ long-prompt guard
 
 def test_long_prompt_rejected_not_crashing(qwen_engine_setup):

@@ -66,6 +66,18 @@ def test_cross_mode_transcripts_identical_fast(setup):
     })
 
 
+def test_kv_paged_transcripts_identical_fast(setup):
+    """KV tier regime must never change greedy output: dense rings,
+    paged-resident (r_c=1), and paged with host-RAM spill agree."""
+    cfg, params = setup
+    work = _workload(cfg, seed=1, n_requests=6)
+    _assert_all_identical(cfg, params, work, {
+        "dense": dict(decode_chunk=4),
+        "kv_resident": dict(decode_chunk=4, kv_paged=True, kv_gpu_ratio=1.0),
+        "kv_spill": dict(decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.25),
+    })
+
+
 @pytest.fixture(scope="module")
 def moe_setup():
     cfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
@@ -117,6 +129,47 @@ def test_paged_expert_transcripts_identical_sweep(moe_setup, seed):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 2])
+def test_kv_paged_transcripts_identical_sweep(setup, seed):
+    """Wide paged-KV sweep: block sizes, tier ratios (incl. the
+    everything-spills r_c=0 floor), static admission booked against the
+    arena, overlapped staged prefill landing in mapped blocks, EWMA
+    preemption composing with arena-exhaustion preemption, and prefetch
+    off — all bit-identical to dense rings."""
+    cfg, params = setup
+    work = _workload(cfg, seed=seed, n_requests=8)
+    _assert_all_identical(cfg, params, work, {
+        "dense": dict(decode_chunk=4),
+        "kv_bt8": dict(decode_chunk=4, kv_paged=True, block_tokens=8,
+                       kv_gpu_ratio=0.25),
+        "kv_bt32": dict(decode_chunk=4, kv_paged=True, block_tokens=32,
+                        kv_gpu_ratio=0.5),
+        "kv_floor": dict(decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.0),
+        "kv_static": dict(mode="static", kv_paged=True, kv_gpu_ratio=0.25),
+        "kv_overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
+                           kv_paged=True, kv_gpu_ratio=0.25),
+        "kv_ewma": dict(reserve_mode="ewma", cache_tokens=100,
+                        decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.25),
+        "kv_noprefetch": dict(decode_chunk=4, kv_paged=True,
+                              kv_gpu_ratio=0.25, kv_prefetch=False),
+    })
+
+
+@pytest.mark.slow
+def test_kv_paged_with_expert_paged(moe_setup):
+    """Both paging subsystems at once: expert-granular weights through
+    the residency pool AND block-paged KV through the host tier."""
+    cfg, params = moe_setup
+    work = _workload(cfg, seed=3, n_requests=6, max_len=24, max_quota=8)
+    _assert_all_identical(cfg, params, work, {
+        "resident": dict(decode_chunk=4),
+        "both_paged": dict(decode_chunk=4, expert_paged=True,
+                           page_elems=4096, w_gpu_ratio=0.25,
+                           kv_paged=True, kv_gpu_ratio=0.25),
+    })
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", [1, 2, 3])
 def test_cross_mode_transcripts_identical_sweep(setup, seed):
     cfg, params = setup
@@ -132,6 +185,7 @@ def test_cross_mode_transcripts_identical_sweep(setup, seed):
                            decode_chunk=4),
         "overlap_ewma": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
                              reserve_mode="ewma", cache_tokens=100),
+        "kv_spill": dict(decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.25),
     })
     # early-EOS round: pick a token observed mid-transcript and re-run
     # with it as eos_id, so EOS-terminated rows are exercised everywhere

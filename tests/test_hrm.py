@@ -139,6 +139,53 @@ def test_skewed_popularity_cuts_weight_traffic(mixtral, l4):
     assert lat_uni["comm_bytes"] == pytest.approx(expect)
 
 
+def test_kv_block_hit_rate_bounds():
+    """num_ubs = 1 degenerates to the dense placement assumption
+    (hit = r_c); rotation multiplies the effective hit rate because only
+    the decoding group's blocks are touched per step; always in [0, 1]
+    and monotone in r_c."""
+    for r in (0.0, 0.25, 0.5, 1.0):
+        assert H.kv_block_hit_rate(r, 1) == pytest.approx(r)
+    assert H.kv_block_hit_rate(0.25, 2) == pytest.approx(0.5)
+    assert H.kv_block_hit_rate(0.25, 4) == pytest.approx(1.0)
+    assert H.kv_block_hit_rate(0.9, 4) == 1.0
+    assert H.kv_block_hit_rate(-1.0, 2) == 0.0
+    assert H.kv_block_hit_rate(0.1, 3) <= H.kv_block_hit_rate(0.2, 3)
+
+
+def test_kv_hit_cuts_attention_traffic(mixtral, l4):
+    """The KV traffic term is miss rate × touched block bytes: a measured
+    (or rotation-modelled) hit rate above r_c lowers per-layer comm bytes
+    at the same r_c, so the paged pool lets the search trade r_c down
+    and spend the memory elsewhere."""
+    import dataclasses as dc
+    pol = P.Policy(batch=256, ubatch=32, attn_on_gpu=True, ffn_on_gpu=True,
+                   w_gpu_ratio=0.25, kv_gpu_ratio=0.25)
+    wl = H.LayerWorkload.decode(mixtral, batch=256, ctx=512)
+    lat_dense = H.layer_latency(l4, wl, pol)
+    wl_paged = dc.replace(wl, kv_hit=H.kv_block_hit_rate(0.25, 4))
+    lat_paged = H.layer_latency(l4, wl_paged, pol)
+    assert lat_paged["comm_bytes"] < lat_dense["comm_bytes"]
+    # kv_hit=None reproduces the legacy r_c-linear stream exactly
+    assert lat_dense["comm_bytes"] == pytest.approx(
+        wl.bytes_kv * (1 - pol.kv_gpu_ratio)
+        + wl.bytes_w * (1 - pol.w_gpu_ratio))
+
+
+def test_kv_paged_search_feasible_at_lower_rc(mixtral, l4):
+    """policy.search(kv_paged=True) must never do worse than the dense
+    assumption — the rotation hit model only removes link traffic — and
+    estimate() accepts a measured kv_hit_rate override."""
+    wl = P.Workload(prompt_len=77, gen_len=64)
+    dense = P.search(mixtral, l4, wl)
+    paged = P.search(mixtral, l4, wl, kv_paged=True)
+    assert paged["best"]["throughput"] >= dense["best"]["throughput"]
+    pol = dense["best"]["policy"]
+    est_meas = P.estimate(mixtral, l4, wl, pol, kv_hit_rate=1.0)
+    est_none = P.estimate(mixtral, l4, wl, pol)
+    assert est_meas["t_layer"] <= est_none["t_layer"]
+
+
 def test_tpu_adaptation_compute_at_kv_shard(mixtral):
     """The §6.3 case study re-run with v5e constants — the HRM derivation
     behind DESIGN.md §2:

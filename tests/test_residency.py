@@ -143,6 +143,40 @@ def test_pinned_never_evicted_under_pressure(L, E):
     assert not r.is_resident(0, 0)
 
 
+def test_victim_quota_lets_demand_misses_converge():
+    """PR-3 follow-up: with a reserved victim quota, a demand miss
+    (allow_evict=False) may still displace up to `victim_quota` strictly
+    colder residents per chunk — a cold cache under a hot steady state
+    converges without waiting for the prefetch path.  Quota 0 keeps the
+    old refuse-only behavior; the quota refreshes at begin_chunk."""
+    def make(quota):
+        r = residency.ExpertResidency(1, 4, capacity=1, span_bytes=8,
+                                      victim_quota=quota)
+        assert r.admit(0, 0) is not None         # pool full of a cold span
+        hot = np.zeros((1, 4), bool)
+        hot[0, 1] = True
+        for _ in range(5):
+            r.observe(hot)                       # candidate strictly hotter
+        return r
+
+    r0 = make(quota=0)
+    assert r0.admit(0, 1, demand=True, allow_evict=False) is None
+    assert r0.counters.refusals == 1
+
+    r1 = make(quota=1)
+    r1.begin_chunk()
+    assert r1.admit(0, 1, demand=True, allow_evict=False) is not None
+    assert r1.is_resident(0, 1) and not r1.is_resident(0, 0)
+    # quota spent: a second demand eviction this chunk is refused
+    cold = np.zeros((1, 4), bool)
+    cold[0, 2] = True
+    for _ in range(8):
+        r1.observe(cold)                         # make (0,2) hottest
+    assert r1.admit(0, 2, demand=True, allow_evict=False) is None
+    r1.begin_chunk()                             # next chunk: refreshed
+    assert r1.admit(0, 2, demand=True, allow_evict=False) is not None
+
+
 def test_popularity_ewma_prefers_hot_expert():
     r = residency.ExpertResidency(1, 4, capacity=2, span_bytes=8)
     hot = np.array([[True, False, False, False]])
