@@ -8,8 +8,20 @@ Two modes in one table:
     implement; interpret-mode Pallas is also timed for the record);
   * modeled  — HRM-projected latencies at the paper's full Mixtral scale
     on the L4 instance, which is what Fig. 9 plots.
-"""
+
+``--paged`` runs the paged-decode gather report instead (nightly CI →
+``BENCH_kernels.json`` artifact): KV bytes gathered per decode step and
+tokens/s for the page-table-native kernel vs the dense
+``kvcache.paged_view`` materialization vs a dense max_seq ring, at ring
+occupancy ∈ {0.25, 0.5, 1.0} on the mixtral smoke attention geometry.
+Gathered bytes are exact from the block geometry (the quantity
+``Engine.kv_traffic()`` accounts); wall times are the CPU container's
+(the kernel is timed under the Pallas interpreter, labeled as such —
+the jnp ref path is what serves on CPU)."""
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -86,5 +98,103 @@ def run():
     return m, md
 
 
+# ---------------------------------------------------------------------------
+# Paged-decode gather report (BENCH_kernels.json)
+# ---------------------------------------------------------------------------
+
+PAGED_OCCUPANCY = (0.25, 0.5, 1.0)
+
+
+def _paged_case(rng, B, MB, bt, Hkv, Dh, occupancy, dtype):
+    """One arena + page table at the given ring occupancy: every row maps
+    a ceil(occupancy·MB)-block prefix (the steady-decode shape), arena
+    sized to exactly the mapped blocks + the trash block."""
+    mapped = max(1, int(np.ceil(occupancy * MB)))
+    dev = B * mapped
+    NB = dev + 1
+    pt = np.full((B, MB), -1, np.int32)
+    phys = rng.permutation(dev)
+    for b in range(B):
+        pt[b, :mapped] = phys[b * mapped:(b + 1) * mapped]
+    # ring holds positions 0..mapped*bt-1; decode sits at the prefix end
+    sp = np.full((NB, bt), -1, np.int32)
+    for b in range(B):
+        for j in range(mapped):
+            sp[pt[b, j]] = np.arange(j * bt, (j + 1) * bt)
+    pos = np.full((B,), mapped * bt - 1, np.int32)
+    cache = {
+        "k": jnp.asarray(rng.normal(0, 1, (NB, bt, Hkv, Dh)), dtype),
+        "v": jnp.asarray(rng.normal(0, 1, (NB, bt, Hkv, Dh)), dtype),
+        "slot_pos": jnp.asarray(sp),
+        "page_table": jnp.asarray(pt),
+    }
+    q = jnp.asarray(rng.normal(0, 1, (B, 4 * Hkv, Dh)), dtype)
+    return q, cache, jnp.asarray(pos), mapped
+
+
+def paged_report(csv=True, out_path="BENCH_kernels.json"):
+    cfg = get_config("mixtral-8x7b").smoke()
+    Hkv, Dh = 2, cfg.head_dim or 16
+    B, bt, MB = 4, 16, 16
+    W = MB * bt
+    rng = np.random.default_rng(0)
+    itemsize = jnp.dtype(jnp.bfloat16).itemsize
+    blk_bytes = 2 * bt * Hkv * Dh * itemsize          # k + v, one block
+    report = {"config": cfg.name, "ubatch": B, "block_tokens": bt,
+              "max_seq": W, "kv_heads": Hkv, "head_dim": Dh,
+              "occupancy": {}}
+    for occ in PAGED_OCCUPANCY:
+        q, cache, pos, mapped = _paged_case(rng, B, MB, bt, Hkv, Dh,
+                                            occ, jnp.bfloat16)
+        scale = Dh ** -0.5
+        t_kern = time_call(lambda: ops.paged_gqa_decode(
+            q, cache, pos, scale=scale, impl="interpret"))
+        t_view = time_call(lambda: ops.paged_gqa_decode(
+            q, cache, pos, scale=scale, impl="ref"))
+        ring_k = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, Dh)), jnp.bfloat16)
+        ring_v = jnp.asarray(rng.normal(0, 1, (B, W, Hkv, Dh)), jnp.bfloat16)
+        valid = jnp.asarray(np.arange(W)[None] < (mapped * bt))
+        valid = jnp.broadcast_to(valid, (B, W))
+        t_dense = time_call(lambda: ops.gqa_decode(
+            q, ring_k, ring_v, valid, scale=scale, impl="ref"))
+        kern_bytes = B * mapped * blk_bytes            # mapped blocks only
+        view_bytes = B * MB * blk_bytes                # full dense view
+        row = {
+            "mapped_blocks_per_row": mapped,
+            "kernel_gathered_bytes_per_step": kern_bytes,
+            "paged_view_gathered_bytes_per_step": view_bytes,
+            "dense_ring_gathered_bytes_per_step": view_bytes,
+            "gather_reduction_vs_view": view_bytes / kern_bytes,
+            "tok_s_paged_kernel_interpret": B / t_kern,
+            "tok_s_paged_view_ref": B / t_view,
+            "tok_s_dense_ref": B / t_dense,
+        }
+        report["occupancy"][str(occ)] = row
+        if csv:
+            emit(f"paged_decode_occ{int(occ * 100)}", t_view * 1e6,
+                 f"gathered_kb={kern_bytes / 1e3:.1f},"
+                 f"view_kb={view_bytes / 1e3:.1f},"
+                 f"reduction={row['gather_reduction_vs_view']:.2f}x")
+    tight = report["occupancy"][str(PAGED_OCCUPANCY[0])]
+    report["accept_3x_reduction_at_low_occupancy"] = \
+        tight["gather_reduction_vs_view"] >= 3.0
+    if csv:
+        emit("paged_decode_gather_reduction", 0.0,
+             f"occ={PAGED_OCCUPANCY[0]},"
+             f"reduction={tight['gather_reduction_vs_view']:.2f}x,"
+             f"accept={report['accept_3x_reduction_at_low_occupancy']}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-decode gather report -> BENCH_kernels.json")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    if args.paged:
+        paged_report(out_path=args.out)
+    else:
+        run()

@@ -89,7 +89,8 @@ def run(smoke: bool = False, out_path: str = "BENCH_kv.json"):
         }
         for k in ("device_blocks", "peak_blocks_in_use",
                   "arena_utilization", "hits", "misses", "spills",
-                  "prefetches", "hit_rate"):
+                  "prefetches", "hit_rate", "gathered_bytes_per_step",
+                  "paged_view_bytes_per_step", "gather_reduction_vs_view"):
             if k in t:
                 row[k] = t[k]
         report["variants"][name] = row

@@ -129,7 +129,10 @@ def main():
             kv_note = (f", KV dev bytes/tok="
                        f"{kvt['device_kv_bytes'] / max(1, toks):.0f}"
                        + (f" (arena occ {kvt['arena_utilization']:.2f}, "
-                          f"KV H2D {kvt['h2d_bytes'] / 1e6:.1f}MB)"
+                          f"KV H2D {kvt['h2d_bytes'] / 1e6:.1f}MB, "
+                          f"decode gather "
+                          f"{kvt['gather_reduction_vs_view']:.1f}x below "
+                          f"the dense view)"
                           if kv_paged else ""))
             print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
                   f"({toks / dt:.1f} tok/s, paged={paged}, "

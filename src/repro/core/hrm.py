@@ -19,6 +19,7 @@ analysis used by the launch-time policy search.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -173,7 +174,13 @@ class LayerWorkload:
     @classmethod
     def decode(cls, cfg, batch: int, ctx: float, dtype_bytes: int = 2,
                experts_hit: Optional[float] = None, popularity=None,
-               kv_hit: Optional[float] = None):
+               kv_hit: Optional[float] = None,
+               block_tokens: Optional[int] = None):
+        """``block_tokens``: set for the block-granular paged pool — the
+        page-table-native decode kernels gather whole blocks, so the KV
+        bytes touched per step round ``ctx`` up to the mapped-block
+        footprint (what Engine.kv_traffic()'s gathered-bytes counters
+        measure), not the raw token count."""
         h1 = cfg.d_model
         hd = cfg.head_dim or 1
         nq = max(cfg.num_heads, 1)
@@ -185,7 +192,10 @@ class LayerWorkload:
         else:
             kv_row = 2 * nkv * hd
             flops_attn = 2 * batch * ctx * nq * hd * 2
-        bytes_kv = batch * ctx * kv_row * dtype_bytes
+        kv_ctx = ctx
+        if block_tokens:
+            kv_ctx = block_tokens * math.ceil(ctx / block_tokens)
+        bytes_kv = batch * kv_ctx * kv_row * dtype_bytes
 
         w_expert = 0.0
         num_experts = 0
@@ -233,7 +243,12 @@ def kv_block_hit_rate(kv_gpu_ratio: float, num_ubs: int = 1) -> float:
     small arena disproportionately effective — the same shape as
     ``expert_hit_rate`` for skewed routing.  KV traffic per layer is then
     ``miss_rate × touched block bytes`` (each transfer moves whole
-    blocks, which is what the engine's BlockPool counters measure)."""
+    blocks, which is what the engine's BlockPool counters measure).
+    Since the page-table-native decode kernels gather exactly the mapped
+    blocks (``Engine.kv_traffic()``'s gathered-bytes/step), this modeled
+    term now matches what the device executes — pass
+    ``LayerWorkload.decode(..., block_tokens=…)`` so the touched bytes
+    round to whole blocks too."""
     r = min(max(kv_gpu_ratio, 0.0), 1.0)
     return float(min(1.0, r * max(1, num_ubs)))
 

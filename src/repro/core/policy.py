@@ -87,7 +87,8 @@ def memory_usage(cfg: ModelConfig, wl: Workload, pol: Policy,
 def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
              dtype_bytes: int = 2, expert_popularity=None,
              kv_hit_rate: Optional[float] = None,
-             kv_paged: bool = False) -> Dict[str, float]:
+             kv_paged: bool = False,
+             block_tokens: Optional[int] = None) -> Dict[str, float]:
     """Per-layer decode latency (Eq. 12) and end-to-end generation
     throughput (tokens/s) including prefill amortization.
 
@@ -102,13 +103,18 @@ def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
     stream.  kv_paged=True models the block-granular pool instead:
     H.kv_block_hit_rate(r_c, num_ubs) — rotation makes a small arena
     disproportionately effective, so the search can trade r_c down and
-    spend the memory on r_w."""
+    spend the memory on r_w.
+
+    block_tokens: block size of the paged pool — the page-table-native
+    decode kernels gather whole blocks, so the touched-KV term rounds
+    the context up to the mapped-block footprint (matching the engine's
+    gathered-bytes counters)."""
     kv_hit = kv_hit_rate
     if kv_hit is None and kv_paged:
         kv_hit = H.kv_block_hit_rate(pol.kv_gpu_ratio, pol.num_ubs)
     lw = H.LayerWorkload.decode(cfg, pol.batch, wl.avg_ctx, dtype_bytes,
                                 popularity=expert_popularity,
-                                kv_hit=kv_hit)
+                                kv_hit=kv_hit, block_tokens=block_tokens)
     lat = H.layer_latency(hw, lw, pol)
     t_layer = lat["t_layer"]
     # prefill: compute-bound on the accelerator, overlapped with weight
@@ -135,7 +141,8 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
            ub_grid=(4, 8, 16, 32, 36, 64, 100, 128, 256),
            mult_grid=(1, 2, 4, 8, 15, 16, 26, 32, 61, 64, 92, 128, 256),
            ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0),
-           expert_popularity=None, kv_paged: bool = False) -> Dict:
+           expert_popularity=None, kv_paged: bool = False,
+           block_tokens: Optional[int] = None) -> Dict:
     """Exact enumeration over the 6-tuple.  Returns the best feasible
     policy and its estimate; also the best with attention forced to each
     device (for the §6.3-style case study).
@@ -167,7 +174,7 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
                     continue
                 est = estimate(cfg, hw, wl, pol, dtype_bytes,
                                expert_popularity=expert_popularity,
-                               kv_paged=kv_paged)
+                               kv_paged=kv_paged, block_tokens=block_tokens)
                 cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
                         "mem_cpu": mem["cpu"]}
                 if best is None or cand["throughput"] > best["throughput"]:

@@ -31,10 +31,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _kernel(q_ref, k_ref, v_ref, valid_ref,            # inputs
-            o_ref, m_ref, l_ref,                       # outputs
-            acc, m_s, l_s,                             # scratch
-            *, scale: float, attn_softcap: float, blocks_w: int):
+def _kernel(q_ref, k_ref, v_ref, valid_ref, *rest,
+            scale: float, attn_softcap: float, blocks_w: int,
+            quantized: bool):
+    if quantized:       # int8 arena: per-(token, head) dequant scales
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
+    else:
+        o_ref, m_ref, l_ref, acc, m_s, l_s = rest
     w = pl.program_id(2)
 
     @pl.when(w == 0)
@@ -49,6 +52,8 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref,            # inputs
     valid = valid_ref[0]                               # (bw,)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, bw)
+    if quantized:       # fold k_scale per tile: s = (q . k_int) * ks
+        s = s * ks_ref[0, 0][None, :]
     if attn_softcap:
         s = attn_softcap * jnp.tanh(s / attn_softcap)
     s = jnp.where(valid[None, :], s, NEG_INF)
@@ -61,20 +66,28 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref,            # inputs
     corr = jnp.where(m_prev <= NEG_INF / 2, 0.0,
                      jnp.exp(m_prev - m_safe))
     l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
+    if quantized:       # fold v_scale into p: o = (p * vs) @ v_int
+        p = p * vs_ref[0, 0][None, :]
     acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())))                # (G, Dv)
-    m_s[...] = m_safe
+    # keep the TRUE running max (NEG_INF while nothing valid yet) so the
+    # emitted m matches the single-pass oracle even when an all-invalid
+    # block precedes a block whose true max is negative
+    m_s[...] = m_new
 
     @pl.when(w == blocks_w - 1)
     def _fin():
         o_ref[0, 0] = acc[...]
-        m_ref[0, 0] = m_s[...]
+        m_ref[0, 0] = jnp.where(m_s[...] <= NEG_INF / 2, 0.0, m_s[...])
         l_ref[0, 0] = l_s[...]
 
 
 def gqa_decode(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
-               block_w: int = 512, interpret: bool = True):
+               k_scale=None, v_scale=None, block_w: int = 512,
+               interpret: bool = True):
     """q: (B,H,D); k: (B,W,Hkv,D); v: (B,W,Hkv,Dv); valid: (B,W) bool.
+    int8 caches pass k_scale/v_scale (B,W,Hkv) f32 — the dequant runs
+    tile-wise in VMEM, never as a materialized f32 ring.
     Returns (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32)."""
     B, H, D = q.shape
     _, W, Hkv, Dv = v.shape
@@ -82,28 +95,35 @@ def gqa_decode(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
     block_w = min(block_w, W)
     assert W % block_w == 0, (W, block_w)
     blocks_w = W // block_w
+    quantized = k_scale is not None
 
     qg = q.reshape(B, Hkv, G, D)
     kt = jnp.swapaxes(k, 1, 2)           # (B, Hkv, W, D)
     vt = jnp.swapaxes(v, 1, 2)           # (B, Hkv, W, Dv)
 
     grid = (B, Hkv, blocks_w)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, h, w: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_w, D), lambda b, h, w: (b, h, w, 0)),
+        pl.BlockSpec((1, 1, block_w, Dv), lambda b, h, w: (b, h, w, 0)),
+        pl.BlockSpec((1, block_w), lambda b, h, w: (b, w)),
+    ]
+    inputs = [qg, kt, vt, valid]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, block_w),
+                                  lambda b, h, w: (b, h, w))] * 2
+        inputs += [jnp.swapaxes(k_scale, 1, 2), jnp.swapaxes(v_scale, 1, 2)]
     out_shapes = (
         jax.ShapeDtypeStruct((B, Hkv, G, Dv), jnp.float32),
         jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
         jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
     )
     kern = functools.partial(_kernel, scale=scale, attn_softcap=attn_softcap,
-                             blocks_w=blocks_w)
+                             blocks_w=blocks_w, quantized=quantized)
     o, m, l = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, w: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_w, D), lambda b, h, w: (b, h, w, 0)),
-            pl.BlockSpec((1, 1, block_w, Dv), lambda b, h, w: (b, h, w, 0)),
-            pl.BlockSpec((1, block_w), lambda b, h, w: (b, w)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, 1, G, Dv), lambda b, h, w: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, G), lambda b, h, w: (b, h, 0)),
@@ -116,5 +136,5 @@ def gqa_decode(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
             pltpu.VMEM((G,), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, kt, vt, valid)
+    )(*inputs)
     return (o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H))

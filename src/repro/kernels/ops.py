@@ -4,7 +4,12 @@ Dispatch: on TPU the compiled kernels run natively; elsewhere (this CPU
 container) ``interpret=True`` executes the kernel bodies in Python for
 correctness validation, and callers that want XLA-optimized CPU execution
 use the jnp reference path instead (models pass use_kernels=False by
-default off-TPU).
+default off-TPU).  Every dispatcher shares one ``impl`` contract:
+
+  * ``auto``      — Pallas on TPU, the jnp reference path elsewhere;
+  * ``pallas``    — the kernel, compiled natively (interpreted off-TPU);
+  * ``interpret`` — the kernel body under the Pallas interpreter;
+  * ``ref``       — the pure-jnp oracle.
 """
 from __future__ import annotations
 
@@ -15,7 +20,10 @@ import jax.numpy as jnp
 
 from repro.kernels import gqa_decode as _gqa
 from repro.kernels import moe_ffn as _moe
+from repro.kernels import paged_decode as _paged
 from repro.kernels import ref as _ref
+
+_IMPLS = ("auto", "pallas", "interpret", "ref")
 
 
 def on_tpu() -> bool:
@@ -25,18 +33,79 @@ def on_tpu() -> bool:
         return False
 
 
+def _resolve_impl(impl: str):
+    """The shared on-TPU/interpret dance: returns (use_ref, interpret)."""
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+    tpu = on_tpu()
+    use_ref = impl == "ref" or (impl == "auto" and not tpu)
+    return use_ref, (impl == "interpret") or not tpu
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "attn_softcap",
                                              "block_w", "impl"))
 def gqa_decode(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
-               block_w: int = 512, impl: str = "auto"):
-    """Flash-decode GQA partials. impl: auto | pallas | interpret | ref."""
-    if impl == "ref" or (impl == "auto" and not on_tpu()):
+               k_scale=None, v_scale=None, block_w: int = 512,
+               impl: str = "auto"):
+    """Flash-decode GQA partials. impl: auto | pallas | interpret | ref.
+    int8 KV passes k_scale/v_scale (B,W,Hkv) f32 — dequant folds into the
+    tiles in both the kernel and the ref path."""
+    use_ref, interpret = _resolve_impl(impl)
+    if use_ref:
         return _ref.gqa_decode_ref(q, k, v, valid, scale=scale,
-                                   attn_softcap=attn_softcap)
-    interpret = (impl == "interpret") or not on_tpu()
+                                   attn_softcap=attn_softcap,
+                                   k_scale=k_scale, v_scale=v_scale)
     return _gqa.gqa_decode(q, k, v, valid, scale=scale,
-                           attn_softcap=attn_softcap, block_w=block_w,
+                           attn_softcap=attn_softcap, k_scale=k_scale,
+                           v_scale=v_scale, block_w=block_w,
                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "attn_softcap",
+                                             "window", "impl"))
+def paged_gqa_decode(q, layer_cache, pos, *, scale: float,
+                     attn_softcap: float = 0.0, window: int = 0,
+                     impl: str = "auto"):
+    """Paged flash-decode GQA partials, straight through the page table.
+
+    q: (B,H,D); layer_cache: a paged layer-cache slice — block arena
+    leaves ``k``/``v`` (NB, bt, Hkv, D*) (+ ``k_scale``/``v_scale`` for
+    int8), ``slot_pos`` (NB, bt), and ``page_table`` (B, MB); pos: (B,)
+    decode positions.  Returns the ``attention_partials`` triple.
+
+    impl ``ref`` (and ``auto`` off-TPU) is the dense-view oracle: the
+    old ``kvcache.paged_view`` + ``attention_partials`` composition —
+    the Pallas path gathers only the mapped blocks instead."""
+    use_ref, interpret = _resolve_impl(impl)
+    if use_ref:
+        return _ref.paged_gqa_decode_ref(q, layer_cache, pos, scale=scale,
+                                         attn_softcap=attn_softcap,
+                                         window=window)
+    return _paged.paged_gqa_decode(
+        q, layer_cache["k"], layer_cache["v"], layer_cache["slot_pos"],
+        layer_cache["page_table"], pos, scale=scale,
+        attn_softcap=attn_softcap, window=window,
+        k_scale=layer_cache.get("k_scale"),
+        v_scale=layer_cache.get("v_scale"), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "lat", "impl"))
+def paged_mla_decode(qcat, layer_cache, pos, *, scale: float, lat: int,
+                     impl: str = "auto"):
+    """Paged absorbed-MLA decode partials through the page table.
+
+    qcat: (B,H,lat+dr) — absorbed latent queries ++ rope queries;
+    layer_cache: paged MLA slice (``ckv`` (NB, bt, lat), ``kr``
+    (NB, bt, dr), ``slot_pos``, ``page_table``); pos: (B,).  The value
+    is the latent itself (Dv = lat).  impl contract as above."""
+    use_ref, interpret = _resolve_impl(impl)
+    if use_ref:
+        return _ref.paged_mla_decode_ref(qcat, layer_cache, pos,
+                                         scale=scale)
+    return _paged.paged_mla_decode(
+        qcat, layer_cache["ckv"], layer_cache["kr"],
+        layer_cache["slot_pos"], layer_cache["page_table"], pos,
+        scale=scale, lat=lat, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
@@ -46,13 +115,12 @@ def moe_ffn(xbuf, wi, wo, wi_scale=None, wo_scale=None, *,
             block_f: int = 512, impl: str = "auto"):
     """Grouped gated expert FFN (int8 weights + scales supported).
     impl: auto | pallas | interpret | ref."""
-    if impl == "ref" or (impl == "auto" and not on_tpu()):
-        import jax.numpy as jnp
+    use_ref, interpret = _resolve_impl(impl)
+    if use_ref:
         if wi_scale is not None:
             wi = wi.astype(jnp.float32) * wi_scale[:, None, None, None]
             wo = wo.astype(jnp.float32) * wo_scale[:, None, None]
         return _ref.moe_ffn_ref(xbuf, wi, wo, act=act)
-    interpret = (impl == "interpret") or not on_tpu()
     return _moe.moe_ffn(xbuf, wi, wo, wi_scale=wi_scale, wo_scale=wo_scale,
                         act=act, block_c=block_c,
                         block_f=block_f, interpret=interpret)
@@ -67,13 +135,13 @@ def flash_prefill(q, k, v, kv_len=None, *, causal: bool = True,
                   impl: str = "auto"):
     """Prefill/training flash attention. impl: auto | pallas | interpret |
     ref (ref = models.common.chunked_attention, the jnp tile-equivalent)."""
-    if impl == "ref" or (impl == "auto" and not on_tpu()):
+    use_ref, interpret = _resolve_impl(impl)
+    if use_ref:
         from repro.models.common import chunked_attention
         return chunked_attention(q, k, v, causal=causal, window=window,
                                  attn_softcap=attn_softcap, scale=scale,
                                  kv_len=kv_len)
     from repro.kernels.flash_prefill import flash_prefill as _fp
-    interpret = (impl == "interpret") or not on_tpu()
     return _fp(q, k, v, causal=causal, window=window,
                attn_softcap=attn_softcap, scale=scale, kv_len=kv_len,
                block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,282 @@
+"""Pallas paged flash-decode kernels (TPU target, interpret-validated on
+CPU): decode attention that reads K/V **directly through the
+``(slot, logical_block) → physical_block`` page table** of the block-
+granular KV arena (models.kvcache / core.blockpool), instead of first
+gathering a dense ``max_seq``-wide ring view (``kvcache.paged_view``).
+
+Grid layout: one grid step per (batch row, kv head, logical block).  The
+page table and the per-row decode positions ride in scalar-prefetch SMEM
+(``PrefetchScalarGridSpec``), so each K/V BlockSpec's index map picks the
+arena slab ``pt[b, lb]`` *before* the kernel body runs — the block DMA is
+issued straight against the physical block, and HBM traffic per step is
+``mapped_blocks × block_bytes`` instead of ``B × max_seq`` row bytes.
+
+Masking invariants (mirrors what ``paged_view`` + ``decode_valid_mask``
+compute on the dense view):
+
+  * an **unmapped** logical block (``pt[b, lb] < 0``) clamps its index
+    map to physical block 0 and masks the whole block in-kernel — the
+    arena's trash block (the scatter target for masked rows) is *never
+    read* by the gather side;
+  * within a mapped block, validity is the usual
+    ``slot_pos >= 0 & slot_pos <= pos`` ring test, evaluated on the
+    block's own (1, bt) ``slot_pos`` slab.
+
+A running (max, sumexp, accumulator) online-softmax triple lives in VMEM
+scratch across the sequential block grid dimension (same structure as
+``gqa_decode``), and the kernels return *partials* ``(o_unnorm, m, l)``
+— the ``attention_partials`` contract — so the sequence-sharded LSE
+combine keeps working.
+
+int8 KV: quantized arenas carry per-(token, head) ``k_scale``/``v_scale``
+planes; the kernel folds them per block — ``s = (q·k_int) · k_scale`` and
+``acc += (p · v_scale) @ v_int`` — instead of materializing a dequantized
+ring (the same folding the jnp ref path applies, so the two agree
+term-by-term).
+
+MLA: the absorbed decode form is GQA with one kv head whose key is
+``concat(ckv, kr)`` and whose value is ``ckv``; the kernel gathers the
+latent and rope leaves per block and computes the score as two partial
+dots (``q_lat·ckv + q_rope·kr``) — no concatenated ring is ever built.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# GQA (dense or int8 arena)
+# ---------------------------------------------------------------------------
+
+def _gqa_kernel(pt_ref, pos_ref,                     # scalar prefetch (SMEM)
+                q_ref, k_ref, v_ref, *rest,
+                scale: float, attn_softcap: float, window: int,
+                blocks_w: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, sp_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
+    else:
+        sp_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
+    b, w = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    pos = pos_ref[b]
+    sp = sp_ref[0]                                   # (bt,) this block's ring
+    valid = (pt_ref[b, w] >= 0) & (sp >= 0) & (sp <= pos)
+    if window:
+        valid &= sp > pos - window
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (bt, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, bt)
+    if quantized:
+        s = s * ks_ref[0, :, 0][None, :]
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None]) * (s > NEG_INF / 2)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
+    if quantized:
+        p = p * vs_ref[0, :, 0][None, :]
+    v = v_ref[0, :, 0].astype(jnp.float32)           # (bt, Dv)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))              # (G, Dv)
+    # keep the TRUE running max (NEG_INF while nothing valid yet): an
+    # all-invalid early block must not clamp the max to 0, or a later
+    # block with a negative true max would report m = 0 instead of the
+    # oracle's max
+    m_s[...] = m_new
+
+    @pl.when(w == blocks_w - 1)
+    def _fin():
+        o_ref[0, 0] = acc[...]
+        m_ref[0, 0] = jnp.where(m_s[...] <= NEG_INF / 2, 0.0, m_s[...])
+        l_ref[0, 0] = l_s[...]
+
+
+def paged_gqa_decode(q, k, v, slot_pos, page_table, pos, *, scale: float,
+                     attn_softcap: float = 0.0, window: int = 0,
+                     k_scale=None, v_scale=None, interpret: bool = True):
+    """q: (B,H,D); k/v: (NB, bt, Hkv, D*) block arena (last block = trash,
+    never read); slot_pos: (NB, bt) int32; page_table: (B, MB) int32
+    (-1 = unmapped); pos: (B,) int32 query positions.  int8 arenas pass
+    k_scale/v_scale (NB, bt, Hkv) f32.  Returns partials
+    (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32)."""
+    B, H, D = q.shape
+    _, bt, Hkv, Dv = v.shape
+    MB = page_table.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    quantized = k_scale is not None
+    page_table = page_table.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+
+    def idx_q(b, h, w, pt, ps):
+        return (b, h, 0, 0)
+
+    def idx_blk(b, h, w, pt, ps):
+        # unmapped -> physical block 0, fully masked in-kernel (the trash
+        # block at the arena's end is a scatter-only target)
+        return (jnp.maximum(pt[b, w], 0), 0, h, 0)
+
+    def idx_scale(b, h, w, pt, ps):
+        return (jnp.maximum(pt[b, w], 0), 0, h)
+
+    def idx_sp(b, h, w, pt, ps):
+        return (jnp.maximum(pt[b, w], 0), 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), idx_q),
+        pl.BlockSpec((1, bt, 1, D), idx_blk),
+        pl.BlockSpec((1, bt, 1, Dv), idx_blk),
+    ]
+    inputs = [qg, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bt, 1), idx_scale),
+                     pl.BlockSpec((1, bt, 1), idx_scale)]
+        inputs += [k_scale, v_scale]
+    in_specs.append(pl.BlockSpec((1, bt), idx_sp))
+    inputs.append(slot_pos)
+
+    kern = functools.partial(_gqa_kernel, scale=scale,
+                             attn_softcap=attn_softcap, window=window,
+                             blocks_w=MB, quantized=quantized)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, MB),
+            in_specs=in_specs,
+            out_specs=(
+                pl.BlockSpec((1, 1, G, Dv), idx_q),
+                pl.BlockSpec((1, 1, G), lambda b, h, w, pt, ps: (b, h, 0)),
+                pl.BlockSpec((1, 1, G), lambda b, h, w, pt, ps: (b, h, 0)),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((G, Dv), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Hkv, G, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+        ),
+        interpret=interpret,
+    )(page_table, pos, *inputs)
+    return o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H)
+
+
+# ---------------------------------------------------------------------------
+# MLA (absorbed decode over the latent arena)
+# ---------------------------------------------------------------------------
+
+def _mla_kernel(pt_ref, pos_ref,
+                q_ref, ckv_ref, kr_ref, sp_ref,
+                o_ref, m_ref, l_ref,
+                acc, m_s, l_s,
+                *, scale: float, lat: int, blocks_w: int):
+    b, w = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    pos = pos_ref[b]
+    sp = sp_ref[0]
+    valid = (pt_ref[b, w] >= 0) & (sp >= 0) & (sp <= pos)
+
+    q = q_ref[0].astype(jnp.float32) * scale         # (H, lat + dr)
+    ckv = ckv_ref[0].astype(jnp.float32)             # (bt, lat)
+    kr = kr_ref[0].astype(jnp.float32)               # (bt, dr)
+    # score against concat(ckv, kr) without building the concat: two
+    # partial dots over the latent and rope halves
+    s = jax.lax.dot_general(q[:, :lat], ckv, (((1,), (1,)), ((), ()))) \
+        + jax.lax.dot_general(q[:, lat:], kr, (((1,), (1,)), ((), ())))
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None]) * (s > NEG_INF / 2)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())))            # (H, lat)
+    m_s[...] = m_new          # true running max; see the GQA kernel note
+
+    @pl.when(w == blocks_w - 1)
+    def _fin():
+        o_ref[0] = acc[...]
+        m_ref[0] = jnp.where(m_s[...] <= NEG_INF / 2, 0.0, m_s[...])
+        l_ref[0] = l_s[...]
+
+
+def paged_mla_decode(qcat, ckv, kr, slot_pos, page_table, pos, *,
+                     scale: float, lat: int, interpret: bool = True):
+    """Absorbed MLA decode over the latent block arena.  qcat:
+    (B, H, lat + dr) — absorbed latent queries ++ rope queries; ckv:
+    (NB, bt, lat); kr: (NB, bt, dr); slot_pos: (NB, bt); page_table:
+    (B, MB); pos: (B,).  The attended value is the latent itself, so the
+    partials come back as (o_unnorm (B,H,lat) f32, m, l)."""
+    B, H, _ = qcat.shape
+    _, bt, _ = ckv.shape
+    dr = kr.shape[-1]
+    MB = page_table.shape[1]
+    page_table = page_table.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+
+    def idx_blk2(b, w, pt, ps):
+        return (jnp.maximum(pt[b, w], 0), 0, 0)
+
+    kern = functools.partial(_mla_kernel, scale=scale, lat=lat, blocks_w=MB)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, MB),
+            in_specs=[
+                pl.BlockSpec((1, H, lat + dr), lambda b, w, pt, ps: (b, 0, 0)),
+                pl.BlockSpec((1, bt, lat), idx_blk2),
+                pl.BlockSpec((1, bt, dr), idx_blk2),
+                pl.BlockSpec((1, bt),
+                             lambda b, w, pt, ps: (jnp.maximum(pt[b, w], 0), 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((1, H, lat), lambda b, w, pt, ps: (b, 0, 0)),
+                pl.BlockSpec((1, H), lambda b, w, pt, ps: (b, 0)),
+                pl.BlockSpec((1, H), lambda b, w, pt, ps: (b, 0)),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((H, lat), jnp.float32),
+                pltpu.VMEM((H,), jnp.float32),
+                pltpu.VMEM((H,), jnp.float32),
+            ],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, H, lat), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ),
+        interpret=interpret,
+    )(page_table, pos, qcat, ckv, kr, slot_pos)
+    return o, m, l

@@ -5,13 +5,46 @@ import jax
 import jax.numpy as jnp
 
 
-def gqa_decode_ref(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0):
+def gqa_decode_ref(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
+                   k_scale=None, v_scale=None):
     """q: (B,H,D); k: (B,W,Hkv,D); v: (B,W,Hkv,Dv); valid: (B,W) bool.
     Returns (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32) — the same
-    partials contract as models.attention.attention_partials."""
+    partials contract as models.attention.attention_partials.  int8 KV
+    passes k_scale/v_scale (B,W,Hkv) f32; the dequant folds into the
+    score/value contractions (never a materialized f32 ring)."""
     from repro.models.attention import attention_partials
     return attention_partials(q, k, v, valid, scale=scale,
-                              attn_softcap=attn_softcap)
+                              attn_softcap=attn_softcap,
+                              k_scale=k_scale, v_scale=v_scale)
+
+
+def paged_gqa_decode_ref(q, layer_cache, pos, *, scale: float,
+                         attn_softcap: float = 0.0, window: int = 0):
+    """The paged-decode oracle: gather a dense ring view of the mapped
+    blocks (``kvcache.paged_view``) and run the partials over it — the
+    exact composition the hot path used before the page-table-native
+    kernels, kept as the bit-reference and the CPU execution path."""
+    from repro.models import kvcache
+    from repro.models.attention import attention_partials, decode_valid_mask
+    ring = kvcache.paged_view(layer_cache)
+    valid = decode_valid_mask(ring["slot_pos"], pos, window)
+    kw = {}
+    if "k_scale" in ring:
+        kw = dict(k_scale=ring["k_scale"], v_scale=ring["v_scale"])
+    return attention_partials(q, ring["k"], ring["v"], valid, scale=scale,
+                              attn_softcap=attn_softcap, **kw)
+
+
+def paged_mla_decode_ref(qcat, layer_cache, pos, *, scale: float):
+    """Absorbed-MLA paged-decode oracle: dense latent ring view, key =
+    concat(ckv, kr) as a single kv head, value = the latent."""
+    from repro.models import kvcache
+    from repro.models.attention import attention_partials, decode_valid_mask
+    ring = kvcache.paged_view(layer_cache)
+    valid = decode_valid_mask(ring["slot_pos"], pos, 0)
+    kcat = jnp.concatenate([ring["ckv"], ring["kr"]], -1)[:, :, None, :]
+    return attention_partials(qcat, kcat.astype(qcat.dtype),
+                              ring["ckv"][:, :, None, :], valid, scale=scale)
 
 
 def moe_ffn_ref(xbuf, wi, wo, *, act: str = "silu"):

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTN_MLA, ATTN_WINDOW, LayerSpec, ModelConfig
+from repro.kernels import ops
 from repro.models import kvcache
 from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
                                  rmsnorm, softcap)
@@ -25,14 +26,23 @@ from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
 # ---------------------------------------------------------------------------
 
 def attention_partials(q, k, v, valid, *, scale: float,
-                       attn_softcap: float = 0.0):
+                       attn_softcap: float = 0.0,
+                       k_scale=None, v_scale=None):
     """q: (B,H,D), k/v: (B,W,Hkv,Dv), valid: (B,W) bool.
-    Returns (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32)."""
+    Returns (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32).
+
+    int8 KV passes its per-(token, head) ``k_scale``/``v_scale`` planes
+    ((B,W,Hkv) f32) and the dequant folds into the tiles —
+    ``s = (q · k_int) · k_scale`` and ``o = (p · v_scale) @ v_int`` — so
+    no dequantized f32 ring is ever materialized (the Pallas kernels
+    apply the same per-block folding)."""
     B, H, D = q.shape
     Hkv = k.shape[2]
     g = H // Hkv
     qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
     s = jnp.einsum("bhgd,bwhd->bhgw", qf, k.astype(jnp.float32))
+    if k_scale is not None:
+        s = s * jnp.swapaxes(k_scale, 1, 2)[:, :, None, :]
     s = softcap(s, attn_softcap)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
@@ -40,6 +50,8 @@ def attention_partials(q, k, v, valid, *, scale: float,
     m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
     p = jnp.exp(s - m_safe[..., None]) * (s > NEG_INF / 2)
     l = jnp.sum(p, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.swapaxes(v_scale, 1, 2)[:, :, None, :]
     o = jnp.einsum("bhgw,bwhd->bhgd", p, v.astype(jnp.float32))
     Dv = v.shape[-1]
     return o.reshape(B, H, Dv), m_safe.reshape(B, H), l.reshape(B, H)
@@ -72,22 +84,30 @@ def chunk_valid_mask(slot_pos, q_positions, window: int):
 
 
 def chunk_attention_ring(q, k, v, valid, *, scale: float,
-                         attn_softcap: float = 0.0):
+                         attn_softcap: float = 0.0,
+                         k_scale=None, v_scale=None):
     """Chunked-prefill attention: S chunk queries against the full ring.
     q: (B,S,H,D); k/v: (B,W,Hkv,Dv); valid: (B,S,W) bool.
     Returns (B,S,H,Dv) f32 — the multi-query generalization of
-    attention_partials + combine_partials."""
+    attention_partials + combine_partials.  int8 ring history passes
+    ``k_scale``/``v_scale`` ((B,W,Hkv) f32) and the dequant folds into
+    the score/value contractions tile-wise, same as attention_partials —
+    the overlap mode's decode-vs-chunk reads never build an f32 ring."""
     B, S, H, D = q.shape
     Hkv = k.shape[2]
     g = H // Hkv
     qf = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, g, D)
     s = jnp.einsum("bshgd,bwhd->bshgw", qf, k.astype(jnp.float32))
+    if k_scale is not None:
+        s = s * jnp.swapaxes(k_scale, 1, 2)[:, None, :, None, :]
     s = softcap(s, attn_softcap)
     s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
     p = jnp.exp(s - m_safe[..., None]) * (s > NEG_INF / 2)
     l = jnp.sum(p, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.swapaxes(v_scale, 1, 2)[:, None, :, None, :]
     o = jnp.einsum("bshgw,bwhd->bshgd", p, v.astype(jnp.float32))
     o = o / jnp.maximum(l[..., None], 1e-30)
     return o.reshape(B, S, H, v.shape[-1])
@@ -107,11 +127,14 @@ def _proj(x, w, b=None):
 def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
                 positions, *, cache: Optional[Dict], mode: str,
                 pos: Optional[jax.Array] = None, sharded_fn=None,
-                kv_override: Optional[Tuple] = None, causal: bool = True):
+                kv_override: Optional[Tuple] = None, causal: bool = True,
+                paged_impl: str = "auto"):
     """x: (B,S,E). mode: 'full' (train/prefill w/ optional cache write) or
     'decode' (S==1, read+write ring cache).  Returns (out, new_layer_cache).
 
-    kv_override: (k, v) already-built KV (whisper cross-attention)."""
+    kv_override: (k, v) already-built KV (whisper cross-attention).
+    paged_impl: kernel dispatch for paged-cache decode
+    (ops.paged_gqa_decode: auto | pallas | interpret | ref)."""
     B, S, E = x.shape
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     scale = cfg.query_scale or Dh ** -0.5
@@ -136,27 +159,37 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
     if mode == "decode":
         assert S == 1 and cache is not None
         new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
-        if kvcache.is_paged(cache):
-            # block-paged pool: scatter through the page table, then
-            # gather a dense ring view of the mapped blocks — identical
-            # layout and masking to the dense path, so greedy output is
-            # bit-identical in every tier regime
-            new_cache = kvcache.write_decode_paged(cache, new, pos)
-            ring = kvcache.paged_view(new_cache)
-        else:
-            new_cache = kvcache.write_decode(cache, new, pos)
-            ring = new_cache
-        valid = decode_valid_mask(ring["slot_pos"], pos, window)
-        if quantized:
-            kc, vc = kvcache.dequantize_kv(ring)
-        else:
-            kc, vc = ring["k"], ring["v"]
-        args = (q[:, 0], kc, vc, valid)
         kw = dict(scale=scale, attn_softcap=cfg.attn_softcap)
-        if sharded_fn is not None:
-            o = sharded_fn(*args, **kw)
+        paged = kvcache.is_paged(cache)
+        new_cache = (kvcache.write_decode_paged(cache, new, pos) if paged
+                     else kvcache.write_decode(cache, new, pos))
+        if paged and sharded_fn is None:
+            # block-paged pool, hot path: the token was scattered through
+            # the page table; attend straight through it too — the paged
+            # flash-decode dispatcher reads only the mapped arena blocks
+            # (ref impl = the old paged_view + attention_partials
+            # composition, kept as the oracle and the CPU execution path)
+            o = combine_partials(*ops.paged_gqa_decode(
+                q[:, 0], new_cache, pos, window=window,
+                impl=paged_impl, **kw))
         else:
-            o = combine_partials(*attention_partials(*args, **kw))
+            # sequence-sharded combine consumes a dense ring view
+            ring = kvcache.paged_view(new_cache) if paged else new_cache
+            valid = decode_valid_mask(ring["slot_pos"], pos, window)
+            if quantized and sharded_fn is not None:
+                # sharded_fn's contract has no scale planes: fall back to
+                # the dequantized ring for the distributed combine
+                kc, vc = kvcache.dequantize_kv(ring)
+                args = (q[:, 0], kc, vc, valid)
+            else:
+                args = (q[:, 0], ring["k"], ring["v"], valid)
+                if quantized:
+                    kw.update(k_scale=ring["k_scale"],
+                              v_scale=ring["v_scale"])
+            if sharded_fn is not None:
+                o = sharded_fn(*args, **kw)
+            else:
+                o = combine_partials(*attention_partials(*args, **kw))
         o = o[:, None].astype(x.dtype)                      # (B,1,H,Dh)
     elif mode == "chunk":
         # chunked prefill at a row offset: write this chunk's KV into the
@@ -174,13 +207,14 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
         # offset), so the ring scatter uses row 0's positions
         new_cache = kvcache.write_prefill(cache, new,
                                           positions[0].astype(jnp.int32))
-        if quantized:
-            kc, vc = kvcache.dequantize_kv(new_cache)
-        else:
-            kc, vc = new_cache["k"], new_cache["v"]
         valid = chunk_valid_mask(new_cache["slot_pos"], positions, window)
-        o = chunk_attention_ring(q, kc, vc, valid, scale=scale,
-                                 attn_softcap=cfg.attn_softcap)
+        ckw = {}
+        if quantized:        # per-tile dequant: no f32 ring materialized
+            ckw = dict(k_scale=new_cache["k_scale"],
+                       v_scale=new_cache["v_scale"])
+        o = chunk_attention_ring(q, new_cache["k"], new_cache["v"], valid,
+                                 scale=scale, attn_softcap=cfg.attn_softcap,
+                                 **ckw)
         o = o.astype(x.dtype)                               # (B,S,H,Dh)
     elif kv_override is not None:
         # cross-attention (non-causal over encoder positions)
@@ -212,7 +246,7 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
 def mla_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
                 positions, *, cache: Optional[Dict], mode: str,
                 pos: Optional[jax.Array] = None, sharded_fn=None,
-                causal: bool = True):
+                causal: bool = True, paged_impl: str = "auto"):
     B, S, E = x.shape
     H = cfg.num_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -233,30 +267,35 @@ def mla_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
     new_cache = cache
     if mode == "decode":
         assert S == 1 and cache is not None
-        if kvcache.is_paged(cache):
-            new_cache = kvcache.write_decode_paged(
-                cache, {"ckv": ckv, "kr": kr}, pos)
-            ring = kvcache.paged_view(new_cache)
-        else:
-            new_cache = kvcache.write_decode(
-                cache, {"ckv": ckv, "kr": kr}, pos)
-            ring = new_cache
-        valid = decode_valid_mask(ring["slot_pos"], pos, 0)
         # absorbed queries: q_lat (B,H,r) = q_nope @ W_uk^T
         q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                            wuk.astype(jnp.float32))
         # fold the rope part in by concatenating along the "latent" dim:
         # score = q_lat . ckv + q_rope . kr
         qcat = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], -1)
-        kcat = jnp.concatenate([ring["ckv"], ring["kr"]],
-                               -1)[:, :, None, :]               # (B,W,1,r+dr)
-        kw = dict(scale=scale, attn_softcap=0.0)
-        args = (qcat.astype(x.dtype), kcat.astype(x.dtype),
-                ring["ckv"][:, :, None, :], valid)
-        if sharded_fn is not None:
-            o_lat = sharded_fn(*args, **kw)
+        paged = kvcache.is_paged(cache)
+        new = {"ckv": ckv, "kr": kr}
+        new_cache = (kvcache.write_decode_paged(cache, new, pos) if paged
+                     else kvcache.write_decode(cache, new, pos))
+        if paged and sharded_fn is None:
+            # paged hot path: the MLA kernel gathers the latent + rope
+            # leaves per mapped block through the page table — no
+            # concatenated dense ring is ever built
+            o_lat = combine_partials(*ops.paged_mla_decode(
+                qcat.astype(x.dtype), new_cache, pos, scale=scale,
+                lat=cfg.kv_lora_rank, impl=paged_impl))
         else:
-            o_lat = combine_partials(*attention_partials(*args, **kw))
+            ring = kvcache.paged_view(new_cache) if paged else new_cache
+            valid = decode_valid_mask(ring["slot_pos"], pos, 0)
+            kcat = jnp.concatenate([ring["ckv"], ring["kr"]],
+                                   -1)[:, :, None, :]           # (B,W,1,r+dr)
+            kw = dict(scale=scale, attn_softcap=0.0)
+            args = (qcat.astype(x.dtype), kcat.astype(x.dtype),
+                    ring["ckv"][:, :, None, :], valid)
+            if sharded_fn is not None:
+                o_lat = sharded_fn(*args, **kw)
+            else:
+                o_lat = combine_partials(*attention_partials(*args, **kw))
         # o_lat: (B,H,r) attention-weighted latents; decompress with W_uv
         o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
         o = o[:, None].astype(x.dtype)                          # (B,1,H,dv)

@@ -164,7 +164,14 @@ def paged_view(layer_cache: Dict) -> Dict:
     W = MB * bt.  Logical block lb covers ring positions
     [lb*bt, (lb+1)*bt), exactly the dense ring's layout; unmapped blocks
     read the trash block but their slot_pos is forced to -1, so they are
-    invisible to the validity masks."""
+    invisible to the validity masks.
+
+    NOTE this is no longer the decode hot path: the page-table-native
+    flash-decode kernels (kernels.paged_decode, dispatched through
+    kernels.ops.paged_gqa_decode / paged_mla_decode) read the arena
+    directly and gather only mapped blocks.  The dense view remains the
+    ref oracle (the ops `ref` impl and the CPU `auto` path), the
+    sequence-sharded combine's input, and a debugging aid."""
     pt = layer_cache["page_table"]                     # (B, MB)
     B, MB = pt.shape
     trash = layer_cache["slot_pos"].shape[0] - 1

@@ -36,6 +36,9 @@ class ExecPolicy:
     moe_fn: Optional[Callable] = None     # overrides moe_impl when set
     attn_fn: Optional[Callable] = None    # sharded decode-attention combine
     use_kernels: bool = False
+    paged_attn_impl: str = "auto"         # paged-decode kernel dispatch:
+    # auto (Pallas on TPU, dense-view ref elsewhere) | pallas | interpret
+    # | ref — see kernels.ops.paged_gqa_decode
     remat: bool = False
     scan_unroll: int = 1
 
@@ -114,6 +117,7 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p: Dict, x, *,
         y, new_cache = attn_forward(
             cfg, spec, p["attn"], h, positions, cache=cache, mode=mode,
             pos=pos, sharded_fn=policy.attn_fn if policy else None,
+            paged_impl=policy.paged_attn_impl if policy else "auto",
             **({} if causal else {"causal": False}))
         if cfg.post_block_norm:
             y = apply_norm(cfg, p["post_attn_norm"], y)

@@ -248,6 +248,13 @@ class Engine:
             self._kv_pending: List[Tuple[int, int]] = []
             self._kv_pending_set: set = set()
             self._static_gids: List[int] = list(range(ecfg.num_ubs))
+            # decode-path gather accounting: the page-table-native kernel
+            # reads each row's *mapped* blocks per step; the dense view
+            # (kvcache.paged_view) gathered the full max_seq ring for
+            # every row of the group
+            self._kv_gather_steps = 0
+            self._kv_gathered_blocks = 0
+            self._kv_view_blocks = 0
             # constant byte terms for kv_traffic(): the arena itself, the
             # dense remainder (window/SSM/prologue/xattn rings), and the
             # page tables
@@ -635,6 +642,19 @@ class Engine:
             if op is not None:
                 self._kv_exec([op])
 
+    def _kv_note_gather(self, gid: int, steps: int) -> None:
+        """Book the decode-path KV gather of one dispatched chunk: the
+        paged flash-decode kernels read each row's mapped blocks once per
+        decode step (per layer), so gathered bytes scale with the page
+        table's mapped-block count — not with ``max_seq`` as the dense
+        ``paged_view`` materialization did."""
+        b = self.ecfg.ubatch
+        rows = range(gid * b, (gid + 1) * b)
+        mapped = sum(self._kv.n_mapped(r) for r in rows)
+        self._kv_gather_steps += steps
+        self._kv_gathered_blocks += mapped * steps
+        self._kv_view_blocks += b * self._kv.blocks_per_slot * steps
+
     def kv_traffic(self) -> Dict[str, float]:
         """Device-KV accounting: bytes the KV pool actually occupies on
         device vs the dense max_seq-wide equivalent, plus the host-tier
@@ -663,6 +683,19 @@ class Engine:
             spills=c.spills, allocs=c.allocs, frees=c.frees,
             h2d_bytes=c.h2d_bytes, d2h_bytes=c.d2h_bytes,
             hit_rate=c.hit_rate,
+        )
+        # what the decode hot path actually reads per step (mapped blocks
+        # through the page table) vs what the dense paged_view gather
+        # materialized (the group's full max_seq-wide ring) — this is the
+        # quantity hrm.kv_block_hit_rate's traffic term models
+        bb = self._kv.block_bytes
+        steps = max(1, self._kv_gather_steps)
+        out.update(
+            gathered_bytes=self._kv_gathered_blocks * bb,
+            gathered_bytes_per_step=self._kv_gathered_blocks * bb / steps,
+            paged_view_bytes_per_step=self._kv_view_blocks * bb / steps,
+            gather_reduction_vs_view=(self._kv_view_blocks
+                                      / max(1, self._kv_gathered_blocks)),
         )
         return out
 
@@ -878,8 +911,11 @@ class Engine:
             rem = np.array(
                 [s.req.remaining if s.state == SlotState.DECODE else 0
                  for s in slots], np.int32)
-            cache = (self._compose_kv(group.cache, gid)
-                     if self._kv is not None else group.cache)
+            if self._kv is not None:
+                self._kv_note_gather(gid, self.ecfg.decode_chunk)
+                cache = self._compose_kv(group.cache, gid)
+            else:
+                cache = group.cache
             cache, group.last_tok, act2, toks, emitted = \
                 self._decode_group(cache, group.last_tok, active, rem,
                                    holder=group, gid=gid)
@@ -990,6 +1026,7 @@ class Engine:
                 continue
             if self._kv is not None:
                 self._kv_prepare_static(ab, active)
+                self._kv_note_gather(ab.gid, 1)
                 cache = self._compose_kv(ab.cache, ab.gid)
             else:
                 cache = ab.cache

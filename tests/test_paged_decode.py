@@ -1,0 +1,383 @@
+"""Page-table-native paged flash-decode kernels: the interpret-mode
+Pallas kernels must match the dense-view oracle (``kvcache.paged_view``
++ ``attention_partials``, the ops ``ref`` impl) over adversarial page
+tables — permuted physical blocks, partial prefixes, unmapped (-1)
+entries, garbage slot_pos — across block sizes, GQA group shapes, the
+int8 arena (per-block scale folding), and the MLA latent variant.  The
+running-max partial is **bit-identical** (max is exactly associative);
+the o/l accumulators are pinned to a few ulps (blockwise online-softmax
+accumulation reassociates the sum the oracle's single einsum performs —
+1e-5 here is ~30× the worst observed drift).  The trash block must
+never be read by the gather side, and at engine level greedy
+transcripts must stay **bit-identical** between dense rings and the
+paged-kernel path in every serving mode (the fast subset here is the
+interpret-mode parity slice CPU CI runs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                          # CI installs it; the bare
+    HAS_HYPOTHESIS = False                   # container runs the seeded
+                                             # sweeps below instead
+
+from repro.kernels import ops
+from repro.models.attention import combine_partials
+
+
+# ---------------------------------------------------------------------------
+# Random paged-cache construction
+# ---------------------------------------------------------------------------
+
+def _random_page_table(rng, B, MB, dev):
+    """Adversarial (B, MB) table: per-row random mapped-prefix length,
+    distinct physical blocks in permuted order, -1 beyond the prefix."""
+    pt = np.full((B, MB), -1, np.int32)
+    phys = list(rng.permutation(dev))
+    for b in range(B):
+        n = int(rng.integers(0, MB + 1))
+        for lb in range(n):
+            if not phys:
+                break
+            pt[b, lb] = phys.pop()
+    return pt
+
+
+def _gqa_case(rng, B, MB, bt, Hkv, G, D, Dv, int8=False, trash_nan=False):
+    dev = int(rng.integers(1, B * MB + 1))
+    NB = dev + 1                              # + trash block
+    W = MB * bt
+    pt = _random_page_table(rng, B, MB, dev)
+    sp = rng.integers(-1, W, (NB, bt)).astype(np.int32)
+    pos = rng.integers(0, W, (B,)).astype(np.int32)
+    q = rng.normal(size=(B, Hkv * G, D)).astype(np.float32)
+    cache = {"page_table": jnp.asarray(pt)}
+    if int8:
+        k = rng.integers(-127, 128, (NB, bt, Hkv, D)).astype(np.int8)
+        v = rng.integers(-127, 128, (NB, bt, Hkv, Dv)).astype(np.int8)
+        cache["k_scale"] = jnp.asarray(
+            (rng.random((NB, bt, Hkv)) * 0.02 + 1e-3).astype(np.float32))
+        cache["v_scale"] = jnp.asarray(
+            (rng.random((NB, bt, Hkv)) * 0.02 + 1e-3).astype(np.float32))
+    else:
+        k = rng.normal(size=(NB, bt, Hkv, D)).astype(np.float32)
+        v = rng.normal(size=(NB, bt, Hkv, Dv)).astype(np.float32)
+        if trash_nan:                         # scatter-only block: poison it
+            k[-1], v[-1] = np.nan, np.nan
+            sp[-1] = rng.integers(0, W, (bt,))   # plausible-looking ring
+    cache["slot_pos"] = jnp.asarray(sp)
+    cache["k"], cache["v"] = jnp.asarray(k), jnp.asarray(v)
+    return jnp.asarray(q), cache, jnp.asarray(pos)
+
+
+def _match(a, b, m_exact=True):
+    """Kernel partials vs oracle partials: m bit-exact (GQA — the score
+    elements are identical dots, and max is exactly associative), o/l to
+    ulps.  The MLA kernel scores via two partial dots where the oracle
+    dots one concatenated key, so its m drifts by ulps too."""
+    if m_exact:
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]),
+                                      err_msg="running max diverged")
+    else:
+        np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg="running max diverged")
+    for x, y, name in ((a[0], b[0], "o"), (a[2], b[2], "l")):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"partial {name} diverged")
+    np.testing.assert_allclose(np.asarray(combine_partials(*a)),
+                               np.asarray(combine_partials(*b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _assert_kernel_is_oracle(q, cache, pos, *, scale, window=0, softcap=0.0):
+    a = ops.paged_gqa_decode(q, cache, pos, scale=scale, window=window,
+                             attn_softcap=softcap, impl="interpret")
+    b = ops.paged_gqa_decode(q, cache, pos, scale=scale, window=window,
+                             attn_softcap=softcap, impl="ref")
+    _match(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Kernel ≡ oracle, property-style
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 32]),
+           st.sampled_from([(1, 1), (2, 4), (1, 8)]), st.booleans())
+    @settings(max_examples=12, deadline=None)
+    def test_paged_gqa_kernel_bit_identical(seed, bt, heads, int8):
+        rng = np.random.default_rng(seed)
+        Hkv, G = heads
+        q, cache, pos = _gqa_case(rng, B=2, MB=3, bt=bt, Hkv=Hkv, G=G,
+                                  D=16, Dv=16, int8=int8)
+        _assert_kernel_is_oracle(q, cache, pos, scale=16 ** -0.5)
+
+
+@pytest.mark.parametrize("bt", [8, 16, 32])
+@pytest.mark.parametrize("heads", [(1, 1), (2, 4), (1, 8)])
+def test_paged_gqa_kernel_bit_identical_seeded(bt, heads):
+    """Seeded sweep (hypothesis-free containers): random page tables ×
+    block sizes × GQA group shapes, f32 and int8, exact equality."""
+    Hkv, G = heads
+    for seed in range(4):
+        rng = np.random.default_rng(hash((bt, Hkv, G, seed)) % 2 ** 31)
+        for int8 in (False, True):
+            q, cache, pos = _gqa_case(rng, B=2, MB=3, bt=bt, Hkv=Hkv, G=G,
+                                      D=16, Dv=16, int8=int8)
+            _assert_kernel_is_oracle(q, cache, pos, scale=16 ** -0.5)
+
+
+def test_paged_gqa_kernel_softcap_and_dv():
+    """Softcap and Dv != D (the MLA-latent shape) through the kernel."""
+    rng = np.random.default_rng(11)
+    q, cache, pos = _gqa_case(rng, B=1, MB=4, bt=8, Hkv=2, G=2, D=32, Dv=24)
+    _assert_kernel_is_oracle(q, cache, pos, scale=32 ** -0.5, softcap=30.0)
+
+
+def test_paged_gqa_kernel_window_mask():
+    """Sliding-window validity evaluated in-kernel on the block's own
+    slot_pos slab matches the dense-view decode_valid_mask."""
+    rng = np.random.default_rng(12)
+    q, cache, pos = _gqa_case(rng, B=2, MB=4, bt=8, Hkv=1, G=4, D=16, Dv=16)
+    _assert_kernel_is_oracle(q, cache, pos, scale=16 ** -0.5, window=12)
+
+
+def test_paged_gqa_all_unmapped_row():
+    """A row mapping zero blocks (a free slot) must come back with l = 0
+    everywhere — the combine guard then yields exactly 0 output."""
+    rng = np.random.default_rng(13)
+    q, cache, pos = _gqa_case(rng, B=2, MB=2, bt=8, Hkv=1, G=2, D=16, Dv=16)
+    pt = np.asarray(cache["page_table"]).copy()
+    pt[0] = -1
+    cache["page_table"] = jnp.asarray(pt)
+    o, m, l = ops.paged_gqa_decode(q, cache, pos, scale=0.25,
+                                   impl="interpret")
+    assert np.asarray(l)[0].sum() == 0.0
+    assert np.abs(np.asarray(o)[0]).sum() == 0.0
+    _assert_kernel_is_oracle(q, cache, pos, scale=0.25)
+
+
+def test_paged_gqa_trash_block_never_read():
+    """The arena's last block is a scatter-only target: poisoned with
+    NaN, the kernel's output must stay finite and equal the oracle run
+    on a zeroed trash block (the dense view *does* gather the trash
+    block for unmapped spans, so the oracle needs it finite)."""
+    rng = np.random.default_rng(14)
+    q, cache, pos = _gqa_case(rng, B=2, MB=3, bt=8, Hkv=2, G=2, D=16,
+                              Dv=16, trash_nan=True)
+    clean = dict(cache)
+    clean["k"] = cache["k"].at[-1].set(0.0)
+    clean["v"] = cache["v"].at[-1].set(0.0)
+    a = ops.paged_gqa_decode(q, cache, pos, scale=0.25, impl="interpret")
+    b = ops.paged_gqa_decode(q, clean, pos, scale=0.25, impl="ref")
+    assert np.isfinite(np.asarray(a[0])).all()
+    _match(a, b)
+
+
+# ---------------------------------------------------------------------------
+# MLA variant
+# ---------------------------------------------------------------------------
+
+def _mla_case(rng, B, MB, bt, H, lat, dr):
+    dev = int(rng.integers(1, B * MB + 1))
+    NB = dev + 1
+    W = MB * bt
+    cache = {
+        "ckv": jnp.asarray(rng.normal(size=(NB, bt, lat)).astype(np.float32)),
+        "kr": jnp.asarray(rng.normal(size=(NB, bt, dr)).astype(np.float32)),
+        "slot_pos": jnp.asarray(rng.integers(-1, W, (NB, bt)).astype(np.int32)),
+        "page_table": jnp.asarray(_random_page_table(rng, B, MB, dev)),
+    }
+    qcat = jnp.asarray(rng.normal(size=(B, H, lat + dr)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, W, (B,)).astype(np.int32))
+    return qcat, cache, pos
+
+
+@pytest.mark.parametrize("bt", [8, 16])
+def test_paged_mla_kernel_matches_oracle(bt):
+    for seed in range(4):
+        rng = np.random.default_rng(100 + seed * 10 + bt)
+        qcat, cache, pos = _mla_case(rng, B=2, MB=3, bt=bt, H=4,
+                                     lat=16, dr=8)
+        _match(ops.paged_mla_decode(qcat, cache, pos, scale=24 ** -0.5,
+                                    lat=16, impl="interpret"),
+               ops.paged_mla_decode(qcat, cache, pos, scale=24 ** -0.5,
+                                    lat=16, impl="ref"), m_exact=False)
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_paged_mla_kernel_matches_oracle_prop(seed):
+        rng = np.random.default_rng(seed)
+        qcat, cache, pos = _mla_case(rng, B=2, MB=3, bt=8, H=4, lat=16, dr=8)
+        _match(ops.paged_mla_decode(qcat, cache, pos, scale=24 ** -0.5,
+                                    lat=16, impl="interpret"),
+               ops.paged_mla_decode(qcat, cache, pos, scale=24 ** -0.5,
+                                    lat=16, impl="ref"), m_exact=False)
+
+
+# ---------------------------------------------------------------------------
+# Dense int8 per-tile dequant (the un-paged satellite): folded scales in
+# the ref partials and the dense Pallas kernel agree with the
+# dequantize-then-compute composition
+# ---------------------------------------------------------------------------
+
+def test_dense_int8_folded_scales_match_dequant():
+    rng = np.random.default_rng(21)
+    B, W, Hkv, G, D = 2, 32, 2, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    k = jnp.asarray(rng.integers(-127, 128, (B, W, Hkv, D)).astype(np.int8))
+    v = jnp.asarray(rng.integers(-127, 128, (B, W, Hkv, D)).astype(np.int8))
+    ks = jnp.asarray((rng.random((B, W, Hkv)) * 0.02 + 1e-3).astype(np.float32))
+    vs = jnp.asarray((rng.random((B, W, Hkv)) * 0.02 + 1e-3).astype(np.float32))
+    valid = jnp.asarray(rng.random((B, W)) > 0.3)
+    folded = ops.gqa_decode(q, k, v, valid, scale=0.25,
+                            k_scale=ks, v_scale=vs, impl="ref")
+    kern = ops.gqa_decode(q, k, v, valid, scale=0.25,
+                          k_scale=ks, v_scale=vs, block_w=8,
+                          impl="interpret")
+    kf = k.astype(jnp.float32) * ks[..., None]
+    vf = v.astype(jnp.float32) * vs[..., None]
+    deq = ops.gqa_decode(q, kf, vf, valid, scale=0.25, impl="ref")
+    a = combine_partials(*folded)
+    np.testing.assert_allclose(np.asarray(a),
+                               np.asarray(combine_partials(*deq)),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(combine_partials(*kern)),
+                               np.asarray(a), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: dense vs paged-kernel greedy transcripts, every mode
+# ---------------------------------------------------------------------------
+
+def _engine_work(cfg, seed, n, max_len=24, max_quota=8):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(2, cfg.vocab_size, int(rng.integers(1, max_len))),
+             int(rng.integers(1, max_quota))) for _ in range(n)]
+
+
+def _engine_run(cfg, params, work, policy=None, **kw):
+    from repro.serving.engine import Engine, EngineConfig
+    ecfg = dict(ubatch=2, num_ubs=2, max_seq=64, decode_chunk=4)
+    ecfg.update(kw)
+    eng = Engine(cfg, params, EngineConfig(**ecfg), policy=policy)
+    for p, q in work:
+        eng.submit(p, q)
+    return eng.run_until_idle()
+
+
+def _kernel_policy():
+    from repro.models.model import ExecPolicy
+    return ExecPolicy(paged_attn_impl="interpret")
+
+
+def _smoke(arch, dtype_kw=None, seed=3):
+    from repro.configs import get_config
+    from repro.models.params import init_params
+    cfg = dataclasses.replace(get_config(arch).smoke(), dtype="float32",
+                              **(dtype_kw or {}))
+    return cfg, init_params(cfg, jax.random.key(seed))
+
+
+def test_engine_paged_kernel_transcripts_fast():
+    """Fast CI slice: dense rings vs the paged dispatcher's ref impl vs
+    the interpret-mode Pallas kernel — bit-identical greedy output."""
+    cfg, params = _smoke("qwen2.5-3b")
+    work = _engine_work(cfg, seed=0, n=4)
+    dense = _engine_run(cfg, params, work)
+    ref = _engine_run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25)
+    kern = _engine_run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25,
+                       policy=_kernel_policy())
+    assert ref == dense
+    assert kern == dense
+
+
+def test_engine_paged_kernel_int8_fast():
+    cfg, params = _smoke("qwen2.5-3b", {"kv_dtype": "int8"}, seed=5)
+    work = _engine_work(cfg, seed=5, n=4)
+    dense = _engine_run(cfg, params, work)
+    kern = _engine_run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25,
+                       policy=_kernel_policy())
+    assert kern == dense
+
+
+def test_engine_paged_kernel_mla_fast():
+    cfg, params = _smoke("deepseek-v3-671b", seed=7)
+    work = _engine_work(cfg, seed=7, n=4)
+    dense = _engine_run(cfg, params, work)
+    kern = _engine_run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25,
+                       policy=_kernel_policy())
+    assert kern == dense
+
+
+@pytest.mark.slow
+def test_engine_paged_kernel_every_mode():
+    """The full mode sweep through the interpret kernel: static,
+    continuous, overlapped staged prefill, EWMA reservations with
+    recompute preemption, prefetch off — all bit-identical to dense."""
+    cfg, params = _smoke("qwen2.5-3b", seed=9)
+    work = _engine_work(cfg, seed=9, n=6, max_len=32)
+    dense = _engine_run(cfg, params, work)
+    pol = _kernel_policy()
+    variants = {
+        "kernel_cont": dict(kv_paged=True, kv_gpu_ratio=0.25, policy=pol),
+        "kernel_static": dict(mode="static", kv_paged=True,
+                              kv_gpu_ratio=0.25, policy=pol),
+        "kernel_overlap": dict(overlap=True, prefill_chunk=8, kv_paged=True,
+                               kv_gpu_ratio=0.25, policy=pol),
+        "kernel_ewma": dict(reserve_mode="ewma", cache_tokens=100,
+                            kv_paged=True, kv_gpu_ratio=0.25, policy=pol),
+        "kernel_bt8": dict(kv_paged=True, block_tokens=8,
+                           kv_gpu_ratio=0.25, policy=pol),
+        "kernel_noprefetch": dict(kv_paged=True, kv_gpu_ratio=0.25,
+                                  kv_prefetch=False, policy=pol),
+    }
+    for name, kw in variants.items():
+        assert _engine_run(cfg, params, work, **kw) == dense, name
+
+
+@pytest.mark.slow
+def test_engine_paged_kernel_with_expert_paged():
+    """Kernel-path paged KV composed with expert-granular paged weights
+    in overlap mode (the overlap+expert-paged combo of the acceptance
+    bar)."""
+    cfg, params = _smoke("mixtral-8x7b", seed=4)
+    work = _engine_work(cfg, seed=4, n=4, max_len=20, max_quota=6)
+    dense = _engine_run(cfg, params, work)
+    kern = _engine_run(cfg, params, work, overlap=True, prefill_chunk=8,
+                       expert_paged=True, page_elems=4096, w_gpu_ratio=0.25,
+                       kv_paged=True, kv_gpu_ratio=0.25,
+                       policy=_kernel_policy())
+    assert kern == dense
+
+
+def test_engine_gathered_bytes_scale_with_mapped_blocks():
+    """kv_traffic()'s decode-gather accounting: bytes/step follow the
+    page table's mapped-block count, strictly below the max_seq-wide
+    dense-view equivalent on a short-prompt workload."""
+    cfg, params = _smoke("qwen2.5-3b", seed=2)
+    work = _engine_work(cfg, seed=2, n=4, max_len=12, max_quota=4)
+    from repro.serving.engine import Engine, EngineConfig
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           decode_chunk=4, kv_paged=True,
+                                           kv_gpu_ratio=1.0))
+    for p, q in work:
+        eng.submit(p, q)
+    eng.run_until_idle()
+    t = eng.kv_traffic()
+    assert t["gathered_bytes"] > 0
+    assert t["gathered_bytes_per_step"] < t["paged_view_bytes_per_step"]
+    assert t["gather_reduction_vs_view"] > 1.5
+    # the dense-view equivalent is exactly the group's full ring span
+    mb = eng.ecfg.max_seq // eng.ecfg.block_tokens
+    assert t["paged_view_bytes_per_step"] == pytest.approx(
+        eng.ecfg.ubatch * mb * eng._kv.block_bytes)
