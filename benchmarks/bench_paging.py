@@ -20,6 +20,12 @@ engine's own accounting (DESIGN.md §2: on the CPU container traffic is
 modeled, not physically moved; the byte counts are exactly what the TPU
 host-offload path would transfer).
 
+``--module-batch`` additionally sweeps module-based batching (decoupled
+attention/expert phases): the same tight-budget expert-paged serve at
+module_groups ∈ {1, 2, 4, 8} over an 8-group rotation, reporting the
+measured bytes/token amortization curve (one expert-span stream serves
+G groups' staged tokens per accumulation window).
+
 ``--smoke`` shrinks the workload for the nightly CI job, which uploads
 the emitted ``BENCH_paging.json`` as a workflow artifact.
 """
@@ -42,9 +48,10 @@ TIGHT_RW = 0.25            # the "tight w_gpu_ratio" of the acceptance bar
 
 
 def _serve(cfg, params, requests, **kw):
-    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
-                                           decode_chunk=4,
-                                           page_elems=PAGE_ELEMS, **kw))
+    base = dict(ubatch=2, num_ubs=2, max_seq=64, decode_chunk=4,
+                page_elems=PAGE_ELEMS)
+    base.update(kw)
+    eng = Engine(cfg, params, EngineConfig(**base))
     for prompt, gen in requests:
         eng.submit(prompt, gen)
     t0 = time.perf_counter()
@@ -54,7 +61,60 @@ def _serve(cfg, params, requests, **kw):
     return eng, out, toks, dt
 
 
-def run(smoke: bool = False, out_path: str = "BENCH_paging.json"):
+MODULE_GROUPS_SWEEP = (1, 2, 4, 8)
+
+
+def run_module_sweep(cfg, params, smoke: bool) -> dict:
+    """Module-based batching amortization curve: tight-budget
+    expert-paged serving over an 8-group rotation at module_groups ∈
+    MODULE_GROUPS_SWEEP (G=1 is the lockstep baseline).  Decode-heavy
+    workload so the expert-phase weight stream dominates."""
+    rng = np.random.default_rng(1)
+    n_req, gen = (16, 12) if smoke else (32, 24)
+    requests = [(rng.integers(2, cfg.vocab_size, int(rng.integers(2, 8))),
+                 gen) for _ in range(n_req)]
+    sweep = {}
+    base_row = None
+    for mg in MODULE_GROUPS_SWEEP:
+        eng, out, toks, dt = _serve(
+            cfg, params, requests, num_ubs=8,
+            expert_paged=True, w_gpu_ratio=TIGHT_RW,
+            module_batch=mg > 1, module_groups=mg)
+        t = eng.weight_traffic()
+        row = {
+            "tokens": toks,
+            "tokens_per_s": toks / dt,
+            "h2d_weight_bytes": int(t["h2d_bytes"]),
+            "expert_phase_bytes": int(t["expert_phase_bytes"]),
+            "bytes_per_token_amortized": t["bytes_per_token_amortized"],
+            "module_groups_effective": t["module_groups_effective"],
+            "transcripts": out,
+        }
+        if base_row is None:
+            base_row = row
+        row["amortization_vs_lockstep"] = (
+            base_row["bytes_per_token_amortized"]
+            / max(1.0, row["bytes_per_token_amortized"]))
+        sweep[mg] = row
+        emit(f"paging_module_g{mg}", dt * 1e6,
+             f"tok_per_s={toks / dt:.1f},"
+             f"bytes_per_tok={row['bytes_per_token_amortized']:.0f},"
+             f"g_eff={row['module_groups_effective']:.2f},"
+             f"amortization={row['amortization_vs_lockstep']:.2f}x")
+    identical = all(r["transcripts"] == base_row["transcripts"]
+                    for r in sweep.values())
+    return {
+        "tight_w_gpu_ratio": TIGHT_RW,
+        "num_ubs": 8,
+        "greedy_identical": identical,
+        "groups": {str(mg): {k: v for k, v in row.items()
+                             if k != "transcripts"}
+                   for mg, row in sweep.items()},
+    }
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_paging.json",
+        module_batch: bool = False):
     cfg = get_config("mixtral-8x7b").smoke()
     import dataclasses
     cfg = dataclasses.replace(cfg, dtype="float32")
@@ -107,6 +167,8 @@ def run(smoke: bool = False, out_path: str = "BENCH_paging.json"):
          f"reduction={tight['traffic_reduction_vs_whole_layer']:.2f}x,"
          f"hit_rate={tight['hit_rate']:.2f},"
          f"greedy_identical={report['greedy_identical']}")
+    if module_batch:
+        report["module_batch"] = run_module_sweep(cfg, params, smoke)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     return report
@@ -116,6 +178,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="shrunk workload for the nightly CI job")
+    ap.add_argument("--module-batch", action="store_true",
+                    help="also sweep module_groups in "
+                         f"{MODULE_GROUPS_SWEEP} (8-group rotation) and "
+                         "report the bytes/token amortization curve")
     ap.add_argument("--out", default="BENCH_paging.json")
     args = ap.parse_args()
-    run(smoke=args.smoke, out_path=args.out)
+    run(smoke=args.smoke, out_path=args.out,
+        module_batch=args.module_batch)

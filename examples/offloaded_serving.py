@@ -12,7 +12,8 @@ with batched requests through the full MoE-Lightning pipeline —
   PYTHONPATH=src python examples/offloaded_serving.py \
       [--requests 32] [--mode continuous|static] [--skew] \
       [--overlap] [--long-prompts] \
-      [--kv-paged | --no-kv-paged] [--kv-gpu-ratio 0.25] [--block-tokens 16]
+      [--kv-paged | --no-kv-paged] [--kv-gpu-ratio 0.25] [--block-tokens 16] \
+      [--module-batch | --no-module-batch] [--module-groups N]
 
 ``--overlap`` stages admission as chunked prefill interleaved with the
 decode chunks (request-level CGOPipe); pair with ``--long-prompts`` to
@@ -24,6 +25,12 @@ block-granular paged pool (shared arena + page tables) with the host
 tier sized from ``--kv-gpu-ratio`` (the policy's r_c); omitting the
 flag runs BOTH layouts and prints paged-vs-dense device KV bytes/token
 alongside the weight-paging comparison.
+
+``--module-batch`` turns on module-based batching: attention + router
+run for ``--module-groups`` rotation groups back-to-back and each
+paged weight span streams once per accumulation window instead of once
+per group — omitting the flag runs BOTH schedules and prints lockstep
+vs module-batched H2D weight bytes/token.
 """
 import argparse
 import time
@@ -78,6 +85,16 @@ def main():
     ap.add_argument("--block-tokens", type=int, default=16,
                     help="ring positions per KV block (must divide "
                          "max_seq)")
+    # --module-batch / --no-module-batch; omit to run both and compare
+    ap.add_argument("--module-batch",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="module-based batching (decoupled attention/"
+                         "expert phases, one weight stream per "
+                         "accumulation window); omit to run both "
+                         "schedules and compare H2D bytes/token")
+    ap.add_argument("--module-groups", type=int, default=None,
+                    help="rotation groups per accumulation window "
+                         "(default: num_ubs)")
     args = ap.parse_args()
 
     print(f"params: {count_params(LM_110M) / 1e6:.1f}M")
@@ -105,27 +122,35 @@ def main():
 
     w_variants = [True, False] if args.paged is None else [args.paged]
     kv_variants = [True, False] if args.kv_paged is None else [args.kv_paged]
+    mb_variants = ([False, True] if args.module_batch is None
+                   else [args.module_batch])
     outs = {}
     kv_rows = {}
+    mb_rows = {}
     for paged in w_variants:
-        for kv_paged in kv_variants:
+        for kv_paged, module_batch in [(kv, mb) for kv in kv_variants
+                                       for mb in mb_variants]:
             eng = Engine(LM_110M, params,
                          EngineConfig(ubatch=4, num_ubs=2, max_seq=64,
                                       paged=paged, page_elems=1 << 18,
                                       mode=args.mode, overlap=args.overlap,
                                       prefill_chunk=16, kv_paged=kv_paged,
                                       kv_gpu_ratio=args.kv_gpu_ratio,
-                                      block_tokens=args.block_tokens))
+                                      block_tokens=args.block_tokens,
+                                      module_batch=module_batch,
+                                      module_groups=args.module_groups))
             for prompt, gen in requests:
                 eng.submit(prompt, gen)
             t0 = time.time()
             out = eng.run_until_idle()
             dt = time.time() - t0
-            outs[(paged, kv_paged)] = out
+            outs[(paged, kv_paged, module_batch)] = out
             toks = sum(len(v) for v in out.values())
             traffic = eng.weight_traffic()
             kvt = eng.kv_traffic()
             kv_rows[kv_paged] = kvt
+            if paged:
+                mb_rows[module_batch] = traffic["h2d_bytes"] / max(1, toks)
             kv_note = (f", KV dev bytes/tok="
                        f"{kvt['device_kv_bytes'] / max(1, toks):.0f}"
                        + (f" (arena occ {kvt['arena_utilization']:.2f}, "
@@ -136,7 +161,8 @@ def main():
                           if kv_paged else ""))
             print(f"served {len(out)} requests, {toks} tokens in {dt:.1f}s "
                   f"({toks / dt:.1f} tok/s, paged={paged}, "
-                  f"kv_paged={kv_paged}, mode={args.mode}, "
+                  f"kv_paged={kv_paged}, module_batch={module_batch}, "
+                  f"mode={args.mode}, "
                   f"overlap={args.overlap}, engine ticks={eng.steps}, "
                   f"H2D weight bytes={traffic['h2d_bytes'] / 1e6:.0f}MB"
                   f"{kv_note})")
@@ -153,6 +179,12 @@ def main():
               f"paged={paged_bt:.0f} "
               f"({dense_bt / max(1.0, paged_bt):.2f}x smaller at "
               f"r_c={args.kv_gpu_ratio})")
+    if len(mb_rows) == 2:
+        print(f"H2D weight bytes/token (paged): "
+              f"lockstep={mb_rows[False]:.0f} "
+              f"module-batched={mb_rows[True]:.0f} "
+              f"({mb_rows[False] / max(1.0, mb_rows[True]):.2f}x fewer "
+              f"per accumulation window)")
     if len(outs) > 1:
         base = next(iter(outs.values()))
         print(f"greedy transcripts identical across all "

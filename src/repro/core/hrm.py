@@ -330,6 +330,13 @@ def layer_latency(hw: Hardware, wl: LayerWorkload, policy) -> Dict[str, float]:
 
     # ---- FFN ----
     if policy.ffn_on_gpu:
+        # module-based batching (policy.module_groups = G > 1): each
+        # streamed weight span serves G rotation groups' staged tokens
+        # per accumulation window, so per-layer-pass weight traffic
+        # amortizes by 1/G.  The staging-buffer memory this buys is
+        # charged in policy.memory_usage, so the search trades the two
+        # on one budget.
+        mg = max(1, int(getattr(policy, "module_groups", 1) or 1))
         if wl.num_experts and wl.bytes_w_expert:
             # expert-granular paging: the shared span streams at (1-r_w)
             # as before, but the routed-expert traffic is *expected
@@ -338,9 +345,9 @@ def layer_latency(hw: Hardware, wl: LayerWorkload, policy) -> Dict[str, float]:
             hit = expert_hit_rate(policy.w_gpu_ratio, wl.num_experts,
                                   wl.popularity)
             w_from_cpu = (wl.bytes_w_shared * (1 - policy.w_gpu_ratio)
-                          + wl.bytes_w_expert * (1 - hit))
+                          + wl.bytes_w_expert * (1 - hit)) / mg
         else:
-            w_from_cpu = wl.bytes_w * (1 - policy.w_gpu_ratio)
+            w_from_cpu = wl.bytes_w * (1 - policy.w_gpu_ratio) / mg
         comm_ctg += w_from_cpu
         t_ffn = max(time_comp(wl.flops_ffn + wl.flops_proj, gpu.p_peak),
                     time_comm(wl.bytes_w, gpu.b_peak))

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -332,6 +332,17 @@ def transfer_plan(pages_per_layer: int, n_ubs: int) -> List[List[int]]:
     for p in range(pages_per_layer):
         groups[p * n_ubs // pages_per_layer].append(p)
     return groups
+
+
+def window_plan(n_items: int, n_ubs: int,
+                positions: Sequence[int]) -> List[int]:
+    """Module-batched drain schedule: the union of the transfer_plan
+    groups for every rotation position in one accumulation window —
+    prefetch admitted during a window may drain through all of the
+    window's interleave slots, not just one group's.  `positions` are
+    rotation indices (taken mod n_ubs); returns sorted item ids."""
+    plan = transfer_plan(n_items, n_ubs)
+    return sorted({i for p in positions for i in plan[p % n_ubs]})
 
 
 @dataclass

@@ -26,6 +26,12 @@ class Policy:
     ffn_on_gpu: bool         # F_g
     w_gpu_ratio: float       # r_w — weights resident on GPU
     kv_gpu_ratio: float      # r_c — KV cache resident on GPU
+    # module-based batching: rotation groups accumulated per expert-phase
+    # window (1 = lockstep attention/FFN, the classic CGOPipe schedule).
+    # Each streamed weight span then serves G groups' staged tokens, so
+    # the HRM weight-traffic term amortizes by 1/G at the cost of a
+    # G-deep routed-token staging buffer (memory_usage charges it).
+    module_groups: int = 1
 
     @property
     def num_ubs(self) -> int:
@@ -71,6 +77,13 @@ def memory_usage(cfg: ModelConfig, wl: Workload, pol: Policy,
            + pol.kv_gpu_ratio * kv_total
            + 2 * (1 - pol.w_gpu_ratio) * W_layer       # 2x page buffer (A.1)
            + 8 * act)                                  # in-flight activations
+    mg = max(1, int(getattr(pol, "module_groups", 1) or 1))
+    if mg > 1:
+        # module-based batching: the routed-token staging buffer holds
+        # every group's top-k expanded activations for the layer being
+        # executed (gather input + scatter output, hence the 2×)
+        gpu += 2 * mg * pol.ubatch * max(cfg.top_k, 1) * cfg.d_model \
+            * dtype_bytes
     if pol.attn_on_gpu:
         gpu += (1 - pol.kv_gpu_ratio) * kv_total / max(cfg.num_layers, 1) * 2
     cpu = ((1 - pol.w_gpu_ratio) * W_total
@@ -142,7 +155,8 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
            mult_grid=(1, 2, 4, 8, 15, 16, 26, 32, 61, 64, 92, 128, 256),
            ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0),
            expert_popularity=None, kv_paged: bool = False,
-           block_tokens: Optional[int] = None) -> Dict:
+           block_tokens: Optional[int] = None,
+           module_groups_grid=(1,)) -> Dict:
     """Exact enumeration over the 6-tuple.  Returns the best feasible
     policy and its estimate; also the best with attention forced to each
     device (for the §6.3-style case study).
@@ -157,7 +171,14 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
     an arena of r_c × total blocks serves ~min(1, r_c·num_ubs) of each
     step's touches from device, so smaller r_c stays feasible at the
     same latency and the freed memory can buy r_w — the search trades
-    the two on one budget."""
+    the two on one budget.
+
+    ``module_groups_grid`` widens the search over module-based batching
+    (decoupled attention/expert phases, MoE-Gen direction): G > 1
+    amortizes the weight-traffic term by 1/G at the cost of a staging
+    buffer (memory_usage).  The default grid (1,) keeps the classic
+    lockstep search — opt in with e.g. ``module_groups_grid=(1, 2, 4)``;
+    G is capped at num_ubs (there must be G groups to accumulate)."""
     gpu_cap = hw.level("gpu").capacity
     cpu_cap = hw.level("cpu").capacity
     best: Optional[Dict] = None
@@ -168,21 +189,26 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
         N = ub * mult
         for rw in (ratio_grid if fg else (0.0,)):
             for rc in (ratio_grid if ag else (0.0,)):
-                pol = Policy(N, ub, ag, fg, rw, rc)
-                mem = memory_usage(cfg, wl, pol, dtype_bytes)
-                if mem["gpu"] > gpu_cap or mem["cpu"] > cpu_cap:
-                    continue
-                est = estimate(cfg, hw, wl, pol, dtype_bytes,
-                               expert_popularity=expert_popularity,
-                               kv_paged=kv_paged, block_tokens=block_tokens)
-                cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
-                        "mem_cpu": mem["cpu"]}
-                if best is None or cand["throughput"] > best["throughput"]:
-                    best = cand
-                key = int(ag)
-                if (best_by_ag[key] is None
-                        or cand["throughput"] > best_by_ag[key]["throughput"]):
-                    best_by_ag[key] = cand
+                for mg in (module_groups_grid if fg else (1,)):
+                    if mg > max(1, N // ub):
+                        continue
+                    pol = Policy(N, ub, ag, fg, rw, rc, module_groups=mg)
+                    mem = memory_usage(cfg, wl, pol, dtype_bytes)
+                    if mem["gpu"] > gpu_cap or mem["cpu"] > cpu_cap:
+                        continue
+                    est = estimate(cfg, hw, wl, pol, dtype_bytes,
+                                   expert_popularity=expert_popularity,
+                                   kv_paged=kv_paged,
+                                   block_tokens=block_tokens)
+                    cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
+                            "mem_cpu": mem["cpu"]}
+                    if best is None or cand["throughput"] > best["throughput"]:
+                        best = cand
+                    key = int(ag)
+                    if (best_by_ag[key] is None
+                            or cand["throughput"]
+                            > best_by_ag[key]["throughput"]):
+                        best_by_ag[key] = cand
     if best is None:
         raise RuntimeError("no feasible policy (model too large for CPU+GPU)")
     return {"best": best, "best_gpu_attn": best_by_ag[1],

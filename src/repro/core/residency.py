@@ -60,6 +60,12 @@ class ResidencyCounters:
     evictions: int = 0
     refusals: int = 0        # admission declined (pinned/hotter cache)
     h2d_bytes: int = 0       # expert-span H2D traffic booked
+    # what G separate per-group bookings would have charged: observe()
+    # adds its own misses (lockstep IS per-group), observe_window() adds
+    # the per-group miss count before the union dedup — the ratio
+    # lockstep_misses / misses is the measured module-batching
+    # amortization factor (weight_traffic()["module_groups_effective"])
+    lockstep_misses: int = 0
 
     @property
     def fetches(self) -> int:
@@ -169,6 +175,44 @@ class ExpertResidency:
                else self.slot_of >= 0)
         missed: List[Pair] = []
         for l, e in zip(*np.nonzero(activated)):
+            if res[l, e]:
+                self.counters.hits += 1
+            else:
+                self.counters.misses += 1
+                self.counters.h2d_bytes += self.span_bytes
+                missed.append((int(l), int(e)))
+        self.counters.lockstep_misses += len(missed)
+        missed.sort(key=lambda p: -self.popularity[p])
+        return missed
+
+    def observe_window(self, activated: np.ndarray,
+                       token_counts: Optional[np.ndarray] = None,
+                       resident_mask: Optional[np.ndarray] = None
+                       ) -> List[Pair]:
+        """Book one module-batched accumulation window: `activated` is
+        (G, L, E) — the G rotation groups that shared this forward step.
+        An expert span streams at most ONCE per window regardless of how
+        many groups routed to it, so hits/misses (and inline H2D bytes)
+        are charged on the per-window UNION; ``lockstep_misses`` records
+        what G separate ``observe`` calls would have charged, making the
+        amortization measurable.  The popularity EWMA takes one update
+        from the summed token weights (the window is one scheduling
+        event, not G), and the returned admission candidates are the
+        union misses hottest-first."""
+        activated = np.asarray(activated, bool)
+        assert activated.ndim == 3, "observe_window wants (G, L, E)"
+        w = (np.asarray(token_counts, np.float64).sum(axis=0)
+             if token_counts is not None
+             else activated.astype(np.float64).sum(axis=0))
+        denom = np.maximum(w.sum(axis=1, keepdims=True), 1.0)
+        self.popularity += self.alpha * (w / denom - self.popularity)
+
+        res = (np.asarray(resident_mask, bool) if resident_mask is not None
+               else self.slot_of >= 0)
+        self.counters.lockstep_misses += int((activated & ~res[None]).sum())
+        union = activated.any(axis=0)
+        missed: List[Pair] = []
+        for l, e in zip(*np.nonzero(union)):
             if res[l, e]:
                 self.counters.hits += 1
             else:

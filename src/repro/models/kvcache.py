@@ -372,6 +372,40 @@ def insert_slot_span(cache: Dict, single: Dict, row, start,
 
 
 # ---------------------------------------------------------------------------
+# Window composition (module-based batching).  A decode *window* runs G
+# rotation groups through one combined forward: the engine concatenates
+# the groups' slot-pool caches on the batch axis, dispatches a (G·B)-row
+# decode chunk, and splits the result back per group.  Batch is axis 0
+# for "pos" and axis 1 for every other leaf (after the layer-stack axis),
+# exactly the slot-pool convention above.  Paged-KV groups must NOT pass
+# through these helpers (their arena leaves have no batch axis) — the
+# engine composes the shared arena once with a multi-row page table and
+# strips it before splitting.
+# ---------------------------------------------------------------------------
+
+def _batch_axis(path) -> int:
+    return 0 if path and getattr(path[-1], "key", None) == "pos" else 1
+
+
+def concat_slot_caches(caches):
+    """Concatenate per-group slot caches batch-wise into one window cache
+    (group-major: window row g*B + b is group g's slot b)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, *leaves: jnp.concatenate(leaves, axis=_batch_axis(path)),
+        *caches)
+
+
+def split_slot_cache(cache: Dict, n: int):
+    """Inverse of `concat_slot_caches`: split a window cache back into
+    `n` equal per-group slot caches."""
+    splits = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jnp.split(leaf, n, axis=_batch_axis(path)), cache)
+    return [jax.tree.map(lambda s: s[g], splits,
+                         is_leaf=lambda x: isinstance(x, list))
+            for g in range(n)]
+
+
+# ---------------------------------------------------------------------------
 # Ring-buffer writes.  All write helpers operate on a *single layer slice*
 # (no leading stack dim) — model.py maps them over the stack inside scan.
 # ---------------------------------------------------------------------------

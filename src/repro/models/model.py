@@ -96,14 +96,21 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p: Dict, x, *,
                 positions, cache: Optional[Dict], mode: str,
                 pos: Optional[jax.Array], enc_out: Optional[jax.Array],
                 xattn_cache: Optional[Dict], policy: Optional[ExecPolicy],
-                causal: bool = True, expert_fetch=None):
+                causal: bool = True, expert_fetch=None,
+                token_groups: Optional[int] = None):
     """Returns (x, new_cache, new_xattn_cache, aux_loss, expert_counts).
 
     With ``expert_fetch`` set (expert-granular paged weights), the MoE FFN
     runs the two-phase step: router first, then a gather of only the
     activated experts' page spans; ``expert_counts`` (E,) reports the
     routing so the host-side residency cache can learn popularity and
-    account hits/misses.  Otherwise expert_counts is None."""
+    account hits/misses.  Otherwise expert_counts is None.
+
+    token_groups=G (module-based batching): the batch concatenates G
+    rotation groups.  Attention/norms are per-row so they are untouched;
+    the MoE FFN stages the G groups' routed tokens into one cross-group
+    buffer so each expert span is read once per window, and expert_counts
+    becomes (G, E)."""
     aux = jnp.float32(0.0)
     ecounts = None
     new_cache, new_x = cache, xattn_cache
@@ -146,9 +153,11 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p: Dict, x, *,
         if spec.moe:
             if expert_fetch is not None:
                 y, aux, ecounts = moe_apply_paged(cfg, p["moe"], h,
-                                                  expert_fetch, policy)
+                                                  expert_fetch, policy,
+                                                  token_groups=token_groups)
             else:
-                y, aux = moe_apply(cfg, p["moe"], h, policy)
+                y, aux = moe_apply(cfg, p["moe"], h, policy,
+                                   token_groups=token_groups)
         else:
             y = dense_ffn(cfg, p["ffn"], h)
         if cfg.post_block_norm:
@@ -167,7 +176,7 @@ def _tree_index(tree, i):
 
 def _run_group(cfg, specs, stacked_p, x, *, n_steps, positions, cache_group,
                mode, pos, enc_out, xattn_group, policy, causal=True,
-               manifests=None, expert_ctx=None):
+               manifests=None, expert_ctx=None, token_groups=None):
     """Scan `n_steps` times over a group of layer specs whose params (and
     caches) are stacked on the leading axis.  When `manifests` maps a
     group key to a PageManifest, that group's xs entry is a page span
@@ -200,7 +209,8 @@ def _run_group(cfg, specs, stacked_p, x, *, n_steps, positions, cache_group,
                 cache=cache_sl.get(key) if has_cache else None, mode=mode,
                 pos=pos, enc_out=enc_out,
                 xattn_cache=xattn_sl if (spec.cross_attn and has_xc) else None,
-                policy=policy, causal=causal, expert_fetch=fetch)
+                policy=policy, causal=causal, expert_fetch=fetch,
+                token_groups=token_groups)
             if nc is not None and has_cache:
                 new_caches[key] = nc
             if nx is not None:
@@ -270,7 +280,8 @@ def encoder_forward(cfg: ModelConfig, params, frames, policy=None):
 
 def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
             frames=None, patches=None, policy: Optional[ExecPolicy] = None,
-            paged_blocks=None, fill_len=None, expert_state=None):
+            paged_blocks=None, fill_len=None, expert_state=None,
+            token_groups=None):
     """tokens: (B,S) int32.  mode: train | prefill | decode | chunk_prefill.
     Returns dict(hidden, cache, aux_loss).  Call `unembed` for logits.
 
@@ -363,7 +374,8 @@ def forward(cfg: ModelConfig, params, tokens, *, cache=None, mode="train",
         positions=positions, cache_group=cache_group,
         mode=run_mode if run_mode in ("decode", "chunk") else "full",
         pos=pos, enc_out=enc_out, xattn_group=xattn_group, policy=policy,
-        manifests=manifests, expert_ctx=expert_ctx)
+        manifests=manifests, expert_ctx=expert_ctx,
+        token_groups=token_groups)
     aux_total += aux
     if new_cache is not None:
         if npc is not None:

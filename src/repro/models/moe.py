@@ -96,6 +96,67 @@ def _bucket(dest, n_buckets: int, cap: int):
     return slot.astype(jnp.int32), keep
 
 
+def stage_bucket(dest, n_buckets: int, cap: int, groups: int = 1):
+    """Cross-group routed-token staging map (module-based batching).
+
+    dest: (N,) int32 bucket ids in [0, n_buckets) or -1, laid out
+    group-major: rotation group g owns the flat positions
+    [g·N/groups, (g+1)·N/groups).  Ranking runs per *(group, bucket)*
+    composite bucket with per-group capacity ``cap``, so each group's
+    keep/drop decisions are exactly what ``_bucket(dest_g, n_buckets,
+    cap)`` would produce on that group's slice alone — the lockstep
+    path's drops, reproduced inside one combined dispatch.  The staged
+    slot is ``g·cap + rank``: groups occupy disjoint spans of the
+    (n_buckets, groups·cap) staging buffer, so tokens of different
+    groups can never mix in one bucket row (conservation is checked by
+    ``stage_conservation_ok`` / the property suite).
+
+    groups=1 degenerates to ``_bucket`` exactly."""
+    N = dest.shape[0]
+    assert N % groups == 0, "flat entries must split evenly over groups"
+    per_g = N // groups
+    g = (jnp.arange(N) // per_g).astype(jnp.int32)
+    gb = jnp.where(dest >= 0, g * n_buckets + dest, -1)
+    rank, keep = _bucket(gb, groups * n_buckets, cap)
+    return (g * cap + rank).astype(jnp.int32), keep
+
+
+def stage_conservation_ok(dest, slot, keep, n_buckets: int, cap: int,
+                          groups: int = 1) -> bool:
+    """Host-side invariant check for a staging index map: every kept
+    entry occupies a unique staged slot inside its own group's span, and
+    the kept count per (group, bucket) is exactly min(bucket size, cap)
+    — i.e. tokens are conserved up to the per-group capacity drops and
+    never cross group boundaries."""
+    import numpy as np
+    dest = np.asarray(dest)
+    slot = np.asarray(slot)
+    keep = np.asarray(keep, bool)
+    N = dest.shape[0]
+    if N % groups:
+        return False
+    per_g = N // groups
+    g = np.arange(N) // per_g
+    if keep[dest < 0].any():
+        return False
+    # kept slots live in their own group's span and are unique per bucket
+    if not ((slot[keep] >= g[keep] * cap)
+            & (slot[keep] < (g[keep] + 1) * cap)).all():
+        return False
+    pairs = set(zip(dest[keep].tolist(), slot[keep].tolist()))
+    if len(pairs) != int(keep.sum()):
+        return False
+    # conservation: per (group, bucket), kept == min(routed, cap)
+    for gg in range(groups):
+        sl = slice(gg * per_g, (gg + 1) * per_g)
+        for b in range(n_buckets):
+            routed = int((dest[sl] == b).sum())
+            kept = int(((dest[sl] == b) & keep[sl]).sum())
+            if kept != min(routed, cap):
+                return False
+    return True
+
+
 def grouped_ffn(cfg: ModelConfig, wi, wo, xbuf, use_kernel: bool = False,
                 wi_scale=None, wo_scale=None):
     """xbuf: (E, C, D); wi: (E, D, 2, F); wo: (E, F, D) -> (E, C, D).
@@ -136,21 +197,29 @@ def moe_dense(cfg: ModelConfig, p: Dict, x) -> Tuple[jax.Array, jax.Array]:
 # ---------------------------------------------------------------------------
 
 def moe_grouped(cfg: ModelConfig, p: Dict, x, *, capacity_factor=None,
-                use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+                use_kernel: bool = False,
+                token_groups: Optional[int] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """token_groups: module-based batching — x concatenates that many
+    rotation groups' tokens (group-major).  Capacity and keep/drop
+    decisions are then computed per group (``stage_bucket``), so every
+    group's output is bit-identical to running it alone, while the
+    expert GEMM executes once over the whole staged buffer."""
     T, D = x.shape
     NE, K = cfg.num_experts, cfg.top_k
+    G = token_groups or 1
     cf = capacity_factor or cfg.capacity_factor
-    cap = max(1, int(T * K * cf / NE + 0.999))
+    cap = max(1, int((T // G) * K * cf / NE + 0.999))
 
     w, idx, aux = route(cfg, p["router"], x)
     flat_e = idx.reshape(-1)                                     # (T*K,)
     flat_t = jnp.repeat(jnp.arange(T), K)
     flat_w = w.reshape(-1)
-    slot, keep = _bucket(flat_e, NE, cap)
+    slot, keep = stage_bucket(flat_e, NE, cap, G)
     e_safe = jnp.where(keep, flat_e, 0)
-    s_safe = jnp.where(keep, slot, cap - 1)
+    s_safe = jnp.where(keep, slot, G * cap - 1)
 
-    xbuf = jnp.zeros((NE, cap, D), x.dtype)
+    xbuf = jnp.zeros((NE, G * cap, D), x.dtype)
     xbuf = xbuf.at[e_safe, s_safe].add(
         jnp.where(keep[:, None], x[flat_t], 0).astype(x.dtype))
     ybuf = grouped_ffn(cfg, p["wi"], p["wo"], xbuf, use_kernel,
@@ -331,25 +400,33 @@ def _dense_subset(cfg: ModelConfig, ep: Dict, x, w, idx, sel, n_act):
 
 
 def _grouped_subset(cfg: ModelConfig, ep: Dict, x, w, idx, index_map,
-                    capacity_factor=None, use_kernel: bool = False):
+                    capacity_factor=None, use_kernel: bool = False,
+                    token_groups: Optional[int] = None):
     """Capacity-bucketed grouped compute on a compacted subset.  Capacity
     and keep/drop decisions use the FULL expert count (cfg.num_experts),
-    so drops are identical to ``moe_grouped`` on the full set."""
+    so drops are identical to ``moe_grouped`` on the full set.
+
+    token_groups: module-based batching — x concatenates that many
+    rotation groups' tokens (group-major) and the staging buffer holds a
+    disjoint ``cap``-wide span per (group, expert) (``stage_bucket``):
+    per-group capacity, per-group drops, one grouped GEMM per activated
+    expert over the whole accumulation window."""
     T, D = x.shape
     NE, K = cfg.num_experts, cfg.top_k
     A = ep["wi"].shape[0]
+    G = token_groups or 1
     cf = capacity_factor or cfg.capacity_factor
-    cap = max(1, int(T * K * cf / NE + 0.999))
+    cap = max(1, int((T // G) * K * cf / NE + 0.999))
 
     flat_e = idx.reshape(-1)
     flat_t = jnp.repeat(jnp.arange(T), K)
     flat_w = w.reshape(-1)
     dest = index_map[flat_e]                   # compact slot, always >= 0
-    slot, keep = _bucket(dest, A, cap)
+    slot, keep = stage_bucket(dest, A, cap, G)
     e_safe = jnp.where(keep, dest, 0)
-    s_safe = jnp.where(keep, slot, cap - 1)
+    s_safe = jnp.where(keep, slot, G * cap - 1)
 
-    xbuf = jnp.zeros((A, cap, D), x.dtype)
+    xbuf = jnp.zeros((A, G * cap, D), x.dtype)
     xbuf = xbuf.at[e_safe, s_safe].add(
         jnp.where(keep[:, None], x[flat_t], 0).astype(x.dtype))
     ybuf = grouped_ffn(cfg, ep["wi"], ep["wo"], xbuf, use_kernel,
@@ -360,7 +437,8 @@ def _grouped_subset(cfg: ModelConfig, ep: Dict, x, w, idx, index_map,
 
 
 def moe_paged(cfg: ModelConfig, p: Dict, x, *, fetch_experts,
-              policy=None, max_active: Optional[int] = None
+              policy=None, max_active: Optional[int] = None,
+              token_groups: Optional[int] = None
               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Two-phase MoE step for expert-granular paged weights: run the
     router FIRST, then fetch only the activated experts' page spans
@@ -372,12 +450,28 @@ def moe_paged(cfg: ModelConfig, p: Dict, x, *, fetch_experts,
     to each expert, the residency EWMA's observation).  Numerics match
     moe_dense / moe_grouped on the full expert set (skipped experts
     contribute exactly zero there), so greedy transcripts are
-    bit-identical to whole-layer streaming."""
+    bit-identical to whole-layer streaming.
+
+    token_groups=G (module-based batching): x concatenates G rotation
+    groups' tokens group-major.  The activated set (and the span fetch)
+    then covers the UNION of the groups' routed experts — each streamed
+    span serves every group's staged tokens in one accumulation window —
+    while per-group numerics stay bit-identical to G separate calls
+    (``_dense_subset`` accumulates the extra experts at exactly ±0;
+    ``_grouped_subset`` buckets with per-group capacity).  counts is
+    then (G, E) so the host residency cache can book per-window traffic
+    yet keep per-group router-ahead predictions."""
     T, D = x.shape
     NE, K = cfg.num_experts, cfg.top_k
     A = max_active if max_active is not None else min(NE, T * K)
     w, idx, aux = route(cfg, p["router"], x)
-    counts = jnp.zeros((NE,), jnp.int32).at[idx.reshape(-1)].add(1)
+    flat_e = idx.reshape(-1)
+    if token_groups:
+        G = token_groups
+        g_flat = (jnp.arange(T * K) // (K * (T // G))).astype(jnp.int32)
+        counts = jnp.zeros((G, NE), jnp.int32).at[g_flat, flat_e].add(1)
+    else:
+        counts = jnp.zeros((NE,), jnp.int32).at[flat_e].add(1)
     sel, index_map, n_act = activated_experts(idx, NE, A)
     ep = fetch_experts(sel)
     if "wi_scale" in p:
@@ -386,7 +480,8 @@ def moe_paged(cfg: ModelConfig, p: Dict, x, *, fetch_experts,
         ep = dict(ep, wi_scale=p["wi_scale"][sel], wo_scale=p["wo_scale"][sel])
     if policy is not None and policy.moe_impl == "grouped":
         out = _grouped_subset(cfg, ep, x, w, idx, index_map,
-                              use_kernel=policy.use_kernels)
+                              use_kernel=policy.use_kernels,
+                              token_groups=token_groups)
     else:
         out = _dense_subset(cfg, ep, x, w, idx, sel, n_act)
     if cfg.num_shared_experts:
@@ -395,16 +490,21 @@ def moe_paged(cfg: ModelConfig, p: Dict, x, *, fetch_experts,
 
 
 def moe_apply_paged(cfg: ModelConfig, p: Dict, x3, fetch_experts,
-                    policy=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                    policy=None, token_groups: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(B, S, D) wrapper around moe_paged (the expert-granular analogue of
-    moe_apply)."""
+    moe_apply).  With token_groups, B must be G·ubatch (decode windows)
+    so the flat group-major layout holds."""
     B, S, D = x3.shape
     out, aux, counts = moe_paged(cfg, p, x3.reshape(B * S, D),
-                                 fetch_experts=fetch_experts, policy=policy)
+                                 fetch_experts=fetch_experts, policy=policy,
+                                 token_groups=token_groups)
     return out.reshape(B, S, D), aux, counts
 
 
-def moe_apply(cfg: ModelConfig, p: Dict, x3, policy=None) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(cfg: ModelConfig, p: Dict, x3, policy=None,
+              token_groups: Optional[int] = None
+              ) -> Tuple[jax.Array, jax.Array]:
     """Dispatch on the execution policy. x3: (B, S, D)."""
     B, S, D = x3.shape
     if policy is not None and policy.moe_fn is not None:
@@ -412,7 +512,8 @@ def moe_apply(cfg: ModelConfig, p: Dict, x3, policy=None) -> Tuple[jax.Array, ja
         return out, aux
     x = x3.reshape(B * S, D)
     if policy is not None and policy.moe_impl == "grouped":
-        out, aux = moe_grouped(cfg, p, x, use_kernel=policy.use_kernels)
+        out, aux = moe_grouped(cfg, p, x, use_kernel=policy.use_kernels,
+                               token_groups=token_groups)
     else:
         out, aux = moe_dense(cfg, p, x)
     return out.reshape(B, S, D), aux

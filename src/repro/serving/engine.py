@@ -64,8 +64,20 @@ drained in ``paging.transfer_plan`` slices so the H2D work rides
 alongside every rotation position's compute.  ``weight_traffic()``
 reports the accounted bytes + hit/miss counters.
 
-See DESIGN.md for the slot pool + admission walkthrough and the paged
-weights / expert residency section.
+``module_batch=True`` decouples the attention and expert phases
+(module-based batching, the MoE-Gen direction): ``module_groups``
+rotation groups decode through ONE combined dispatch per accumulation
+window — attention + router run for every group's rows back-to-back,
+the MoE layers stage all groups' routed tokens into per-(layer, expert)
+buckets, and each activated expert's span streams exactly once per
+window (``core.residency.observe_window`` books hits/misses per-window,
+not per-group).  Greedy transcripts stay bit-identical to the lockstep
+schedule; ``weight_traffic()`` reports the per-phase breakdown and the
+measured amortization factor.
+
+See DESIGN.md for the slot pool + admission walkthrough, the paged
+weights / expert residency section, and §7 for the two-phase
+module-batched schedule.
 """
 from __future__ import annotations
 
@@ -122,6 +134,18 @@ class EngineConfig:
     kv_prefetch: bool = True          # stream the next rotation group's
                                       # spilled blocks back in
                                       # paging.transfer_plan slices
+    # ------------------------------------ module-based batching (MoE-Gen)
+    module_batch: bool = False        # decoupled attention/expert phases:
+    # decode `module_groups` rotation groups through ONE combined dispatch
+    # per accumulation window — attention/router run per row as before,
+    # the MoE layers stage every group's routed tokens against a single
+    # expert-span read per layer step, so streamed weight bytes amortize
+    # over the window instead of one micro-batch
+    module_groups: Optional[int] = None   # groups per window (default: all
+                                      # num_ubs; capped at num_ubs)
+    module_stage_tokens: Optional[int] = None  # staging-buffer row budget:
+    # when G·ubatch would exceed it the window shrinks toward lockstep
+    # (capacity overflow never drops tokens)
 
 
 class _SlotGroup:
@@ -277,6 +301,29 @@ class Engine:
             cfg, policy, paged_blocks=self.paged_blocks,
             temperature=ecfg.temperature, eos_id=ecfg.eos_id, chunk=chunk),
             donate_argnums=(1,))
+        # ------------------------------ module-based batching windows
+        self._mg = 1
+        self._decode_window_fn = None
+        if ecfg.module_batch:
+            mg = ecfg.module_groups or ecfg.num_ubs
+            mg = max(1, min(mg, ecfg.num_ubs))
+            if ecfg.module_stage_tokens is not None:
+                # the staging buffer bounds how many groups' routed tokens
+                # accumulate per window; overflow shrinks the window
+                # toward lockstep instead of dropping tokens
+                mg = max(1, min(mg, ecfg.module_stage_tokens // ecfg.ubatch))
+            self._mg = mg
+            if mg > 1:
+                self._decode_window_fn = jax.jit(
+                    serve_steps.make_decode_chunk(
+                        cfg, policy, paged_blocks=self.paged_blocks,
+                        temperature=ecfg.temperature, eos_id=ecfg.eos_id,
+                        chunk=chunk, token_groups=mg),
+                    donate_argnums=(1,))
+        # continuous rotation order, windowed: full windows run combined,
+        # the remainder groups fall back to lockstep individually
+        self._windows = [list(range(i, min(i + self._mg, ecfg.num_ubs)))
+                         for i in range(0, ecfg.num_ubs, self._mg)]
         self._insert = jax.jit(kvcache.insert_slot, donate_argnums=(0,))
         # the persistent slot pool: allocated once, recycled per slot
         self.groups: List[_SlotGroup] = []
@@ -380,24 +427,41 @@ class Engine:
         return {k: (r.slot_of >= 0).copy()
                 for k, r in self.residency.items()}
 
-    def _account_counts(self, counts, holder=None, snap=None) -> None:
+    def _account_counts(self, counts, holder=None, snap=None,
+                        holders=None) -> None:
         """Book a call's expert activation counts ({key: (..., P, E)}):
         per forward pass, hits/misses against the residency snapshot the
         pass actually read, then demand-admit the missed spans — hottest
         first, so the miss stream doubles as cache fill.  Updates
         `holder.pred` with the last pass's gating (the router-ahead
-        prediction for that group's next chunk)."""
+        prediction for that group's next chunk).
+
+        With ``holders`` (a module-batched window) the count arrays carry
+        a group axis ({key: (..., P, G, E)}): each forward pass books ONE
+        per-window union observation (``observe_window`` — an expert span
+        streams at most once per window regardless of how many groups
+        routed to it), and each group's holder gets its own last-pass
+        prediction so router-ahead prefetch stays per group."""
         for key, arr in counts.items():
             r = self.residency[key]
             r.begin_chunk()          # refresh the demand-evict victim quota
             a = np.asarray(arr)
-            steps = a.reshape(-1, *a.shape[-2:])          # (n_fwd, P, E)
             mask = snap[key] if snap is not None else None
             want: Dict[Tuple[int, int], bool] = {}
-            for s in steps:
-                for pair in r.observe(s > 0, token_counts=s,
-                                      resident_mask=mask):
-                    want[pair] = True
+            if holders is not None:
+                steps = a.reshape(-1, *a.shape[-3:])      # (n_fwd, P, G, E)
+                for s in steps:
+                    per_g = np.moveaxis(s, 1, 0)          # (G, P, E)
+                    for pair in r.observe_window(per_g > 0,
+                                                 token_counts=per_g,
+                                                 resident_mask=mask):
+                        want[pair] = True
+            else:
+                steps = a.reshape(-1, *a.shape[-2:])      # (n_fwd, P, E)
+                for s in steps:
+                    for pair in r.observe(s > 0, token_counts=s,
+                                          resident_mask=mask):
+                        want[pair] = True
             for l, e in want:
                 # misses fill free slots only; popularity-driven
                 # replacement is the router-ahead prefetch path's job
@@ -406,33 +470,52 @@ class Engine:
                     self._copy_span(key, l, e, slot)
             if holder is not None:
                 holder.pred[key] = steps[-1] > 0
+            if holders is not None:
+                last = steps[-1]                          # (P, G, E)
+                for g, h in enumerate(holders):
+                    h.pred[key] = last[:, g, :] > 0
 
-    def _enqueue_prediction(self, gid: int) -> None:
+    def _next_gids(self, gid) -> List[int]:
+        """The rotation group(s) decoding next: gid+1 for a lockstep
+        group, the following window for a module-batched one."""
+        if isinstance(gid, int):
+            return [(gid + 1) % self.ecfg.num_ubs]
+        g0 = (max(gid) + 1) % self.ecfg.num_ubs
+        return [(g0 + j) % self.ecfg.num_ubs for j in range(len(gid))]
+
+    def _enqueue_prediction(self, gid) -> None:
         """Queue the expert set group ``gid+1``'s router gated on the last
         step of its previous chunk (the request-level analogue of
-        Algorithm 1's j+2 weight lookahead), hottest-first."""
-        nxt = self.groups[(gid + 1) % len(self.groups)]
-        for key, act in nxt.pred.items():
-            r = self.residency[key]
-            pairs = [(int(l), int(e)) for l, e in zip(*np.nonzero(act))
-                     if not r.is_resident(l, e)]
-            pairs.sort(key=lambda p: -r.popularity[p])
-            for p in pairs:
-                t = (key, *p)
-                if t not in self._pending_set:
-                    self._pending.append(t)
-                    self._pending_set.add(t)
+        Algorithm 1's j+2 weight lookahead), hottest-first.  For a
+        module-batched window `gid` is the window's gid list and the
+        predictions of the NEXT window's groups are queued."""
+        for g in self._next_gids(gid):
+            nxt = self.groups[g]
+            for key, act in nxt.pred.items():
+                r = self.residency[key]
+                pairs = [(int(l), int(e)) for l, e in zip(*np.nonzero(act))
+                         if not r.is_resident(l, e)]
+                pairs.sort(key=lambda p: -r.popularity[p])
+                for p in pairs:
+                    t = (key, *p)
+                    if t not in self._pending_set:
+                        self._pending.append(t)
+                        self._pending_set.add(t)
 
-    def _plan_slice(self, pending: List, gid: int) -> Tuple[List, List]:
+    def _plan_slice(self, pending: List, gid) -> Tuple[List, List]:
         """This rotation position's ``paging.transfer_plan`` slice of a
         pending transfer queue (shared by the weight and KV prefetch
-        drains); returns (chosen, keep)."""
-        plan = paging.transfer_plan(len(pending), self.ecfg.num_ubs)
-        take = set(plan[gid % self.ecfg.num_ubs])
+        drains); returns (chosen, keep).  A module-batched window passes
+        its gid list and drains the union of its positions' slices
+        (``paging.window_plan``) — the window spans those interleave
+        slots, so its in-flight compute covers all of them."""
+        positions = [gid] if isinstance(gid, int) else list(gid)
+        take = set(paging.window_plan(len(pending), self.ecfg.num_ubs,
+                                      positions))
         return ([t for i, t in enumerate(pending) if i in take],
                 [t for i, t in enumerate(pending) if i not in take])
 
-    def _drain_prefetch(self, gid: int, *, retry_refused: bool) -> None:
+    def _drain_prefetch(self, gid, *, retry_refused: bool) -> None:
         """Transfer this rotation position's ``paging.transfer_plan``
         slice of the pending prefetch queue into the pool.  While a chunk
         is in flight every resident span is pinned, so only free slots
@@ -463,9 +546,21 @@ class Engine:
         traffic is modeled, not physically moved).  Whole-layer paging
         streams every group's full span each forward pass; the
         expert-granular path streams the shared spans plus the
-        missed/prefetched expert spans booked by core.residency."""
+        missed/prefetched expert spans booked by core.residency.
+
+        Per-phase breakdown (module-based batching observability):
+        ``attn_phase_bytes`` is what the attention phase streams (the
+        shared attention/norm/router spans, once per forward pass — a
+        window's pass serves all its groups), ``expert_phase_bytes`` is
+        the expert-span traffic of the expert phase (misses + prefetch),
+        ``bytes_per_token_amortized`` = total / tokens emitted, and
+        ``module_groups_effective`` is the MEASURED amortization —
+        lockstep-equivalent misses / per-window union misses — so the
+        1/G claim is counter-verified, not inferred."""
         out: Dict[str, float] = {"fwd_passes": self._fwd_passes,
-                                 "tokens_out": self.tokens_out}
+                                 "tokens_out": self.tokens_out,
+                                 "module_batch": self._mg > 1,
+                                 "module_groups": self._mg}
         if self.residency:
             pw = self.paged_blocks
             shared = sum(pw.shared_layer_bytes(k) * pw.manifests[k].num_layers
@@ -474,12 +569,14 @@ class Engine:
                 em.span_bytes * em.num_experts * em.num_layers
                 for em in pw.expert_manifests.values())
             c = [r.counters for r in self.residency.values()]
+            misses = sum(x.misses for x in c)
+            lockstep = sum(x.lockstep_misses for x in c)
             out.update(
                 mode="expert_paged",
                 shared_bytes=shared * self._fwd_passes,
                 expert_bytes=sum(x.h2d_bytes for x in c),
                 hits=sum(x.hits for x in c),
-                misses=sum(x.misses for x in c),
+                misses=misses,
                 prefetches=sum(x.prefetches for x in c),
                 evictions=sum(x.evictions for x in c),
                 hit_rate=(sum(x.hits for x in c)
@@ -487,30 +584,45 @@ class Engine:
                 # what whole-layer streaming would have moved for the
                 # same passes (shared + every expert span every layer)
                 whole_layer_bytes=(shared + expert_full) * self._fwd_passes,
+                module_groups_effective=(lockstep / misses if misses
+                                         else float(self._mg)),
             )
             out["h2d_bytes"] = out["shared_bytes"] + out["expert_bytes"]
+            out["attn_phase_bytes"] = out["shared_bytes"]
+            out["expert_phase_bytes"] = out["expert_bytes"]
         elif self.ecfg.paged:
             _, manifests = self.paged_blocks
             per_pass = sum(
                 m.pages_per_layer * m.page_elems * m.num_layers
                 * np.dtype(m.dtype).itemsize for m in manifests.values())
-            out.update(mode="paged", h2d_bytes=per_pass * self._fwd_passes)
+            out.update(mode="paged", h2d_bytes=per_pass * self._fwd_passes,
+                       attn_phase_bytes=per_pass * self._fwd_passes,
+                       expert_phase_bytes=0,
+                       module_groups_effective=float(self._mg))
         else:
-            out.update(mode="resident", h2d_bytes=0)
+            out.update(mode="resident", h2d_bytes=0, attn_phase_bytes=0,
+                       expert_phase_bytes=0,
+                       module_groups_effective=float(self._mg))
+        out["bytes_per_token_amortized"] = (out["h2d_bytes"]
+                                            / max(1, self.tokens_out))
         return out
 
     # ------------------------------ block-granular paged KV (data+control)
     def _slot_of(self, slot) -> int:
         return slot.gid * self.ecfg.ubatch + slot.row
 
-    def _compose_kv(self, dense_cache: Dict, gid: int) -> Dict:
-        """Assemble the jit-call cache for slot group `gid`: its dense
-        per-slot leaves plus the shared block arena and a fresh device
-        page-table snapshot for the group's rows.  The control plane is
-        host-side (core.blockpool); every dispatch reads the map at call
-        time, mirroring the expert-residency snapshot discipline."""
+    def _compose_kv(self, dense_cache: Dict, gid) -> Dict:
+        """Assemble the jit-call cache for slot group `gid` (or, for a
+        module-batched window, the gid list — the page table then covers
+        every window row, group-major): its dense per-slot leaves plus
+        the shared block arena and a fresh device page-table snapshot for
+        the rows.  The control plane is host-side (core.blockpool); every
+        dispatch reads the map at call time, mirroring the
+        expert-residency snapshot discipline."""
         b = self.ecfg.ubatch
-        pt = self._kv.device_table(range(gid * b, (gid + 1) * b))
+        gids = [gid] if isinstance(gid, int) else list(gid)
+        pt = self._kv.device_table(
+            [g * b + r for g in gids for r in range(b)])
         ptj = jnp.asarray(np.ascontiguousarray(
             np.broadcast_to(pt[None], (self.cfg.num_periods,) + pt.shape)))
         cache = dict(dense_cache)
@@ -574,7 +686,7 @@ class Engine:
                     if self._kv.slot_in_use(idx):
                         self._kv.free_slot(idx)
 
-    def _kv_prepare_group(self, gid: int, chunk: int) -> None:
+    def _kv_prepare_group(self, gid, chunk: int) -> None:
         """Pre-dispatch guard for the paged pool: every decoding row's
         mapped blocks must be device-resident (attention gathers its
         whole history) and the blocks its next `chunk` tokens will write
@@ -583,8 +695,15 @@ class Engine:
         request in the group is preempted (recompute preemption — blocks
         freed, request re-queued with its transcript intact).  Retries
         resume each slot at its first unsatisfied block, so every needed
-        block books exactly one hit or miss per preparation."""
-        slots = self.scheduler.slots[gid]
+        block books exactly one hit or miss per preparation.
+
+        A module-batched window passes its gid list: all of its groups'
+        decoding rows dispatch in ONE combined call, so the protect set —
+        and the residency requirement — spans the whole window (preparing
+        a later group must never spill an earlier one's just-prepared
+        blocks)."""
+        gids = [gid] if isinstance(gid, int) else list(gid)
+        slots = [s for g in gids for s in self.scheduler.slots[g]]
         booked: Dict[int, int] = {}          # slot idx -> blocks satisfied
         while True:
             decoding = [s for s in slots if s.state == SlotState.DECODE]
@@ -612,22 +731,24 @@ class Engine:
             self._kv.free_slot(self._slot_of(victim))
             booked.pop(self._slot_of(victim), None)
 
-    def _kv_enqueue_prefetch(self, gid: int) -> None:
+    def _kv_enqueue_prefetch(self, gid) -> None:
         """Queue the next rotation group's spilled blocks (the KV
         analogue of Algorithm 1's weight lookahead): while group `gid`'s
-        chunk is in flight, group gid+1's history can stream back."""
-        nxt = self.scheduler.slots[(gid + 1) % self.ecfg.num_ubs]
-        for s in nxt:
-            if s.state != SlotState.DECODE:
-                continue
-            idx = self._slot_of(s)
-            for lb in self._kv.host_resident_blocks(idx):
-                t = (idx, lb)
-                if t not in self._kv_pending_set:
-                    self._kv_pending.append(t)
-                    self._kv_pending_set.add(t)
+        chunk is in flight, group gid+1's history can stream back.  A
+        module-batched window passes its gid list and queues the whole
+        next window's spilled blocks."""
+        for g in self._next_gids(gid):
+            for s in self.scheduler.slots[g]:
+                if s.state != SlotState.DECODE:
+                    continue
+                idx = self._slot_of(s)
+                for lb in self._kv.host_resident_blocks(idx):
+                    t = (idx, lb)
+                    if t not in self._kv_pending_set:
+                        self._kv_pending.append(t)
+                        self._kv_pending_set.add(t)
 
-    def _kv_drain_prefetch(self, gid: int) -> None:
+    def _kv_drain_prefetch(self, gid) -> None:
         """Promote this rotation position's ``paging.transfer_plan``
         slice of the pending block queue into free arena blocks (no
         demotions on the prefetch path — mirroring residency's
@@ -642,18 +763,20 @@ class Engine:
             if op is not None:
                 self._kv_exec([op])
 
-    def _kv_note_gather(self, gid: int, steps: int) -> None:
+    def _kv_note_gather(self, gid, steps: int) -> None:
         """Book the decode-path KV gather of one dispatched chunk: the
         paged flash-decode kernels read each row's mapped blocks once per
         decode step (per layer), so gathered bytes scale with the page
         table's mapped-block count — not with ``max_seq`` as the dense
-        ``paged_view`` materialization did."""
+        ``paged_view`` materialization did.  A module-batched window
+        passes its gid list (its dispatch gathers every window row)."""
         b = self.ecfg.ubatch
-        rows = range(gid * b, (gid + 1) * b)
+        gids = [gid] if isinstance(gid, int) else list(gid)
+        rows = [g * b + r for g in gids for r in range(b)]
         mapped = sum(self._kv.n_mapped(r) for r in rows)
         self._kv_gather_steps += steps
         self._kv_gathered_blocks += mapped * steps
-        self._kv_view_blocks += b * self._kv.blocks_per_slot * steps
+        self._kv_view_blocks += len(rows) * self._kv.blocks_per_slot * steps
 
     def kv_traffic(self) -> Dict[str, float]:
         """Device-KV accounting: bytes the KV pool actually occupies on
@@ -736,6 +859,46 @@ class Engine:
             self._account_counts(counts, holder=holder, snap=snap)
             return res
         cache, tok, act2, _, toks, emitted = self._decode_chunk(*args)
+        return (cache, np.array(tok)[:, 0], np.asarray(act2),
+                np.asarray(toks), np.asarray(emitted))
+
+    def _decode_window(self, cache, last_tok, active, rem, *, holders, gids):
+        """Module-batched analogue of ``_decode_group``: ONE combined
+        masked decode chunk over a window of G rotation groups (G·ubatch
+        rows, group-major).  Attention/norms are per-row so every row's
+        numerics match its lockstep dispatch bit-for-bit; the MoE layers
+        stage all groups' routed tokens against a single expert-span read
+        per layer step.  The forward-pass counter therefore advances by
+        `chunk` for the WHOLE window — each shared span (and each missed
+        expert span, booked per-window by ``observe_window``) is charged
+        once per window, not once per group: that is the amortization.
+        Router-ahead prefetch targets the NEXT window's predicted sets
+        and drains through the union of this window's transfer_plan
+        slices."""
+        self.key, k = jax.random.split(self.key)
+        args = (self.params, cache, jnp.asarray(last_tok[:, None]),
+                jnp.asarray(active), jnp.asarray(rem), k)
+        chunk = self.ecfg.decode_chunk if self.ecfg.mode == "continuous" else 1
+        self._fwd_passes += chunk
+        if self.residency:
+            snap = self._resident_snap()
+            for r in self.residency.values():
+                r.pin_resident()
+            cache, tok, act2, _, toks, emitted, counts = \
+                self._decode_window_fn(*args, self._expert_state())
+            prefetching = bool(self.ecfg.prefetch and self.groups)
+            if prefetching:
+                self._enqueue_prediction(gids)
+                self._drain_prefetch(gids, retry_refused=True)
+            res = (cache, np.array(tok)[:, 0], np.asarray(act2),
+                   np.asarray(toks), np.asarray(emitted))   # sync
+            for r in self.residency.values():
+                r.unpin_all()
+            if prefetching:
+                self._drain_prefetch(gids, retry_refused=False)
+            self._account_counts(counts, holders=holders, snap=snap)
+            return res
+        cache, tok, act2, _, toks, emitted = self._decode_window_fn(*args)
         return (cache, np.array(tok)[:, 0], np.asarray(act2),
                 np.asarray(toks), np.asarray(emitted))
 
@@ -896,45 +1059,112 @@ class Engine:
             did = False
         if not (did or self.scheduler.has_live_slots()):
             return False
-        for gid, group in enumerate(self.groups):     # CGOPipe rotation
-            # EOS-aware reservations are optimistic: preempt (recompute)
-            # the youngest rows if this chunk could blow the group budget
-            self.scheduler.enforce_budget(gid, self.ecfg.decode_chunk)
-            if self._kv is not None:
-                self._kv_sweep()          # blocks of budget-preempted slots
-                # fetch/alloc this group's working set (may preempt more)
-                self._kv_prepare_group(gid, self.ecfg.decode_chunk)
-            slots = self.scheduler.slots[gid]
-            active = np.array([s.state == SlotState.DECODE for s in slots])
-            if not active.any():
-                continue
-            rem = np.array(
-                [s.req.remaining if s.state == SlotState.DECODE else 0
-                 for s in slots], np.int32)
-            if self._kv is not None:
-                self._kv_note_gather(gid, self.ecfg.decode_chunk)
-                cache = self._compose_kv(group.cache, gid)
+        for w in self._windows:                       # CGOPipe rotation
+            if len(w) == self._mg and self._mg > 1:
+                self._tick_window_continuous(w)
             else:
-                cache = group.cache
-            cache, group.last_tok, act2, toks, emitted = \
-                self._decode_group(cache, group.last_tok, active, rem,
-                                   holder=group, gid=gid)
-            group.cache = (self._absorb_kv(cache)
-                           if self._kv is not None else cache)
-            self.tokens_out += self._emit(
-                toks, emitted, [s.req if s.state == SlotState.DECODE else None
-                                for s in slots])
-            for i, s in enumerate(slots):
-                if s.state == SlotState.DECODE and not act2[i]:
-                    self._retire_slot(s)
-            if self._kv is not None and self.ecfg.kv_prefetch:
-                # the KV analogue of the router-ahead weight prefetch:
-                # while this group's results land, stream the next
-                # group's spilled blocks back in transfer_plan slices
-                self._kv_enqueue_prefetch(gid)
-                self._kv_drain_prefetch(gid)
+                # lockstep: remainder groups of a non-divisible rotation,
+                # and the whole loop when module batching is off
+                for gid in w:
+                    self._tick_group_continuous(gid)
         self.steps += 1
         return True
+
+    def _tick_group_continuous(self, gid: int) -> None:
+        """One rotation group's decode chunk (the classic lockstep
+        schedule: attention and expert FFN at the same ubatch size)."""
+        group = self.groups[gid]
+        # EOS-aware reservations are optimistic: preempt (recompute)
+        # the youngest rows if this chunk could blow the group budget
+        self.scheduler.enforce_budget(gid, self.ecfg.decode_chunk)
+        if self._kv is not None:
+            self._kv_sweep()              # blocks of budget-preempted slots
+            # fetch/alloc this group's working set (may preempt more)
+            self._kv_prepare_group(gid, self.ecfg.decode_chunk)
+        slots = self.scheduler.slots[gid]
+        active = np.array([s.state == SlotState.DECODE for s in slots])
+        if not active.any():
+            return
+        rem = np.array(
+            [s.req.remaining if s.state == SlotState.DECODE else 0
+             for s in slots], np.int32)
+        if self._kv is not None:
+            self._kv_note_gather(gid, self.ecfg.decode_chunk)
+            cache = self._compose_kv(group.cache, gid)
+        else:
+            cache = group.cache
+        cache, group.last_tok, act2, toks, emitted = \
+            self._decode_group(cache, group.last_tok, active, rem,
+                               holder=group, gid=gid)
+        group.cache = (self._absorb_kv(cache)
+                       if self._kv is not None else cache)
+        self.tokens_out += self._emit(
+            toks, emitted, [s.req if s.state == SlotState.DECODE else None
+                            for s in slots])
+        for i, s in enumerate(slots):
+            if s.state == SlotState.DECODE and not act2[i]:
+                self._retire_slot(s)
+        if self._kv is not None and self.ecfg.kv_prefetch:
+            # the KV analogue of the router-ahead weight prefetch:
+            # while this group's results land, stream the next
+            # group's spilled blocks back in transfer_plan slices
+            self._kv_enqueue_prefetch(gid)
+            self._kv_drain_prefetch(gid)
+
+    def _tick_window_continuous(self, gids: List[int]) -> None:
+        """One module-batched accumulation window: the attention phase
+        runs all `gids` groups' rows through ONE combined decode dispatch
+        (their slot caches concatenated batch-wise, one shared arena
+        composition with a window-wide page table), the expert phase
+        inside it streams each activated expert's span exactly once for
+        the whole window, and the results are split back per group.  Per
+        request the greedy transcript is bit-identical to the lockstep
+        schedule — rows are independent through attention, and the MoE
+        staging reproduces per-group bucketing exactly."""
+        b = self.ecfg.ubatch
+        for gid in gids:
+            self.scheduler.enforce_budget(gid, self.ecfg.decode_chunk)
+        if self._kv is not None:
+            self._kv_sweep()
+            # the window dispatches combined: the whole window's working
+            # set must be device-resident at once (union protect set)
+            self._kv_prepare_group(gids, self.ecfg.decode_chunk)
+        slot_rows = [self.scheduler.slots[g] for g in gids]
+        active = np.array([s.state == SlotState.DECODE
+                           for slots in slot_rows for s in slots])
+        if not active.any():
+            return
+        rem = np.array(
+            [s.req.remaining if s.state == SlotState.DECODE else 0
+             for slots in slot_rows for s in slots], np.int32)
+        last = np.concatenate([self.groups[g].last_tok for g in gids])
+        dense = kvcache.concat_slot_caches(
+            [self.groups[g].cache for g in gids])
+        if self._kv is not None:
+            self._kv_note_gather(gids, self.ecfg.decode_chunk)
+            cache = self._compose_kv(dense, gids)
+        else:
+            cache = dense
+        cache, last2, act2, toks, emitted = self._decode_window(
+            cache, last, active, rem,
+            holders=[self.groups[g] for g in gids], gids=gids)
+        dense_out = self._absorb_kv(cache) if self._kv is not None else cache
+        for j, (g, part) in enumerate(zip(
+                gids, kvcache.split_slot_cache(dense_out, len(gids)))):
+            self.groups[g].cache = part
+            self.groups[g].last_tok = last2[j * b:(j + 1) * b]
+            slots = slot_rows[j]
+            sl = slice(j * b, (j + 1) * b)
+            self.tokens_out += self._emit(
+                toks[:, sl], emitted[:, sl],
+                [s.req if s.state == SlotState.DECODE else None
+                 for s in slots])
+            for i, s in enumerate(slots):
+                if s.state == SlotState.DECODE and not act2[j * b + i]:
+                    self._retire_slot(s)
+        if self._kv is not None and self.ecfg.kv_prefetch:
+            self._kv_enqueue_prefetch(gids)
+            self._kv_drain_prefetch(gids)
 
     # ----------------------------------------------------- static mode
     def _admit_static(self):
@@ -1009,11 +1239,97 @@ class Engine:
             self._kv_exec(ops)
             assert ok, "static micro-batch exceeds the KV arena"
 
+    def _kv_prepare_window_static(self, window) -> bool:
+        """Window analogue of `_kv_prepare_static` with a union protect
+        set (preparing a later batch must not spill an earlier one's
+        blocks).  The arena floor only guarantees ONE micro-batch fits,
+        so this may fail — returns False and the caller falls back to
+        lockstep (static mode never preempts)."""
+        mu = self.ecfg.ubatch
+        protect = [ab.gid * mu + i
+                   for ab, active, _ in window
+                   for i in range(len(ab.requests)) if active[i]]
+        for ab, active, _ in window:
+            for i, r in enumerate(ab.requests):
+                if not active[i]:
+                    continue
+                ops, ok, _ = self._kv.ensure_tokens(
+                    ab.gid * mu + i, r.footprint + 1,
+                    self.ecfg.block_tokens, protect)
+                self._kv_exec(ops)
+                if not ok:
+                    return False
+        return True
+
+    def _tick_batch_static(self, ab, active, rem) -> None:
+        """One micro-batch's single-token decode (lockstep)."""
+        mu = self.ecfg.ubatch
+        if self._kv is not None:
+            self._kv_prepare_static(ab, active)
+            self._kv_note_gather(ab.gid, 1)
+            cache = self._compose_kv(ab.cache, ab.gid)
+        else:
+            cache = ab.cache
+        cache, ab.last_tokens, act2, toks, emitted = \
+            self._decode_group(cache, np.asarray(ab.last_tokens),
+                               active, rem, holder=ab)
+        ab.cache = (self._absorb_kv(cache)
+                    if self._kv is not None else cache)
+        row_req = [ab.requests[i] if i < len(ab.requests) else None
+                   for i in range(mu)]
+        self.tokens_out += self._emit(toks, emitted, row_req)
+        for i, r in enumerate(ab.requests):
+            if active[i] and not act2[i]:
+                r.done = True
+        if all(r.done for r in ab.requests):
+            self._release_static(ab)
+
+    def _tick_window_static(self, window) -> bool:
+        """One combined single-token dispatch over `_mg` static
+        micro-batches (module-based batching in static mode).  With
+        paged KV the union working set must fit the arena at once; if it
+        does not, returns False and the caller runs the window's batches
+        lockstep instead."""
+        mu = self.ecfg.ubatch
+        abs_ = [ab for ab, _, _ in window]
+        if self._kv is not None:
+            if not self._kv_prepare_window_static(window):
+                return False
+            for ab in abs_:
+                self._kv_note_gather(ab.gid, 1)
+            dense = kvcache.concat_slot_caches([ab.cache for ab in abs_])
+            cache = self._compose_kv(dense, [ab.gid for ab in abs_])
+        else:
+            cache = kvcache.concat_slot_caches([ab.cache for ab in abs_])
+        active = np.concatenate([a for _, a, _ in window])
+        rem = np.concatenate([r for _, _, r in window])
+        last = np.concatenate([np.asarray(ab.last_tokens) for ab in abs_])
+        cache, last2, act2, toks, emitted = self._decode_window(
+            cache, last, active, rem, holders=abs_,
+            gids=[ab.gid for ab in abs_])
+        dense_out = self._absorb_kv(cache) if self._kv is not None else cache
+        for j, (ab, part) in enumerate(zip(
+                abs_, kvcache.split_slot_cache(dense_out, len(abs_)))):
+            ab.cache = part
+            ab.last_tokens = last2[j * mu:(j + 1) * mu]
+            sl = slice(j * mu, (j + 1) * mu)
+            row_req = [ab.requests[i] if i < len(ab.requests) else None
+                       for i in range(mu)]
+            self.tokens_out += self._emit(toks[:, sl], emitted[:, sl],
+                                          row_req)
+            for i, r in enumerate(ab.requests):
+                if window[j][1][i] and not act2[j * mu + i]:
+                    r.done = True
+            if all(r.done for r in ab.requests):
+                self._release_static(ab)
+        return True
+
     def _step_static(self) -> bool:
         self._admit_static()
         if not self.active:
             return False
         mu = self.ecfg.ubatch
+        work = []
         for ab in list(self.active):  # rotation: ub_0, ub_1, ... (Alg. 1)
             active = np.zeros((mu,), bool)
             rem = np.zeros((mu,), np.int32)
@@ -1024,24 +1340,15 @@ class Engine:
             if not active.any():          # e.g. every quota met at prefill
                 self._release_static(ab)
                 continue
-            if self._kv is not None:
-                self._kv_prepare_static(ab, active)
-                self._kv_note_gather(ab.gid, 1)
-                cache = self._compose_kv(ab.cache, ab.gid)
+            work.append((ab, active, rem))
+        i = 0
+        while i < len(work):
+            window = work[i:i + self._mg]
+            if self._mg > 1 and len(window) == self._mg \
+                    and self._tick_window_static(window):
+                i += self._mg
             else:
-                cache = ab.cache
-            cache, ab.last_tokens, act2, toks, emitted = \
-                self._decode_group(cache, np.asarray(ab.last_tokens),
-                                   active, rem, holder=ab)
-            ab.cache = (self._absorb_kv(cache)
-                        if self._kv is not None else cache)
-            row_req = [ab.requests[i] if i < len(ab.requests) else None
-                       for i in range(mu)]
-            self.tokens_out += self._emit(toks, emitted, row_req)
-            for i, r in enumerate(ab.requests):
-                if active[i] and not act2[i]:
-                    r.done = True
-            if all(r.done for r in ab.requests):
-                self._release_static(ab)
+                self._tick_batch_static(*work[i])
+                i += 1
         self.steps += 1
         return True

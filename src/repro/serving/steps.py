@@ -136,7 +136,8 @@ def make_serve_step(cfg: ModelConfig,
 
 def make_decode_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
                       *, paged_blocks=None, temperature: float = 0.0,
-                      eos_id: int = 1, chunk: int = 8) -> Callable:
+                      eos_id: int = 1, chunk: int = 8,
+                      token_groups: Optional[int] = None) -> Callable:
     """Masked multi-token decode for the slot-pool engine: `chunk` decode
     steps under one ``lax.scan`` so Python/dispatch overhead is amortized
     between admission checks, with a per-row *active* mask so drained /
@@ -160,6 +161,11 @@ def make_decode_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
     ``counts`` output ({key: (chunk, n_steps, E)} — per inner step, so
     the host accounting books each step's distinct activations against
     the snapshot it actually read).
+
+    token_groups=G (module-based batching): B is G·ubatch — the engine
+    concatenates G rotation groups' slot caches and the MoE FFN stages
+    all G groups' routed tokens against one expert-span read per layer
+    step.  counts then gains a group axis: {key: (chunk, n_steps, G, E)}.
     """
 
     expert = _expert_granular(paged_blocks)
@@ -171,7 +177,8 @@ def make_decode_chunk(cfg: ModelConfig, policy: Optional[ExecPolicy] = None,
             pos0 = cache["pos"]
             out = forward(cfg, params, tok, cache=cache, mode="decode",
                           policy=policy, paged_blocks=paged_blocks,
-                          expert_state=expert_state)
+                          expert_state=expert_state,
+                          token_groups=token_groups)
             logits = unembed(cfg, params, out["hidden"][:, -1])
             key, sub = jax.random.split(key)
             nxt = sample(logits, sub, temperature=temperature)

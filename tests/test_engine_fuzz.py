@@ -6,7 +6,10 @@ admission at several prefill-chunk widths, EOS-aware (EWMA)
 reservations with recompute preemption under a tight budget, and (on
 the MoE config) the paged weight layouts: whole-layer streaming and
 expert-granular residency in hit-heavy / miss-heavy / prefetch-off
-regimes.  A small instance runs in the fast CI subset; the wide sweep
+regimes, plus module-based batching (decoupled attention/expert phases
+accumulating num_ubs rotation groups per expert-weight stream) in every
+combination — continuous, static, overlap, kv-paged, expert-paged, and
+the staging-capacity fallback.  A small instance runs in the fast CI subset; the wide sweep
 (more seeds, chunk sizes 1/4/8, early-EOS round, paged sweeps) carries
 the `slow` marker."""
 import dataclasses
@@ -63,6 +66,7 @@ def test_cross_mode_transcripts_identical_fast(setup):
         "static": dict(mode="static"),
         "continuous": dict(decode_chunk=4),
         "overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4),
+        "module": dict(decode_chunk=4, module_batch=True),
     })
 
 
@@ -96,6 +100,9 @@ def test_paged_expert_transcripts_identical_fast(moe_setup):
         "paged_layer": dict(decode_chunk=4, paged=True, page_elems=4096),
         "expert_tight": dict(decode_chunk=4, expert_paged=True,
                              page_elems=4096, w_gpu_ratio=0.25),
+        "expert_module": dict(decode_chunk=4, expert_paged=True,
+                              page_elems=4096, w_gpu_ratio=0.25,
+                              module_batch=True),
     })
 
 
@@ -125,6 +132,15 @@ def test_paged_expert_transcripts_identical_sweep(moe_setup, seed):
         "expert_ewma": dict(decode_chunk=4, expert_paged=True,
                             page_elems=4096, w_gpu_ratio=0.25,
                             reserve_mode="ewma", cache_tokens=100),
+        "expert_module": dict(decode_chunk=4, expert_paged=True,
+                              page_elems=4096, w_gpu_ratio=0.5,
+                              module_batch=True),
+        "expert_module_static": dict(mode="static", expert_paged=True,
+                                     page_elems=4096, w_gpu_ratio=0.25,
+                                     module_batch=True),
+        "expert_module_noprefetch": dict(decode_chunk=4, expert_paged=True,
+                                         page_elems=4096, w_gpu_ratio=0.25,
+                                         prefetch=False, module_batch=True),
     })
 
 
@@ -152,6 +168,10 @@ def test_kv_paged_transcripts_identical_sweep(setup, seed):
                         decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.25),
         "kv_noprefetch": dict(decode_chunk=4, kv_paged=True,
                               kv_gpu_ratio=0.25, kv_prefetch=False),
+        "kv_module": dict(decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.25,
+                          module_batch=True),
+        "kv_module_static": dict(mode="static", kv_paged=True,
+                                 kv_gpu_ratio=0.25, module_batch=True),
     })
 
 
@@ -166,6 +186,10 @@ def test_kv_paged_with_expert_paged(moe_setup):
         "both_paged": dict(decode_chunk=4, expert_paged=True,
                            page_elems=4096, w_gpu_ratio=0.25,
                            kv_paged=True, kv_gpu_ratio=0.25),
+        "both_paged_module": dict(decode_chunk=4, expert_paged=True,
+                                  page_elems=4096, w_gpu_ratio=0.25,
+                                  kv_paged=True, kv_gpu_ratio=0.25,
+                                  module_batch=True),
     })
 
 
@@ -186,6 +210,12 @@ def test_cross_mode_transcripts_identical_sweep(setup, seed):
         "overlap_ewma": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
                              reserve_mode="ewma", cache_tokens=100),
         "kv_spill": dict(decode_chunk=4, kv_paged=True, kv_gpu_ratio=0.25),
+        "module": dict(decode_chunk=4, module_batch=True),
+        "module_overlap": dict(overlap=True, prefill_chunk=8, decode_chunk=4,
+                               module_batch=True),
+        "module_static": dict(mode="static", module_batch=True),
+        "module_stage_cap": dict(decode_chunk=4, module_batch=True,
+                                 module_stage_tokens=3),
     })
     # early-EOS round: pick a token observed mid-transcript and re-run
     # with it as eos_id, so EOS-terminated rows are exercised everywhere
