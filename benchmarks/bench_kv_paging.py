@@ -33,7 +33,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import backend_info, emit
 from repro.configs import get_config
 from repro.models.params import init_params
 from repro.serving.engine import Engine, EngineConfig
@@ -69,8 +69,12 @@ def run(smoke: bool = False, out_path: str = "BENCH_kv.json"):
     for rc in RATIOS:
         variants[f"paged_rc{int(rc * 100)}"] = dict(kv_paged=True,
                                                     kv_gpu_ratio=rc)
+    info = backend_info()
     report = {"config": cfg.name, "block_tokens": BLOCK_TOKENS,
-              "ratios": list(RATIOS), "variants": {}}
+              "ratios": list(RATIOS), **info, "variants": {}}
+    # off-TPU wall rates are labeled as such — never device throughput
+    tok_key = ("tokens_per_s" if not info["interpret"]
+               else "wall_tokens_per_s_not_device_rate")
     outs = {}
     for name, kw in variants.items():
         eng, out, toks, dt = _serve(cfg, params, requests, **kw)
@@ -78,7 +82,7 @@ def run(smoke: bool = False, out_path: str = "BENCH_kv.json"):
         t = eng.kv_traffic()
         row = {
             "tokens": toks,
-            "tokens_per_s": toks / dt,
+            tok_key: toks / dt,
             "device_kv_bytes": int(t["device_kv_bytes"]),
             "kv_bytes_per_token": t["device_kv_bytes"] / max(1, toks),
             "dense_equiv_bytes": int(t["dense_equiv_bytes"]),

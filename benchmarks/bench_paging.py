@@ -38,7 +38,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import backend_info, emit
 from repro.configs import get_config
 from repro.models.params import init_params
 from repro.serving.engine import Engine, EngineConfig
@@ -75,6 +75,9 @@ def run_module_sweep(cfg, params, smoke: bool) -> dict:
                  gen) for _ in range(n_req)]
     sweep = {}
     base_row = None
+    # off-TPU wall rates are labeled as such — never device throughput
+    tok_key = ("tokens_per_s" if not backend_info()["interpret"]
+               else "wall_tokens_per_s_not_device_rate")
     for mg in MODULE_GROUPS_SWEEP:
         eng, out, toks, dt = _serve(
             cfg, params, requests, num_ubs=8,
@@ -83,7 +86,7 @@ def run_module_sweep(cfg, params, smoke: bool) -> dict:
         t = eng.weight_traffic()
         row = {
             "tokens": toks,
-            "tokens_per_s": toks / dt,
+            tok_key: toks / dt,
             "h2d_weight_bytes": int(t["h2d_bytes"]),
             "expert_phase_bytes": int(t["expert_phase_bytes"]),
             "bytes_per_token_amortized": t["bytes_per_token_amortized"],
@@ -130,9 +133,12 @@ def run(smoke: bool = False, out_path: str = "BENCH_paging.json",
         "expert_tight": dict(expert_paged=True, w_gpu_ratio=TIGHT_RW),
         "expert_hit": dict(expert_paged=True, w_gpu_ratio=1.0),
     }
+    info = backend_info()
     report = {"config": cfg.name, "top_k": cfg.top_k,
               "num_experts": cfg.num_experts, "tight_w_gpu_ratio": TIGHT_RW,
-              "page_elems": PAGE_ELEMS, "variants": {}}
+              "page_elems": PAGE_ELEMS, **info, "variants": {}}
+    tok_key = ("tokens_per_s" if not info["interpret"]
+               else "wall_tokens_per_s_not_device_rate")
     outs = {}
     for name, kw in variants.items():
         eng, out, toks, dt = _serve(cfg, params, requests, **kw)
@@ -140,7 +146,7 @@ def run(smoke: bool = False, out_path: str = "BENCH_paging.json",
         t = eng.weight_traffic()
         row = {
             "tokens": toks,
-            "tokens_per_s": toks / dt,
+            tok_key: toks / dt,
             "h2d_weight_bytes": int(t["h2d_bytes"]),
             "h2d_bytes_per_token": t["h2d_bytes"] / max(1, toks),
             "fwd_passes": t["fwd_passes"],

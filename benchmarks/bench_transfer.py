@@ -1,0 +1,152 @@
+"""Real-device transfer + crossover microbench → ``BENCH_transfer.json``.
+
+Two measurements, both feeding measured constants back into the stack:
+
+  * **pinned vs pageable H2D bandwidth** — ``device_put`` from a
+    pinned-host-resident array vs from a pageable numpy array, over a
+    size sweep.  The pinned figure is what ``core.hrm.measured_link_bw``
+    substitutes for the spec-sheet cpu→gpu link term
+    (``with_measured_links`` / ``policy.search(bench_path=...)``), so
+    the roofline and the policy search optimize against *achieved* DMA
+    rate.  On backends without a pinned_host memory space — or with a
+    single memory space at all (this CPU container, where a "transfer"
+    is a memcpy) — the bandwidth fields are recorded as null rather
+    than poisoning the model with memcpy rates.
+
+  * **dense-vs-paged kernel occupancy crossover** — wall time of the
+    compiled paged flash-decode kernel vs the dense-view path over a
+    ring-occupancy sweep.  The paged kernel gathers only mapped blocks;
+    the dense view reads the whole ring but with simpler addressing —
+    on real devices there is an occupancy above which dense wins.  The
+    lowest swept occupancy where dense is faster is recorded as
+    ``crossover_occupancy``; ``kernels.ops.load_paged_crossover`` feeds
+    it to the engine's ``impl='auto'`` resolution.  Off-TPU the kernel
+    only runs under the Pallas interpreter, whose wall time says
+    nothing about device dispatch — the crossover is recorded null and
+    ``auto`` stays always-paged on TPU / dense-ref on CPU.
+
+``--smoke`` shrinks sizes/iters for the nightly CI job, which uploads
+the artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_kernels import _paged_case
+from benchmarks.common import backend_info, emit, time_call
+from repro.core import offload
+from repro.kernels import ops
+
+TRANSFER_MB = (4, 16, 64)
+SMOKE_MB = (1, 4)
+CROSSOVER_OCCUPANCY = (0.125, 0.25, 0.5, 0.75, 1.0)
+
+
+def measure_h2d(sizes_mb, iters=5):
+    """Per-size pinned/pageable H2D timings.  Returns (rows, pinned_bw,
+    pageable_bw) — bandwidths in bytes/s from the largest size (startup
+    latency amortized), or None when the backend can't express the
+    measurement honestly."""
+    info = backend_info()
+    dev = jax.devices()[0]
+    single_memory = info["backend"] == "cpu"
+    pinned_shd = offload.pinned_host_sharding(warn=False)
+    rows = []
+    for mb in sizes_mb:
+        n = mb * (1 << 20)
+        host = np.random.default_rng(0).integers(
+            0, 255, n, np.uint8)
+        t_pageable = time_call(
+            lambda: jax.device_put(host, dev), iters=iters)
+        row = {"mbytes": mb, "pageable_s": t_pageable,
+               "pageable_bytes_per_s": n / t_pageable}
+        if pinned_shd is not None:
+            pinned = jax.device_put(jnp.asarray(host), pinned_shd)
+            jax.block_until_ready(pinned)
+            t_pinned = time_call(
+                lambda: jax.device_put(pinned, dev), iters=iters)
+            row["pinned_s"] = t_pinned
+            row["pinned_bytes_per_s"] = n / t_pinned
+        rows.append(row)
+        emit(f"h2d_{mb}mb", t_pageable * 1e6,
+             f"pageable_gbps={n / t_pageable / 1e9:.2f}"
+             + (f",pinned_gbps={n / row['pinned_s'] / 1e9:.2f}"
+                if "pinned_s" in row else ",pinned=unavailable"))
+    if single_memory:
+        # one memory space: 'H2D' was a memcpy — do not report it as
+        # link bandwidth (hrm.measured_link_bw would swallow it)
+        return rows, None, None
+    big = rows[-1]
+    return (rows, big.get("pinned_bytes_per_s"),
+            big["pageable_bytes_per_s"])
+
+
+def measure_crossover(occupancies, smoke=False):
+    """Dense-view vs paged-kernel wall time over a ring-occupancy sweep.
+    Returns (rows, crossover) — crossover is the lowest occupancy where
+    the dense path wins, None when dense never wins or when the sweep
+    ran under the interpreter (off-TPU: not a device measurement)."""
+    info = backend_info()
+    B, bt, MB = (2, 8, 8) if smoke else (4, 16, 16)
+    Hkv, Dh = 2, 16
+    rng = np.random.default_rng(0)
+    rows, crossover = [], None
+    for occ in occupancies:
+        q, cache, pos, mapped = _paged_case(rng, B, MB, bt, Hkv, Dh,
+                                            occ, jnp.bfloat16)
+        kern_impl = "interpret" if info["interpret"] else "pallas"
+        t_kern = time_call(lambda: ops.paged_gqa_decode(
+            q, cache, pos, scale=Dh ** -0.5, impl=kern_impl))
+        t_dense = time_call(lambda: ops.paged_gqa_decode(
+            q, cache, pos, scale=Dh ** -0.5, impl="ref"))
+        dense_wins = t_dense < t_kern
+        rows.append({"occupancy": occ, "mapped_blocks_per_row": mapped,
+                     "paged_kernel_s": t_kern, "dense_view_s": t_dense,
+                     "dense_wins": bool(dense_wins)})
+        if dense_wins and crossover is None and not info["interpret"]:
+            crossover = occ
+        emit(f"crossover_occ{int(occ * 1000)}", t_kern * 1e6,
+             f"dense_us={t_dense * 1e6:.1f},dense_wins={dense_wins},"
+             f"backend={info['backend']}")
+    return rows, crossover
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_transfer.json"):
+    info = backend_info()
+    sizes = SMOKE_MB if smoke else TRANSFER_MB
+    h2d_rows, bw_pinned, bw_pageable = measure_h2d(
+        sizes, iters=3 if smoke else 5)
+    xo_rows, crossover = measure_crossover(CROSSOVER_OCCUPANCY, smoke)
+    report = {
+        **info,
+        "supports_pinned_host": offload.supports_host_offload(),
+        "h2d": h2d_rows,
+        # null off-device: hrm.measured_link_bw / ops.load_paged_crossover
+        # treat null as "no measurement" and keep their defaults
+        "h2d_pinned_bytes_per_s": bw_pinned,
+        "h2d_pageable_bytes_per_s": bw_pageable,
+        "crossover_sweep": xo_rows,
+        "crossover_occupancy": crossover,
+    }
+    if bw_pinned is not None and bw_pageable is not None:
+        report["accept_pinned_ge_pageable"] = bw_pinned >= bw_pageable
+    emit("transfer_summary", 0.0,
+         f"backend={info['backend']},pinned_bw={bw_pinned},"
+         f"pageable_bw={bw_pageable},crossover={crossover}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk sweep for the nightly CI job")
+    ap.add_argument("--out", default="BENCH_transfer.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

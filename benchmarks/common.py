@@ -22,3 +22,12 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def backend_info() -> dict:
+    """Honesty fields every BENCH_*.json artifact records: which backend
+    produced the numbers, and whether Pallas kernels ran under the
+    interpreter (off-TPU) — interpret-mode wall times validate
+    correctness and byte accounting, never device throughput."""
+    backend = jax.default_backend()
+    return {"backend": backend, "interpret": backend != "tpu"}

@@ -92,6 +92,39 @@ def preset(name: str) -> Hardware:
     return presets[name]
 
 
+def measured_link_bw(path: str = "BENCH_transfer.json"):
+    """Measured host→device bandwidth (bytes/s) from a
+    benchmarks/bench_transfer.py artifact: the pinned-path figure when the
+    backend had a pinned_host space, else the pageable figure.  Returns
+    None when the artifact is absent/malformed or the run was
+    interpret/CPU (bench_transfer records null bandwidths there — a CPU
+    'transfer' is a memcpy and would poison the roofline)."""
+    import json
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    bw = data.get("h2d_pinned_bytes_per_s") or data.get(
+        "h2d_pageable_bytes_per_s")
+    return float(bw) if bw else None
+
+
+def with_measured_links(hw: Hardware, path: str = "BENCH_transfer.json"
+                        ) -> Hardware:
+    """The roofline's cpu→gpu link term replaced by the *measured* H2D
+    bandwidth when a bench_transfer artifact is on disk — the paper's
+    HRM uses spec-sheet constants, but achieved PCIe/DMA rates routinely
+    sit 20–40% under spec and the T_pre/T_dec bounds inherit the error.
+    No artifact → the preset is returned unchanged."""
+    bw = measured_link_bw(path)
+    if bw is None:
+        return hw
+    links = dict(hw.links)
+    links[("cpu", "gpu")] = bw
+    return Hardware(hw.levels, links, name=f"{hw.name}+measured")
+
+
 # ---------------------------------------------------------------------------
 # Roofline math
 # ---------------------------------------------------------------------------

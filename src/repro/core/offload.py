@@ -10,6 +10,7 @@ its timing modeled by core.cgopipe / core.hrm — see DESIGN.md §2.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -30,6 +31,54 @@ def backend_memory_kinds() -> List[str]:
 
 def supports_host_offload() -> bool:
     return "pinned_host" in backend_memory_kinds()
+
+
+class HostOffloadFallbackWarning(UserWarning):
+    """The backend has no addressable pinned_host memory space: host-tier
+    stores fall back to default placement (pageable numpy / device)."""
+
+
+_warned_no_pinned = False
+
+
+def _make_pinned_sharding() -> jax.sharding.Sharding:
+    """Single-device sharding in the pinned_host memory space (split out
+    so tests can monkeypatch it with a plain CPU sharding and drive the
+    pinned code paths on backends without the memory space)."""
+    return jax.sharding.SingleDeviceSharding(jax.devices()[0],
+                                             memory_kind="pinned_host")
+
+
+def pinned_host_sharding(*, warn: bool = True
+                         ) -> Optional[jax.sharding.Sharding]:
+    """Sharding for host-tier staging buffers, or None when the backend
+    has no pinned_host space (one structured warning per process)."""
+    global _warned_no_pinned
+    if supports_host_offload():
+        return _make_pinned_sharding()
+    if warn and not _warned_no_pinned:
+        _warned_no_pinned = True
+        warnings.warn(
+            "backend %r exposes no pinned_host memory space "
+            "(kinds: %s) — host-tier KV blocks and weight pages use "
+            "default placement; H2D transfers will be pageable-rate"
+            % (jax.default_backend(), backend_memory_kinds()),
+            HostOffloadFallbackWarning, stacklevel=2)
+    return None
+
+
+def pinned_put(x):
+    """Place an array in pinned host memory when available; otherwise
+    return it unchanged (default placement, post-warning)."""
+    s = pinned_host_sharding()
+    if s is None:
+        return x
+    return jax.device_put(x, s)
+
+
+def to_device(x):
+    """Stage a (possibly pinned-host) array into device memory."""
+    return jax.device_put(x, jax.devices()[0])
 
 
 @dataclass

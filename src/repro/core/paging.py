@@ -274,16 +274,24 @@ class PagedWeights:
 def pack_block_groups_split(blocks: Dict, page_elems: int = 1 << 20
                             ) -> PagedWeights:
     """Split-pack every period-position group of a model's stacked block
-    params (the expert-granular analogue of ``pack_block_groups``)."""
+    params (the expert-granular analogue of ``pack_block_groups``).
+
+    The packed pools are the engine's *host-side* weight store: they are
+    placed in pinned host memory when the backend exposes the space
+    (core.offload), so the transfer_plan/window_plan slices the serving
+    scan consumes — and the router-gated expert-span gathers — lower to
+    async pinned-DMA copies instead of pageable-rate transfers."""
+    from repro.core import offload
     pages, manifests, epages, emanifests = {}, {}, {}, {}
     for key, group in blocks.items():
         shared, experts, sm = pack_layer_stack_split(group, page_elems)
         L = sm.shared.num_layers
-        pages[key] = shared.reshape(L, sm.shared.pages_per_layer,
-                                    sm.shared.page_elems)
+        pages[key] = offload.pinned_put(
+            shared.reshape(L, sm.shared.pages_per_layer,
+                           sm.shared.page_elems))
         manifests[key] = sm.shared
         if experts is not None:
-            epages[key] = experts
+            epages[key] = offload.pinned_put(experts)
             emanifests[key] = sm.experts
     return PagedWeights(pages, manifests, epages, emanifests)
 
@@ -310,12 +318,15 @@ def pack_block_groups(blocks: Dict, page_elems: int = 1 << 20):
     stacked block params into page pools.  Returns (pages_dict, manifests):
     pages_dict[key] has shape (L, pages_per_layer, page_elems) — sliceable
     by the layer scan — and manifests[key] rebuilds the layer pytree."""
+    from repro.core import offload
     pages_dict, manifests = {}, {}
     for key, group in blocks.items():
         pages, manifest = pack_layer_stack(group, page_elems)
         L = manifest.num_layers
-        pages_dict[key] = pages.reshape(L, manifest.pages_per_layer,
-                                        manifest.page_elems)
+        # host-side page store: pinned placement when available, so the
+        # in-scan page consumption streams at pinned-DMA rate
+        pages_dict[key] = offload.pinned_put(
+            pages.reshape(L, manifest.pages_per_layer, manifest.page_elems))
         manifests[key] = manifest
     return pages_dict, manifests
 

@@ -156,7 +156,8 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
            ratio_grid=(0.0, 0.1, 0.2, 0.25, 0.5, 0.75, 0.9, 1.0),
            expert_popularity=None, kv_paged: bool = False,
            block_tokens: Optional[int] = None,
-           module_groups_grid=(1,)) -> Dict:
+           module_groups_grid=(1,),
+           bench_path: Optional[str] = None) -> Dict:
     """Exact enumeration over the 6-tuple.  Returns the best feasible
     policy and its estimate; also the best with attention forced to each
     device (for the §6.3-style case study).
@@ -179,6 +180,11 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
     buffer (memory_usage).  The default grid (1,) keeps the classic
     lockstep search — opt in with e.g. ``module_groups_grid=(1, 2, 4)``;
     G is capped at num_ubs (there must be G groups to accumulate)."""
+    if bench_path is not None:
+        # swap the spec-sheet cpu↔gpu link for the measured H2D bandwidth
+        # (benchmarks/bench_transfer.py artifact) before enumerating — the
+        # whole search then optimizes against achieved, not nominal, DMA
+        hw = H.with_measured_links(hw, bench_path)
     gpu_cap = hw.level("gpu").capacity
     cpu_cap = hw.level("cpu").capacity
     best: Optional[Dict] = None

@@ -135,6 +135,14 @@ def gqa_decode(q, k, v, valid, *, scale: float, attn_softcap: float = 0.0,
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
         ],
+        # memory-roof-bound by construction: one K + one V read dominates;
+        # the hint keeps XLA's scheduler from mis-costing the dispatch
+        cost_estimate=pl.CostEstimate(
+            flops=2 * B * W * H * (D + Dv),
+            bytes_accessed=B * W * Hkv * (D + Dv)
+            * k.dtype.itemsize + B * H * (D + Dv) * 4,
+            transcendentals=B * W * H,
+        ),
         interpret=interpret,
     )(*inputs)
     return (o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H))

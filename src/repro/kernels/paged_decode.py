@@ -11,6 +11,12 @@ arena slab ``pt[b, lb]`` *before* the kernel body runs — the block DMA is
 issued straight against the physical block, and HBM traffic per step is
 ``mapped_blocks × block_bytes`` instead of ``B × max_seq`` row bytes.
 
+Arena layout (head-major bt-tiling, ``kvcache.arena_block_axis``): K/V
+arrive as ``(Hkv, NB, bt, D)`` and the scale planes as ``(Hkv, NB, bt)``,
+so the per-(block, head) BlockSpec slab is a contiguous ``(bt, D)`` tile
+whose trailing axes map onto (sublane, lane) natively for every block
+size — no transpose sits on the hot path.
+
 Masking invariants (mirrors what ``paged_view`` + ``decode_valid_mask``
 compute on the dense view):
 
@@ -21,6 +27,18 @@ compute on the dense view):
   * within a mapped block, validity is the usual
     ``slot_pos >= 0 & slot_pos <= pos`` ring test, evaluated on the
     block's own (1, bt) ``slot_pos`` slab.
+
+**Fused decode-write epilogue**: passing the fresh decode token
+(``k_new``/``v_new``, already cast to the arena dtype) merges it into
+its target block's tile *in-register* — the tile each grid step computes
+on is bit-identical to what the block would hold after
+``kvcache.write_decode_paged``, so attention over the un-written arena
+equals write-then-attend exactly (including the ring-wrap case, where
+the merge shadows the stale token the scatter would overwrite, and the
+unmapped case, where the scatter goes to the trash block and the gather
+masks it).  The actual arena scatter then runs as part of the same
+compiled step (``kernels.ops.paged_*_decode_fused``), not as a separate
+dispatch before the kernel.
 
 A running (max, sumexp, accumulator) online-softmax triple lives in VMEM
 scratch across the sequential block grid dimension (same structure as
@@ -51,6 +69,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def _flash_decode_cost(B, H, blocks, bt, D, Dv):
+    """pl.CostEstimate for one flash-decode dispatch: the score and value
+    contractions over every gathered ring position, exp per score."""
+    positions = B * blocks * bt
+    return pl.CostEstimate(
+        flops=2 * positions * H * (D + Dv),
+        bytes_accessed=positions * (D + Dv) * 2 + B * H * (D + Dv) * 4,
+        transcendentals=positions * H,
+    )
+
+
 # ---------------------------------------------------------------------------
 # GQA (dense or int8 arena)
 # ---------------------------------------------------------------------------
@@ -58,11 +87,16 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 def _gqa_kernel(pt_ref, pos_ref,                     # scalar prefetch (SMEM)
                 q_ref, k_ref, v_ref, *rest,
                 scale: float, attn_softcap: float, window: int,
-                blocks_w: int, quantized: bool):
+                blocks_w: int, quantized: bool, fused: bool):
+    rest = list(rest)
+    kn_ref = vn_ref = kns_ref = vns_ref = None
+    if fused:
+        kn_ref, vn_ref = rest.pop(0), rest.pop(0)
     if quantized:
-        ks_ref, vs_ref, sp_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
-    else:
-        sp_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
+        ks_ref, vs_ref = rest.pop(0), rest.pop(0)
+        if fused:
+            kns_ref, vns_ref = rest.pop(0), rest.pop(0)
+    sp_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
     b, w = pl.program_id(0), pl.program_id(2)
 
     @pl.when(w == 0)
@@ -73,15 +107,36 @@ def _gqa_kernel(pt_ref, pos_ref,                     # scalar prefetch (SMEM)
 
     pos = pos_ref[b]
     sp = sp_ref[0]                                   # (bt,) this block's ring
+    k = k_ref[0, 0]                                  # (bt, D) arena dtype
+    v = v_ref[0, 0]                                  # (bt, Dv)
+    if quantized:
+        ks = ks_ref[0, 0]                            # (bt,)
+        vs = vs_ref[0, 0]
+    if fused:
+        # merge the fresh token into its target block's tile in-register:
+        # the tile then equals the post-write_decode_paged block exactly
+        # (k_new is pre-cast to the arena dtype), so attention over the
+        # un-written arena is bit-identical to write-then-attend
+        bt = sp.shape[0]
+        i = pos % (blocks_w * bt)
+        hit = (w == i // bt) & (pt_ref[b, w] >= 0)
+        sel = (jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)
+               == i % bt) & hit                      # (bt, 1)
+        k = jnp.where(sel, kn_ref[0, 0][None, :], k)
+        v = jnp.where(sel, vn_ref[0, 0][None, :], v)
+        sp = jnp.where(sel[:, 0], pos, sp)
+        if quantized:
+            ks = jnp.where(sel[:, 0], kns_ref[0, 0], ks)
+            vs = jnp.where(sel[:, 0], vns_ref[0, 0], vs)
     valid = (pt_ref[b, w] >= 0) & (sp >= 0) & (sp <= pos)
     if window:
         valid &= sp > pos - window
 
     q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)           # (bt, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, bt)
+    s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())))         # (G, bt)
     if quantized:
-        s = s * ks_ref[0, :, 0][None, :]
+        s = s * ks[None, :]
     if attn_softcap:
         s = attn_softcap * jnp.tanh(s / attn_softcap)
     s = jnp.where(valid[None, :], s, NEG_INF)
@@ -93,10 +148,9 @@ def _gqa_kernel(pt_ref, pos_ref,                     # scalar prefetch (SMEM)
     corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
     l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1)
     if quantized:
-        p = p * vs_ref[0, :, 0][None, :]
-    v = v_ref[0, :, 0].astype(jnp.float32)           # (bt, Dv)
+        p = p * vs[None, :]
     acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())))              # (G, Dv)
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())))   # (G, Dv)
     # keep the TRUE running max (NEG_INF while nothing valid yet): an
     # all-invalid early block must not clamp the max to 0, or a later
     # block with a negative true max would report m = 0 instead of the
@@ -112,18 +166,25 @@ def _gqa_kernel(pt_ref, pos_ref,                     # scalar prefetch (SMEM)
 
 def paged_gqa_decode(q, k, v, slot_pos, page_table, pos, *, scale: float,
                      attn_softcap: float = 0.0, window: int = 0,
-                     k_scale=None, v_scale=None, interpret: bool = True):
-    """q: (B,H,D); k/v: (NB, bt, Hkv, D*) block arena (last block = trash,
-    never read); slot_pos: (NB, bt) int32; page_table: (B, MB) int32
-    (-1 = unmapped); pos: (B,) int32 query positions.  int8 arenas pass
-    k_scale/v_scale (NB, bt, Hkv) f32.  Returns partials
+                     k_scale=None, v_scale=None,
+                     k_new=None, v_new=None,
+                     k_scale_new=None, v_scale_new=None,
+                     interpret: bool = True):
+    """q: (B,H,D); k/v: (Hkv, NB, bt, D*) head-major block arena (last
+    block = trash, never read); slot_pos: (NB, bt) int32; page_table:
+    (B, MB) int32 (-1 = unmapped); pos: (B,) int32 query positions.  int8
+    arenas pass k_scale/v_scale (Hkv, NB, bt) f32.  The fused decode-write
+    epilogue passes the fresh token k_new/v_new (B, Hkv, D*) — already in
+    the arena dtype — (+ k_scale_new/v_scale_new (B, Hkv) for int8); it is
+    merged into its target block's tile in-register.  Returns partials
     (o_unnorm (B,H,Dv) f32, m (B,H) f32, l (B,H) f32)."""
     B, H, D = q.shape
-    _, bt, Hkv, Dv = v.shape
+    Hkv, _, bt, Dv = v.shape
     MB = page_table.shape[1]
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, D)
     quantized = k_scale is not None
+    fused = k_new is not None
     page_table = page_table.astype(jnp.int32)
     pos = pos.astype(jnp.int32)
 
@@ -133,30 +194,41 @@ def paged_gqa_decode(q, k, v, slot_pos, page_table, pos, *, scale: float,
     def idx_blk(b, h, w, pt, ps):
         # unmapped -> physical block 0, fully masked in-kernel (the trash
         # block at the arena's end is a scatter-only target)
-        return (jnp.maximum(pt[b, w], 0), 0, h, 0)
+        return (h, jnp.maximum(pt[b, w], 0), 0, 0)
 
     def idx_scale(b, h, w, pt, ps):
-        return (jnp.maximum(pt[b, w], 0), 0, h)
+        return (h, jnp.maximum(pt[b, w], 0), 0)
 
     def idx_sp(b, h, w, pt, ps):
         return (jnp.maximum(pt[b, w], 0), 0)
 
+    def idx_new(b, h, w, pt, ps):
+        return (b, h, 0)
+
     in_specs = [
         pl.BlockSpec((1, 1, G, D), idx_q),
-        pl.BlockSpec((1, bt, 1, D), idx_blk),
-        pl.BlockSpec((1, bt, 1, Dv), idx_blk),
+        pl.BlockSpec((1, 1, bt, D), idx_blk),
+        pl.BlockSpec((1, 1, bt, Dv), idx_blk),
     ]
     inputs = [qg, k, v]
+    if fused:
+        in_specs += [pl.BlockSpec((1, 1, D), idx_new),
+                     pl.BlockSpec((1, 1, Dv), idx_new)]
+        inputs += [k_new, v_new]
     if quantized:
-        in_specs += [pl.BlockSpec((1, bt, 1), idx_scale),
-                     pl.BlockSpec((1, bt, 1), idx_scale)]
+        in_specs += [pl.BlockSpec((1, 1, bt), idx_scale),
+                     pl.BlockSpec((1, 1, bt), idx_scale)]
         inputs += [k_scale, v_scale]
+        if fused:
+            in_specs += [pl.BlockSpec((1, 1), lambda b, h, w, pt, ps: (b, h)),
+                         pl.BlockSpec((1, 1), lambda b, h, w, pt, ps: (b, h))]
+            inputs += [k_scale_new, v_scale_new]
     in_specs.append(pl.BlockSpec((1, bt), idx_sp))
     inputs.append(slot_pos)
 
     kern = functools.partial(_gqa_kernel, scale=scale,
                              attn_softcap=attn_softcap, window=window,
-                             blocks_w=MB, quantized=quantized)
+                             blocks_w=MB, quantized=quantized, fused=fused)
     o, m, l = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -179,6 +251,7 @@ def paged_gqa_decode(q, k, v, slot_pos, page_table, pos, *, scale: float,
             jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
             jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
         ),
+        cost_estimate=_flash_decode_cost(B, H, MB, bt, D, Dv),
         interpret=interpret,
     )(page_table, pos, *inputs)
     return o.reshape(B, H, Dv), m.reshape(B, H), l.reshape(B, H)
@@ -189,10 +262,13 @@ def paged_gqa_decode(q, k, v, slot_pos, page_table, pos, *, scale: float,
 # ---------------------------------------------------------------------------
 
 def _mla_kernel(pt_ref, pos_ref,
-                q_ref, ckv_ref, kr_ref, sp_ref,
-                o_ref, m_ref, l_ref,
-                acc, m_s, l_s,
-                *, scale: float, lat: int, blocks_w: int):
+                q_ref, ckv_ref, kr_ref, *rest,
+                scale: float, lat: int, blocks_w: int, fused: bool):
+    rest = list(rest)
+    cn_ref = rn_ref = None
+    if fused:
+        cn_ref, rn_ref = rest.pop(0), rest.pop(0)
+    sp_ref, o_ref, m_ref, l_ref, acc, m_s, l_s = rest
     b, w = pl.program_id(0), pl.program_id(1)
 
     @pl.when(w == 0)
@@ -203,11 +279,23 @@ def _mla_kernel(pt_ref, pos_ref,
 
     pos = pos_ref[b]
     sp = sp_ref[0]
+    ckv = ckv_ref[0]                                 # (bt, lat) arena dtype
+    kr = kr_ref[0]                                   # (bt, dr)
+    if fused:
+        # in-register merge of the fresh latent — see the GQA kernel note
+        bt = sp.shape[0]
+        i = pos % (blocks_w * bt)
+        hit = (w == i // bt) & (pt_ref[b, w] >= 0)
+        sel = (jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)
+               == i % bt) & hit                      # (bt, 1)
+        ckv = jnp.where(sel, cn_ref[0][None, :], ckv)
+        kr = jnp.where(sel, rn_ref[0][None, :], kr)
+        sp = jnp.where(sel[:, 0], pos, sp)
     valid = (pt_ref[b, w] >= 0) & (sp >= 0) & (sp <= pos)
 
     q = q_ref[0].astype(jnp.float32) * scale         # (H, lat + dr)
-    ckv = ckv_ref[0].astype(jnp.float32)             # (bt, lat)
-    kr = kr_ref[0].astype(jnp.float32)               # (bt, dr)
+    ckv = ckv.astype(jnp.float32)
+    kr = kr.astype(jnp.float32)
     # score against concat(ckv, kr) without building the concat: two
     # partial dots over the latent and rope halves
     s = jax.lax.dot_general(q[:, :lat], ckv, (((1,), (1,)), ((), ()))) \
@@ -232,35 +320,48 @@ def _mla_kernel(pt_ref, pos_ref,
 
 
 def paged_mla_decode(qcat, ckv, kr, slot_pos, page_table, pos, *,
-                     scale: float, lat: int, interpret: bool = True):
+                     scale: float, lat: int,
+                     ckv_new=None, kr_new=None, interpret: bool = True):
     """Absorbed MLA decode over the latent block arena.  qcat:
     (B, H, lat + dr) — absorbed latent queries ++ rope queries; ckv:
     (NB, bt, lat); kr: (NB, bt, dr); slot_pos: (NB, bt); page_table:
-    (B, MB); pos: (B,).  The attended value is the latent itself, so the
-    partials come back as (o_unnorm (B,H,lat) f32, m, l)."""
+    (B, MB); pos: (B,).  The fused decode-write epilogue passes the fresh
+    latents ckv_new (B, lat) / kr_new (B, dr) in the arena dtype.  The
+    attended value is the latent itself, so the partials come back as
+    (o_unnorm (B,H,lat) f32, m, l)."""
     B, H, _ = qcat.shape
     _, bt, _ = ckv.shape
     dr = kr.shape[-1]
     MB = page_table.shape[1]
+    fused = ckv_new is not None
     page_table = page_table.astype(jnp.int32)
     pos = pos.astype(jnp.int32)
 
     def idx_blk2(b, w, pt, ps):
         return (jnp.maximum(pt[b, w], 0), 0, 0)
 
-    kern = functools.partial(_mla_kernel, scale=scale, lat=lat, blocks_w=MB)
+    in_specs = [
+        pl.BlockSpec((1, H, lat + dr), lambda b, w, pt, ps: (b, 0, 0)),
+        pl.BlockSpec((1, bt, lat), idx_blk2),
+        pl.BlockSpec((1, bt, dr), idx_blk2),
+    ]
+    inputs = [qcat, ckv, kr]
+    if fused:
+        in_specs += [pl.BlockSpec((1, lat), lambda b, w, pt, ps: (b, 0)),
+                     pl.BlockSpec((1, dr), lambda b, w, pt, ps: (b, 0))]
+        inputs += [ckv_new, kr_new]
+    in_specs.append(pl.BlockSpec(
+        (1, bt), lambda b, w, pt, ps: (jnp.maximum(pt[b, w], 0), 0)))
+    inputs.append(slot_pos)
+
+    kern = functools.partial(_mla_kernel, scale=scale, lat=lat,
+                             blocks_w=MB, fused=fused)
     o, m, l = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(B, MB),
-            in_specs=[
-                pl.BlockSpec((1, H, lat + dr), lambda b, w, pt, ps: (b, 0, 0)),
-                pl.BlockSpec((1, bt, lat), idx_blk2),
-                pl.BlockSpec((1, bt, dr), idx_blk2),
-                pl.BlockSpec((1, bt),
-                             lambda b, w, pt, ps: (jnp.maximum(pt[b, w], 0), 0)),
-            ],
+            in_specs=in_specs,
             out_specs=(
                 pl.BlockSpec((1, H, lat), lambda b, w, pt, ps: (b, 0, 0)),
                 pl.BlockSpec((1, H), lambda b, w, pt, ps: (b, 0)),
@@ -277,6 +378,7 @@ def paged_mla_decode(qcat, ckv, kr, slot_pos, page_table, pos, *,
             jax.ShapeDtypeStruct((B, H), jnp.float32),
             jax.ShapeDtypeStruct((B, H), jnp.float32),
         ),
+        cost_estimate=_flash_decode_cost(B, H, MB, bt, lat + dr, lat),
         interpret=interpret,
-    )(page_table, pos, qcat, ckv, kr, slot_pos)
+    )(page_table, pos, *inputs)
     return o, m, l

@@ -161,18 +161,20 @@ def gqa_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
         new = kvcache.quantize_kv(k, v) if quantized else {"k": k, "v": v}
         kw = dict(scale=scale, attn_softcap=cfg.attn_softcap)
         paged = kvcache.is_paged(cache)
-        new_cache = (kvcache.write_decode_paged(cache, new, pos) if paged
-                     else kvcache.write_decode(cache, new, pos))
         if paged and sharded_fn is None:
-            # block-paged pool, hot path: the token was scattered through
-            # the page table; attend straight through it too — the paged
-            # flash-decode dispatcher reads only the mapped arena blocks
-            # (ref impl = the old paged_view + attention_partials
-            # composition, kept as the oracle and the CPU execution path)
-            o = combine_partials(*ops.paged_gqa_decode(
-                q[:, 0], new_cache, pos, window=window,
-                impl=paged_impl, **kw))
+            # block-paged pool, hot path: fused decode-write — one compiled
+            # step scatters the fresh token through the page table AND
+            # attends over it (the kernel merges the token into its target
+            # block's tile in-register, so no separate write dispatch
+            # precedes attention; ref impl = scatter + the old paged_view
+            # oracle, kept as the bit-reference and CPU execution path)
+            part, new_cache = ops.paged_gqa_decode_fused(
+                q[:, 0], cache, new, pos, window=window,
+                impl=paged_impl, **kw)
+            o = combine_partials(*part)
         else:
+            new_cache = (kvcache.write_decode_paged(cache, new, pos)
+                         if paged else kvcache.write_decode(cache, new, pos))
             # sequence-sharded combine consumes a dense ring view
             ring = kvcache.paged_view(new_cache) if paged else new_cache
             valid = decode_valid_mask(ring["slot_pos"], pos, window)
@@ -275,16 +277,18 @@ def mla_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, x,
         qcat = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], -1)
         paged = kvcache.is_paged(cache)
         new = {"ckv": ckv, "kr": kr}
-        new_cache = (kvcache.write_decode_paged(cache, new, pos) if paged
-                     else kvcache.write_decode(cache, new, pos))
         if paged and sharded_fn is None:
-            # paged hot path: the MLA kernel gathers the latent + rope
-            # leaves per mapped block through the page table — no
-            # concatenated dense ring is ever built
-            o_lat = combine_partials(*ops.paged_mla_decode(
-                qcat.astype(x.dtype), new_cache, pos, scale=scale,
-                lat=cfg.kv_lora_rank, impl=paged_impl))
+            # paged hot path, fused decode-write: the MLA kernel gathers
+            # the latent + rope leaves per mapped block through the page
+            # table and merges the fresh latent in-register — no separate
+            # scatter dispatch, no concatenated dense ring
+            part, new_cache = ops.paged_mla_decode_fused(
+                qcat.astype(x.dtype), cache, new, pos, scale=scale,
+                lat=cfg.kv_lora_rank, impl=paged_impl)
+            o_lat = combine_partials(*part)
         else:
+            new_cache = (kvcache.write_decode_paged(cache, new, pos)
+                         if paged else kvcache.write_decode(cache, new, pos))
             ring = kvcache.paged_view(new_cache) if paged else new_cache
             valid = decode_valid_mask(ring["slot_pos"], pos, 0)
             kcat = jnp.concatenate([ring["ckv"], ring["kr"]],

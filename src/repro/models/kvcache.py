@@ -128,6 +128,60 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
 
 _PAGED_KINDS = ("kv", "mla")
 
+# Arena layout: **bt-major head-major tiling**.  Dense rings keep the
+# token-major (B, W, Hkv, D) layout (one contiguous W-row per slot), but
+# a token-major arena block tile (bt, Hkv, D) puts the tiny ``bt`` span
+# on a leading tile axis — for ``bt < 8`` that wastes TPU sublanes and
+# splits one head's slab across the whole block.  Arena kv leaves are
+# therefore head-major, with the block axis *inside* the head axis:
+#
+#   k / v              (Hkv, NB+1, bt, D)     [stacked: (P, Hkv, NB+1, bt, D)]
+#   k_scale / v_scale  (Hkv, NB+1, bt)
+#   slot_pos           (NB+1, bt)             (no head axis)
+#   ckv / kr (MLA)     (NB+1, bt, lat|dr)     (latents have no head axis)
+#
+# so one (block, head) DMA is a contiguous (bt, D) slab whose trailing
+# (bt, D) tile maps onto (sublane, lane) natively, for every bt.  The
+# helpers below are the single source of truth for which leaves carry
+# the head-major layout and where each leaf's physical-block axis sits.
+
+_HEAD_MAJOR = ("k", "v", "k_scale", "v_scale")
+
+
+def arena_block_axis(name: str, *, stacked: bool = False) -> int:
+    """Physical-block axis of an arena leaf (``stacked`` adds the leading
+    period-stack axis the engine's shared arena carries)."""
+    ax = 1 if name in _HEAD_MAJOR else 0
+    return ax + 1 if stacked else ax
+
+
+def retile_arena_leaf(name: str, a, *, stacked: bool = False):
+    """Token-major block layout (…, NB, bt, Hkv[, D]) → the head-major
+    arena layout above.  Identity for leaves without a head axis."""
+    if name not in _HEAD_MAJOR:
+        return a
+    off = 1 if stacked else 0
+    return jnp.moveaxis(a, off + 2, off)
+
+
+def untile_arena_leaf(name: str, a, *, stacked: bool = False):
+    """Inverse of ``retile_arena_leaf`` (head-major → token-major)."""
+    if name not in _HEAD_MAJOR:
+        return a
+    off = 1 if stacked else 0
+    return jnp.moveaxis(a, off, off + 2)
+
+
+def _to_arena_tile(name, blk):
+    """One dense-ring block tile (…, bt, Hkv[, D]) → the arena tile
+    (…, Hkv, bt[, D]) for head-major leaves (identity otherwise).  The
+    (bt, Hkv) pair sits at a fixed offset from the END, so this works
+    with any number of leading stack/batch axes."""
+    if name not in _HEAD_MAJOR:
+        return blk
+    ax_bt = blk.ndim - (3 if name in ("k", "v") else 2)
+    return jnp.swapaxes(blk, ax_bt, ax_bt + 1)
+
 
 def paged_period_keys(cfg: ModelConfig) -> tuple:
     """Period positions whose KV ring is block-pageable: full-attention
@@ -144,13 +198,17 @@ def init_paged_arena(cfg: ModelConfig, device_blocks: int,
     """Shared physical-block arena for the pageable period positions:
     every data leaf of the dense layer cache with its per-slot ring
     (B, W, ...) replaced by (device_blocks + 1) blocks of `block_tokens`
-    ring slots each.  Block index `device_blocks` is the trash block."""
+    ring slots each, in the head-major bt-tiled layout (see
+    ``arena_block_axis``).  Block index `device_blocks` is the trash
+    block."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     arena: Dict = {}
     for key in paged_period_keys(cfg):
         spec = cfg.period[int(key[1:])]
-        arena[key] = _spec_cache(cfg, spec, cfg.num_periods,
-                                 device_blocks + 1, block_tokens, dtype)
+        dense = _spec_cache(cfg, spec, cfg.num_periods,
+                            device_blocks + 1, block_tokens, dtype)
+        arena[key] = {name: retile_arena_leaf(name, a, stacked=True)
+                      for name, a in dense.items()}
     return arena
 
 
@@ -160,8 +218,9 @@ def is_paged(layer_cache: Dict) -> bool:
 
 def paged_view(layer_cache: Dict) -> Dict:
     """Gather a dense (B, W, ...) ring view of a paged layer cache slice
-    ({leaf: (n_blocks+1, bt, ...), "page_table": (B, MB)}), with
-    W = MB * bt.  Logical block lb covers ring positions
+    (head-major arena leaves per ``arena_block_axis`` plus
+    ``page_table`` (B, MB)), with W = MB * bt.  Logical block lb covers
+    ring positions
     [lb*bt, (lb+1)*bt), exactly the dense ring's layout; unmapped blocks
     read the trash block but their slot_pos is forced to -1, so they are
     invisible to the validity masks.
@@ -182,11 +241,45 @@ def paged_view(layer_cache: Dict) -> Dict:
     for name, a in layer_cache.items():
         if name == "page_table":
             continue
-        g = jnp.take(a, idx.reshape(-1), axis=0)
-        g = g.reshape((B, MB) + a.shape[1:])
+        ax = arena_block_axis(name)
+        g = jnp.take(a, idx.reshape(-1), axis=ax)
+        if ax:       # head-major: (Hkv, B·MB, bt, …) → (B·MB, bt, Hkv, …)
+            g = jnp.moveaxis(g, 0, 2)
+        g = g.reshape((B, MB) + g.shape[1:])
         if name == "slot_pos":
             g = jnp.where(mapped[:, :, None], g, -1)
-        out[name] = g.reshape((B, MB * bt) + a.shape[2:])
+        out[name] = g.reshape((B, MB * bt) + g.shape[3:])
+    return out
+
+
+def decode_scatter_target(layer_cache: Dict, pos: jax.Array):
+    """The one-token decode scatter's coordinates: (pb, off) — each row's
+    physical block (trash where unmapped) and in-block offset for ring
+    position ``pos % W``.  Shared by ``write_decode_paged`` and the fused
+    decode-write dispatchers in ``kernels.ops``."""
+    pt = layer_cache["page_table"]                     # (B, MB)
+    MB = pt.shape[1]
+    trash = layer_cache["slot_pos"].shape[0] - 1
+    bt = layer_cache["slot_pos"].shape[1]
+    i = (pos % (MB * bt)).astype(jnp.int32)            # (B,) ring index
+    lb = i // bt
+    off = i % bt
+    pb = jnp.take_along_axis(pt, lb[:, None], axis=1)[:, 0]
+    return jnp.where(pb >= 0, pb, trash), off
+
+
+def _decode_scatter(layer_cache: Dict, new: Dict, pos: jax.Array) -> Dict:
+    pb, off = decode_scatter_target(layer_cache, pos)
+    out = dict(layer_cache)
+    for name in new:
+        buf = layer_cache[name]
+        tok = new[name][:, 0].astype(buf.dtype)        # (B, Hkv[, D]) | (B, r)
+        if name in _HEAD_MAJOR:
+            out[name] = buf.at[:, pb, off].set(jnp.moveaxis(tok, 0, 1))
+        else:
+            out[name] = buf.at[pb, off].set(tok)
+    out["slot_pos"] = layer_cache["slot_pos"].at[pb, off].set(
+        pos.astype(jnp.int32))
     return out
 
 
@@ -194,23 +287,14 @@ def write_decode_paged(layer_cache: Dict, new: Dict, pos: jax.Array) -> Dict:
     """Paged analogue of `write_decode`: scatter one token per row into
     the arena block its page table maps for ring position pos % W.  Rows
     with no mapped block there (masked/free slots) scatter into the
-    trash block instead — harmless by construction."""
-    pt = layer_cache["page_table"]                     # (B, MB)
-    B, MB = pt.shape
-    trash = layer_cache["slot_pos"].shape[0] - 1
-    bt = layer_cache["slot_pos"].shape[1]
-    i = (pos % (MB * bt)).astype(jnp.int32)            # (B,) ring index
-    lb = i // bt
-    off = i % bt
-    pb = jnp.take_along_axis(pt, lb[:, None], axis=1)[:, 0]
-    pb = jnp.where(pb >= 0, pb, trash)
-    out = dict(layer_cache)
-    for name in new:
-        buf = layer_cache[name]
-        out[name] = buf.at[pb, off].set(new[name][:, 0].astype(buf.dtype))
-    out["slot_pos"] = layer_cache["slot_pos"].at[pb, off].set(
-        pos.astype(jnp.int32))
-    return out
+    trash block instead — harmless by construction.
+
+    NOTE this is no longer dispatched on the paged decode hot path: the
+    fused decode-write dispatchers (``kernels.ops.paged_gqa_decode_fused``
+    / ``paged_mla_decode_fused``) perform the identical scatter inside
+    the same compiled step as the attention kernel.  It remains the
+    sharded-combine path's write and the standalone scatter primitive."""
+    return _decode_scatter(layer_cache, new, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -266,7 +350,11 @@ def _insert_row_blocks(group: Dict, single_group: Dict, row, src) -> Dict:
             if name == "page_table":
                 continue
             blk = single_group[name][:, src, lb * bt:(lb + 1) * bt]
-            out[name] = out[name].at[:, pb].set(blk.astype(a.dtype))
+            tile = _to_arena_tile(name, blk.astype(a.dtype))
+            if name in _HEAD_MAJOR:
+                out[name] = out[name].at[:, :, pb].set(tile)
+            else:
+                out[name] = out[name].at[:, pb].set(tile)
     return out
 
 
@@ -347,7 +435,11 @@ def insert_slot_span(cache: Dict, single: Dict, row, start,
                     continue
                 blk = jax.lax.dynamic_slice_in_dim(
                     single_group[name], lb_c * bt, bt, axis=2)[:, 0]
-                out_g[name] = out_g[name].at[:, pb].set(blk.astype(a.dtype))
+                tile = _to_arena_tile(name, blk.astype(a.dtype))
+                if name in _HEAD_MAJOR:
+                    out_g[name] = out_g[name].at[:, :, pb].set(tile)
+                else:
+                    out_g[name] = out_g[name].at[:, pb].set(tile)
         return out_g
 
     out = {}

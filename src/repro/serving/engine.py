@@ -81,7 +81,7 @@ module-batched schedule.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -89,8 +89,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import blockpool, paging, residency
+from repro.core import blockpool, offload, paging, residency
 from repro.core.batching import blocks_for_tokens
+from repro.kernels import ops as kernel_ops
 from repro.models import kvcache
 from repro.models.model import ExecPolicy
 from repro.serving import steps as serve_steps
@@ -253,20 +254,49 @@ class Engine:
             self._kv_arena = kvcache.init_paged_arena(
                 cfg, device_blocks, ecfg.block_tokens)
             self._kv_trash = device_blocks
+            # per-leaf block axis: head-major leaves (k/v/scales) carry the
+            # block dimension at stacked axis 2, the rest at axis 1
             block_bytes = sum(
-                int(a[:, 0].nbytes) for g in self._kv_arena.values()
-                for a in g.values())
+                int(a.nbytes) // a.shape[kvcache.arena_block_axis(
+                    name, stacked=True)]
+                for g in self._kv_arena.values() for name, a in g.items())
             self._kv = blockpool.BlockPool(n_slots, mb, device_blocks,
                                            block_bytes)
-            # host tier: big enough to hold every spillable block
-            self._kv_host = {
-                key: {name: np.zeros((a.shape[0], total) + a.shape[2:],
-                                     a.dtype)
-                      for name, a in g.items()}
-                for key, g in self._kv_arena.items()}
-            self._kv_read = jax.jit(lambda a, i: a[:, i])
-            self._kv_write = jax.jit(lambda a, i, v: a.at[:, i].set(v),
-                                     donate_argnums=(0,))
+
+            def _host_shape(name, a):
+                ax = kvcache.arena_block_axis(name, stacked=True)
+                return a.shape[:ax] + (total,) + a.shape[ax + 1:]
+
+            # host tier: big enough to hold every spillable block.  When
+            # the backend exposes pinned_host memory the tier lives there
+            # as jax arrays (spills/fetches lower to async DMA against
+            # pinned pages); otherwise it falls back to pageable numpy
+            # (offload emits one structured warning the first time).
+            self._kv_pinned_shd = offload.pinned_host_sharding()
+            self._kv_pinned = self._kv_pinned_shd is not None
+            if self._kv_pinned:
+                self._kv_host = {
+                    key: {name: jax.device_put(
+                        jnp.zeros(_host_shape(name, a), a.dtype),
+                        self._kv_pinned_shd)
+                        for name, a in g.items()}
+                    for key, g in self._kv_arena.items()}
+                self._kv_host_write = jax.jit(
+                    lambda h, i, v, ax: h.at[(slice(None),) * ax + (i,)
+                                             ].set(v),
+                    static_argnums=(3,), donate_argnums=(0,),
+                    out_shardings=self._kv_pinned_shd)
+            else:
+                self._kv_host = {
+                    key: {name: np.zeros(_host_shape(name, a), a.dtype)
+                          for name, a in g.items()}
+                    for key, g in self._kv_arena.items()}
+            self._kv_read = jax.jit(
+                lambda a, i, ax: jnp.take(a, i, axis=ax),
+                static_argnums=(2,))
+            self._kv_write = jax.jit(
+                lambda a, i, v, ax: a.at[(slice(None),) * ax + (i,)].set(v),
+                static_argnums=(3,), donate_argnums=(0,))
             self._kv_clear = jax.jit(lambda sp, idx: sp.at[:, idx].set(-1),
                                      donate_argnums=(0,))
             self._kv_pending: List[Tuple[int, int]] = []
@@ -292,6 +322,17 @@ class Engine:
                     int(np.prod(l.shape)) * l.dtype.itemsize
                     for l in jax.tree.leaves(rem_abs))
                 + int(self._kv.dev.nbytes))
+            # resolve impl='auto' against the measured dense-vs-paged
+            # crossover once, host-side (the impl string stays a static
+            # jit arg): the occupancy proxy is the device-resident
+            # fraction of the block pool — at high residency the dense
+            # view's simpler addressing can beat the per-block gather on
+            # real devices (benchmarks/bench_transfer.py measures where)
+            if policy is not None and policy.paged_attn_impl == "auto":
+                kernel_ops.load_paged_crossover()
+                self.policy = policy = dc_replace(
+                    policy, paged_attn_impl=kernel_ops.paged_auto_impl(
+                        device_blocks / total))
         self._prefill = jax.jit(serve_steps.make_prefill_fill_step(
             cfg, policy, paged_blocks=self.paged_blocks))
         chunk = ecfg.decode_chunk if ecfg.mode == "continuous" else 1
@@ -651,16 +692,27 @@ class Engine:
             if op[0] == "spill":
                 _, _s, _lb, pb, hb = op
                 for key, g in self._kv_arena.items():
+                    h = self._kv_host[key]
                     for name in g:
-                        self._kv_host[key][name][:, hb] = np.asarray(
-                            self._kv_read(g[name], jnp.int32(pb)))
+                        ax = kvcache.arena_block_axis(name, stacked=True)
+                        blk = self._kv_read(g[name], jnp.int32(pb), ax)
+                        if self._kv_pinned:     # D2H into the pinned tier
+                            h[name] = self._kv_host_write(
+                                h[name], jnp.int32(hb), blk, ax)
+                        else:
+                            h[name][(slice(None),) * ax + (hb,)] = \
+                                np.asarray(blk)
             elif op[0] == "fetch":
                 _, _s, _lb, hb, pb = op
                 for key, g in self._kv_arena.items():
+                    h = self._kv_host[key]
                     for name in list(g):
-                        g[name] = self._kv_write(
-                            g[name], jnp.int32(pb),
-                            jnp.asarray(self._kv_host[key][name][:, hb]))
+                        ax = kvcache.arena_block_axis(name, stacked=True)
+                        blk = (self._kv_read(h[name], jnp.int32(hb), ax)
+                               if self._kv_pinned else jnp.asarray(
+                                   h[name][(slice(None),) * ax + (hb,)]))
+                        g[name] = self._kv_write(g[name], jnp.int32(pb),
+                                                 blk, ax)
             else:                                       # ("alloc", s, lb, pb)
                 fresh.append(op[3])
         if fresh:

@@ -1,0 +1,270 @@
+"""Head-major (bt-major) arena layout property suite.
+
+The paged KV arena stores its kv leaves head-major — k/v
+``(Hkv, NB, bt, D)``, scales ``(Hkv, NB, bt)`` (``kvcache`` layout
+block) — so a (block, head) DMA is a contiguous ``(bt, D)`` slab for
+every block size.  This suite pins the layout helpers (retile/untile
+round-trip identity, block-axis bookkeeping), proves the paged
+scatter/gather path **bit-identical** to the dense ring across
+``bt ∈ {4, 8, 16, 32}`` × int8 × MLA (including ring wrap), and proves
+the fused decode-write dispatchers (``ops.paged_*_decode_fused`` — the
+kernel merges the fresh token into its gathered tile in-register)
+bit-identical to write-then-attend in both the interpret-kernel and ref
+impls, including the ring-wrap overwrite and the unmapped-target
+(trash-block) cases."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.models import kvcache
+
+BTS = (4, 8, 16, 32)
+
+
+# ---------------------------------------------------------------------------
+# Layout helpers: round trip + axis bookkeeping
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_retile_untile_round_trip(stacked):
+    rng = np.random.default_rng(0)
+    NB, bt, Hkv, D = 5, 4, 2, 8
+    lead = (3,) if stacked else ()
+    cases = {
+        "k": lead + (NB, bt, Hkv, D),
+        "v": lead + (NB, bt, Hkv, D),
+        "k_scale": lead + (NB, bt, Hkv),
+        "v_scale": lead + (NB, bt, Hkv),
+        "slot_pos": lead + (NB, bt),          # no head axis: identity
+        "ckv": lead + (NB, bt, 16),
+        "kr": lead + (NB, bt, 8),
+    }
+    for name, shape in cases.items():
+        a = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        r = kvcache.retile_arena_leaf(name, a, stacked=stacked)
+        # the block axis lands where arena_block_axis says
+        ax = kvcache.arena_block_axis(name, stacked=stacked)
+        assert r.shape[ax] == NB, (name, r.shape, ax)
+        back = kvcache.untile_arena_leaf(name, r, stacked=stacked)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+        if name not in ("k", "v", "k_scale", "v_scale"):
+            assert r.shape == a.shape        # identity for head-free leaves
+
+
+def test_init_paged_arena_head_major_shapes():
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").smoke(),
+                              dtype="float32")
+    NB, bt = 6, 4
+    arena = kvcache.init_paged_arena(cfg, NB, bt)
+    P, Hkv, Dh = cfg.num_periods, cfg.num_kv_heads, cfg.head_dim
+    for key, g in arena.items():
+        assert g["k"].shape == (P, Hkv, NB + 1, bt, Dh)
+        assert g["v"].shape == (P, Hkv, NB + 1, bt, Dh)
+        assert g["slot_pos"].shape == (P, NB + 1, bt)
+    int8 = dataclasses.replace(cfg, kv_dtype="int8")
+    g = next(iter(kvcache.init_paged_arena(int8, NB, bt).values()))
+    assert g["k_scale"].shape == (P, Hkv, NB + 1, bt)
+    mla = dataclasses.replace(get_config("deepseek-v3-671b").smoke(),
+                              dtype="float32")
+    g = next(iter(kvcache.init_paged_arena(mla, NB, bt).values()))
+    assert g["ckv"].shape == (mla.num_periods, NB + 1, bt, mla.kv_lora_rank)
+
+
+# ---------------------------------------------------------------------------
+# Paged scatter/gather ≡ dense ring, every bt × int8 × MLA, incl. wrap
+# ---------------------------------------------------------------------------
+
+def _paired_caches(rng, B, MB, bt, Hkv, D, *, int8=False, mla=False,
+                   lat=16, dr=8):
+    """A dense ring cache and a fully-mapped paged cache (row b owns
+    physical blocks [b·MB, (b+1)·MB), permuted) over the same W."""
+    W = MB * bt
+    NB = B * MB + 1
+    perm = rng.permutation(B * MB)
+    pt = perm.reshape(B, MB).astype(np.int32)
+    if mla:
+        dense = {"ckv": jnp.zeros((B, W, lat)), "kr": jnp.zeros((B, W, dr)),
+                 "slot_pos": jnp.full((B, W), -1, jnp.int32)}
+        arena = {"ckv": jnp.zeros((NB, bt, lat)),
+                 "kr": jnp.zeros((NB, bt, dr))}
+    elif int8:
+        dense = {"k": jnp.zeros((B, W, Hkv, D), jnp.int8),
+                 "v": jnp.zeros((B, W, Hkv, D), jnp.int8),
+                 "k_scale": jnp.zeros((B, W, Hkv)),
+                 "v_scale": jnp.zeros((B, W, Hkv)),
+                 "slot_pos": jnp.full((B, W), -1, jnp.int32)}
+        arena = {
+            "k": kvcache.retile_arena_leaf(
+                "k", jnp.zeros((NB, bt, Hkv, D), jnp.int8)),
+            "v": kvcache.retile_arena_leaf(
+                "v", jnp.zeros((NB, bt, Hkv, D), jnp.int8)),
+            "k_scale": kvcache.retile_arena_leaf(
+                "k_scale", jnp.zeros((NB, bt, Hkv))),
+            "v_scale": kvcache.retile_arena_leaf(
+                "v_scale", jnp.zeros((NB, bt, Hkv)))}
+    else:
+        dense = {"k": jnp.zeros((B, W, Hkv, D)),
+                 "v": jnp.zeros((B, W, Hkv, D)),
+                 "slot_pos": jnp.full((B, W), -1, jnp.int32)}
+        arena = {"k": kvcache.retile_arena_leaf(
+                     "k", jnp.zeros((NB, bt, Hkv, D))),
+                 "v": kvcache.retile_arena_leaf(
+                     "v", jnp.zeros((NB, bt, Hkv, D)))}
+    arena["slot_pos"] = jnp.full((NB, bt), -1, jnp.int32)
+    arena["page_table"] = jnp.asarray(pt)
+    return dense, arena
+
+
+def _new_token(rng, B, Hkv, D, *, int8=False, mla=False, lat=16, dr=8):
+    if mla:
+        return {"ckv": jnp.asarray(rng.normal(size=(B, 1, lat)),
+                                   jnp.float32),
+                "kr": jnp.asarray(rng.normal(size=(B, 1, dr)), jnp.float32)}
+    k = jnp.asarray(rng.normal(size=(B, 1, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, 1, Hkv, D)), jnp.float32)
+    return kvcache.quantize_kv(k, v) if int8 else {"k": k, "v": v}
+
+
+@pytest.mark.parametrize("bt", BTS)
+@pytest.mark.parametrize("kind", ["f32", "int8", "mla"])
+def test_paged_decode_scatter_matches_dense_ring(bt, kind):
+    """write_decode_paged through the head-major arena, viewed densely,
+    is bit-identical to write_decode on a plain ring — for every decode
+    position through a full wrap of the ring."""
+    rng = np.random.default_rng(hash((bt, kind)) % 2 ** 31)
+    B, MB, Hkv, D = 2, 3, 2, 8
+    W = MB * bt
+    dense, paged = _paired_caches(rng, B, MB, bt, Hkv, D,
+                                  int8=kind == "int8", mla=kind == "mla")
+    # wrap past W to cover the ring-overwrite path; sparse probe points
+    # keep the walk cheap for large bt
+    probes = sorted({0, 1, bt - 1, bt, W // 2, W - 1, W, W + bt // 2})
+    for t in range(W + bt // 2 + 1):
+        new = _new_token(rng, B, Hkv, D, int8=kind == "int8",
+                         mla=kind == "mla")
+        pos = jnp.full((B,), t, jnp.int32)
+        dense = kvcache.write_decode(dense, new, pos)
+        paged = kvcache.write_decode_paged(paged, new, pos)
+        if t in probes:
+            ring = kvcache.paged_view(paged)
+            for name in dense:
+                np.testing.assert_array_equal(
+                    np.asarray(ring[name]), np.asarray(dense[name]),
+                    err_msg=f"{kind} bt={bt} t={t} leaf={name}")
+
+
+def test_paged_view_unmapped_blocks_invisible():
+    """An unmapped logical block reads as slot_pos=-1 regardless of what
+    the trash block holds."""
+    rng = np.random.default_rng(7)
+    _, paged = _paired_caches(rng, 2, 3, 4, 2, 8)
+    pt = np.asarray(paged["page_table"]).copy()
+    pt[1, 2] = -1
+    paged["page_table"] = jnp.asarray(pt)
+    paged["slot_pos"] = paged["slot_pos"].at[-1].set(5)   # poisoned trash
+    ring = kvcache.paged_view(paged)
+    assert (np.asarray(ring["slot_pos"])[1, 2 * 4:3 * 4] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Fused decode-write ≡ write-then-attend, bit-exact
+# ---------------------------------------------------------------------------
+
+def _fill_paged(rng, paged, upto, B, Hkv, D, *, int8=False, mla=False):
+    for t in range(upto):
+        new = _new_token(rng, B, Hkv, D, int8=int8, mla=mla)
+        paged = kvcache.write_decode_paged(
+            paged, new, jnp.full((B,), t, jnp.int32))
+    return paged
+
+
+@pytest.mark.parametrize("bt", BTS)
+@pytest.mark.parametrize("impl", ["interpret", "ref"])
+@pytest.mark.parametrize("int8", [False, True])
+def test_fused_gqa_bit_identical_to_write_then_attend(bt, impl, int8):
+    rng = np.random.default_rng(hash((bt, impl, int8)) % 2 ** 31)
+    B, MB, Hkv, G, D = 2, 3, 2, 2, 16
+    W = MB * bt
+    # positions probing mid-ring, block boundary, and the wrap overwrite
+    for t in (bt - 1, W // 2, W, W + 1):
+        _, paged = _paired_caches(rng, B, MB, bt, Hkv, D, int8=int8)
+        paged = _fill_paged(rng, paged, t, B, Hkv, D, int8=int8)
+        new = _new_token(rng, B, Hkv, D, int8=int8)
+        pos = jnp.full((B,), t, jnp.int32)
+        q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)), jnp.float32)
+        part, fused_cache = ops.paged_gqa_decode_fused(
+            q, paged, new, pos, scale=D ** -0.5, impl=impl)
+        written = kvcache.write_decode_paged(paged, new, pos)
+        ref_part = ops.paged_gqa_decode(q, written, pos, scale=D ** -0.5,
+                                        impl=impl)
+        for a, b, nm in zip(part, ref_part, ("o", "m", "l")):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"bt={bt} t={t} impl={impl} int8={int8} "
+                        f"partial {nm}")
+        for name in written:
+            np.testing.assert_array_equal(
+                np.asarray(fused_cache[name]), np.asarray(written[name]),
+                err_msg=f"cache leaf {name}")
+
+
+@pytest.mark.parametrize("impl", ["interpret", "ref"])
+def test_fused_gqa_unmapped_target_matches(impl):
+    """When the decode position's block is unmapped, write_decode_paged
+    scatters into the trash block (never read) — the fused kernel must
+    skip the in-tile merge identically."""
+    rng = np.random.default_rng(21)
+    B, MB, bt, Hkv, G, D = 2, 3, 8, 2, 2, 16
+    t = MB * bt // 2
+    _, paged = _paired_caches(rng, B, MB, bt, Hkv, D)
+    paged = _fill_paged(rng, paged, t, B, Hkv, D)
+    pt = np.asarray(paged["page_table"]).copy()
+    pt[0, t // bt] = -1                    # row 0's target block unmapped
+    paged["page_table"] = jnp.asarray(pt)
+    new = _new_token(rng, B, Hkv, D)
+    pos = jnp.full((B,), t, jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)), jnp.float32)
+    part, fused_cache = ops.paged_gqa_decode_fused(
+        q, paged, new, pos, scale=D ** -0.5, impl=impl)
+    written = kvcache.write_decode_paged(paged, new, pos)
+    ref_part = ops.paged_gqa_decode(q, written, pos, scale=D ** -0.5,
+                                    impl=impl)
+    for a, b in zip(part, ref_part):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in written:
+        np.testing.assert_array_equal(np.asarray(fused_cache[name]),
+                                      np.asarray(written[name]))
+
+
+@pytest.mark.parametrize("bt", [4, 8, 16])
+@pytest.mark.parametrize("impl", ["interpret", "ref"])
+def test_fused_mla_bit_identical_to_write_then_attend(bt, impl):
+    rng = np.random.default_rng(hash((bt, impl)) % 2 ** 31)
+    B, MB, H, lat, dr = 2, 3, 4, 16, 8
+    W = MB * bt
+    for t in (bt - 1, W // 2, W):
+        _, paged = _paired_caches(rng, B, MB, bt, 1, 8, mla=True,
+                                  lat=lat, dr=dr)
+        paged = _fill_paged(rng, paged, t, B, 1, 8, mla=True)
+        new = _new_token(rng, B, 1, 8, mla=True, lat=lat, dr=dr)
+        pos = jnp.full((B,), t, jnp.int32)
+        qcat = jnp.asarray(rng.normal(size=(B, H, lat + dr)), jnp.float32)
+        part, fused_cache = ops.paged_mla_decode_fused(
+            qcat, paged, new, pos, scale=(lat + dr) ** -0.5, lat=lat,
+            impl=impl)
+        written = kvcache.write_decode_paged(paged, new, pos)
+        ref_part = ops.paged_mla_decode(qcat, written, pos,
+                                        scale=(lat + dr) ** -0.5, lat=lat,
+                                        impl=impl)
+        for a, b, nm in zip(part, ref_part, ("o", "m", "l")):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"bt={bt} t={t} impl={impl} partial {nm}")
+        for name in written:
+            np.testing.assert_array_equal(
+                np.asarray(fused_cache[name]), np.asarray(written[name]))

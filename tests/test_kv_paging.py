@@ -162,13 +162,22 @@ def test_spill_fetch_round_trip_identity(qwen_f32):
         filled[name] = (jax.random.normal(k, a.shape).astype(a.dtype)
                         if a.dtype != jnp.int32
                         else jax.random.randint(k, a.shape, 0, 64, a.dtype))
-    before = {n: np.asarray(a[:, 2]) for n, a in filled.items()}
-    host = {n: np.asarray(filled[n][:, 2]) for n in filled}     # spill pb=2
-    zeroed = {n: filled[n].at[:, 2].set(0) for n in filled}     # block reused
-    back = {n: zeroed[n].at[:, 3].set(jnp.asarray(host[n]))     # fetch→pb=3
+    def _blk(a, name, pb):
+        ax = kvcache.arena_block_axis(name, stacked=True)
+        return a[(slice(None),) * ax + (pb,)]
+
+    def _set_blk(a, name, pb, v):
+        ax = kvcache.arena_block_axis(name, stacked=True)
+        return a.at[(slice(None),) * ax + (pb,)].set(v)
+
+    before = {n: np.asarray(_blk(a, n, 2)) for n, a in filled.items()}
+    host = {n: np.asarray(_blk(filled[n], n, 2)) for n in filled}  # spill pb=2
+    zeroed = {n: _set_blk(filled[n], n, 2, 0) for n in filled}     # reused
+    back = {n: _set_blk(zeroed[n], n, 3, jnp.asarray(host[n]))     # fetch→pb=3
             for n in zeroed}
     for n in back:
-        np.testing.assert_array_equal(np.asarray(back[n][:, 3]), before[n])
+        np.testing.assert_array_equal(np.asarray(_blk(back[n], n, 3)),
+                                      before[n])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,261 @@
+"""Pinned-host offload probe + measured impl='auto' dispatch.
+
+The CPU validation backend exposes only ``unpinned_host`` memory, so the
+probe's fallback branch is the live path here (one structured
+``HostOffloadFallbackWarning`` per process, then silence); the pinned
+branch — engine host tier as jax arrays written through the
+out_shardings-pinned ``_kv_host_write`` jit — is driven by
+monkeypatching ``offload._make_pinned_sharding`` with a plain CPU
+sharding, and must leave greedy transcripts bit-identical to the
+pageable-numpy tier and the dense ring.  The measured crossover
+(``benchmarks/bench_transfer.py`` → ``BENCH_transfer.json``) resolves
+``paged_attn_impl='auto'`` at engine init: dense-ref off-TPU, paged
+kernel on TPU when unmeasured, dense at/above the measured occupancy —
+both sides of the threshold pinned here.  Finally the fused decode-write
+acceptance: ``kvcache.write_decode_paged`` must not be a separate
+dispatch on the paged decode hot path (trace-time spy)."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hrm as H
+from repro.core import offload
+from repro.kernels import ops
+from repro.models import kvcache
+from repro.models.model import ExecPolicy
+from repro.models.params import init_params
+from repro.serving.engine import Engine, EngineConfig
+
+
+def _plain_sharding():
+    return jax.sharding.SingleDeviceSharding(jax.devices()[0])
+
+
+@pytest.fixture
+def fake_pinned(monkeypatch):
+    """Backends-with-pinned-host world: the probe succeeds and the
+    'pinned' sharding is a plain CPU sharding (placement is exercised,
+    the memory space is simulated)."""
+    monkeypatch.setattr(offload, "supports_host_offload", lambda: True)
+    monkeypatch.setattr(offload, "_make_pinned_sharding", _plain_sharding)
+    yield
+
+
+@pytest.fixture
+def no_pinned(monkeypatch):
+    """Fallback world with the warn-once latch reset."""
+    monkeypatch.setattr(offload, "supports_host_offload", lambda: False)
+    monkeypatch.setattr(offload, "_warned_no_pinned", False)
+    yield
+
+
+# ---------------------------------------------------------------------------
+# Probe: both branches, warn-once
+# ---------------------------------------------------------------------------
+
+def test_probe_fallback_warns_exactly_once(no_pinned):
+    with pytest.warns(offload.HostOffloadFallbackWarning,
+                      match="no pinned_host memory space"):
+        assert offload.pinned_host_sharding() is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # second probe must be silent
+        assert offload.pinned_host_sharding() is None
+        assert offload.pinned_host_sharding(warn=False) is None
+
+
+def test_probe_warn_false_never_warns(no_pinned):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert offload.pinned_host_sharding(warn=False) is None
+    assert not offload._warned_no_pinned     # latch untouched
+
+
+def test_probe_pinned_branch(fake_pinned):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # support => no warning
+        s = offload.pinned_host_sharding()
+    assert s is not None
+    x = jnp.arange(8.0)
+    y = offload.pinned_put(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(offload.to_device(y)),
+                                  np.asarray(x))
+
+
+def test_pinned_put_identity_without_support(no_pinned):
+    x = jnp.arange(4.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert offload.pinned_put(x) is x
+
+
+# ---------------------------------------------------------------------------
+# Engine: jax pinned-host tier ≡ pageable-numpy tier ≡ dense ring
+# ---------------------------------------------------------------------------
+
+def _work(cfg, seed=0, n=4):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(2, cfg.vocab_size, int(rng.integers(1, 24))),
+             int(rng.integers(1, 8))) for _ in range(n)]
+
+
+def _run(cfg, params, work, policy=None, **kw):
+    ecfg = dict(ubatch=2, num_ubs=2, max_seq=64, decode_chunk=4)
+    ecfg.update(kw)
+    eng = Engine(cfg, params, EngineConfig(**ecfg), policy=policy)
+    for p, q in work:
+        eng.submit(p, q)
+    return eng, eng.run_until_idle()
+
+
+def _smoke(arch="qwen2.5-3b"):
+    cfg = dataclasses.replace(get_config(arch).smoke(), dtype="float32")
+    return cfg, init_params(cfg, jax.random.key(3))
+
+
+def test_engine_pinned_tier_transcripts_identical(fake_pinned):
+    cfg, params = _smoke()
+    work = _work(cfg)
+    _, dense = _run(cfg, params, work)
+    eng, paged = _run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25)
+    assert eng._kv_pinned                    # the jax host-tier branch ran
+    assert all(isinstance(a, jax.Array) for g in eng._kv_host.values()
+               for a in g.values())
+    t = eng.kv_traffic()
+    assert t["d2h_bytes"] > 0 and t["h2d_bytes"] > 0   # spills + fetches
+    assert paged == dense
+
+
+def test_engine_fallback_tier_is_numpy():
+    cfg, params = _smoke()
+    eng, _ = _run(cfg, params, _work(cfg), kv_paged=True, kv_gpu_ratio=0.25)
+    assert not eng._kv_pinned
+    assert all(isinstance(a, np.ndarray) for g in eng._kv_host.values()
+               for a in g.values())
+
+
+# ---------------------------------------------------------------------------
+# Measured crossover: impl='auto' resolution
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def crossover_state():
+    yield
+    ops.set_paged_crossover(None)            # never leak into other tests
+
+
+def test_auto_impl_off_tpu_is_ref(crossover_state):
+    ops.set_paged_crossover(0.5)
+    if not ops.on_tpu():
+        assert ops.paged_auto_impl(0.1) == "ref"
+        assert ops.paged_auto_impl(0.9) == "ref"
+
+
+def test_auto_impl_unmeasured_stays_paged(crossover_state, monkeypatch):
+    monkeypatch.setattr(ops, "on_tpu", lambda: True)
+    ops.set_paged_crossover(None)
+    assert ops.paged_auto_impl(0.05) == "pallas"
+    assert ops.paged_auto_impl(1.0) == "pallas"
+
+
+def test_auto_impl_both_sides_of_threshold(crossover_state, monkeypatch):
+    monkeypatch.setattr(ops, "on_tpu", lambda: True)
+    ops.set_paged_crossover(0.5)
+    assert ops.paged_auto_impl(0.49) == "pallas"   # below: paged kernel
+    assert ops.paged_auto_impl(0.5) == "ref"       # at/above: dense view
+    assert ops.paged_auto_impl(0.51) == "ref"
+
+
+def test_load_crossover_artifact(crossover_state, tmp_path):
+    p = tmp_path / "BENCH_transfer.json"
+    p.write_text(json.dumps({"crossover_occupancy": 0.75}))
+    assert ops.load_paged_crossover(str(p)) == 0.75
+    # a null measurement (interpret-mode bench run) must clear nothing
+    ops.set_paged_crossover(None)
+    p.write_text(json.dumps({"crossover_occupancy": None}))
+    assert ops.load_paged_crossover(str(p)) is None
+    # missing / malformed files are "no measurement", not errors
+    assert ops.load_paged_crossover(str(tmp_path / "absent.json")) is None
+    p.write_text("not json{")
+    assert ops.load_paged_crossover(str(p)) is None
+
+
+def test_engine_resolves_auto_policy(crossover_state):
+    """policy.paged_attn_impl='auto' is resolved host-side at init from
+    the measured table (off-TPU: dense-ref), and the serve matches the
+    dense ring bit-exactly."""
+    cfg, params = _smoke()
+    work = _work(cfg, seed=1)
+    _, dense = _run(cfg, params, work)
+    eng, paged = _run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25,
+                      policy=ExecPolicy(paged_attn_impl="auto"))
+    assert eng.policy.paged_attn_impl in ("ref", "pallas")   # resolved
+    if not ops.on_tpu():
+        assert eng.policy.paged_attn_impl == "ref"
+    assert paged == dense
+
+
+def test_hrm_measured_links(tmp_path):
+    hw = H.preset("l4")
+    spec_bw = hw.link_bw("cpu", "gpu")
+    p = tmp_path / "BENCH_transfer.json"
+    p.write_text(json.dumps({"h2d_pinned_bytes_per_s": 2.0e10,
+                             "h2d_pageable_bytes_per_s": 1.0e10}))
+    m = H.with_measured_links(hw, str(p))
+    assert m.link_bw("cpu", "gpu") == 2.0e10
+    assert m.name.endswith("+measured")
+    assert hw.link_bw("cpu", "gpu") == spec_bw      # original untouched
+    # pageable figure used when pinned is unavailable
+    p.write_text(json.dumps({"h2d_pinned_bytes_per_s": None,
+                             "h2d_pageable_bytes_per_s": 1.5e10}))
+    assert H.with_measured_links(hw, str(p)).link_bw("cpu", "gpu") == 1.5e10
+    # no artifact → hardware unchanged
+    assert H.with_measured_links(
+        hw, str(tmp_path / "none.json")).link_bw("cpu", "gpu") == spec_bw
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue acceptance: no separate write dispatch on the hot path
+# ---------------------------------------------------------------------------
+
+def test_write_decode_paged_not_on_hot_path(monkeypatch):
+    """The paged decode step folds the one-token scatter into the fused
+    attention dispatchers (which call the private ``_decode_scatter``):
+    the public ``write_decode_paged`` wrapper must never be traced on
+    the serving hot path."""
+    calls = {"n": 0}
+    real = kvcache.write_decode_paged
+
+    def spy(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kvcache, "write_decode_paged", spy)
+    # spy sanity: a direct call is counted
+    B, NB, bt, Hkv, D = 2, 5, 4, 2, 8
+    cache = {"k": kvcache.retile_arena_leaf(
+                 "k", jnp.zeros((NB, bt, Hkv, D))),
+             "v": kvcache.retile_arena_leaf(
+                 "v", jnp.zeros((NB, bt, Hkv, D))),
+             "slot_pos": jnp.full((NB, bt), -1, jnp.int32),
+             "page_table": jnp.arange(B * 2, dtype=jnp.int32
+                                      ).reshape(B, 2)}
+    new = {"k": jnp.ones((B, 1, Hkv, D)), "v": jnp.ones((B, 1, Hkv, D))}
+    kvcache.write_decode_paged(cache, new, jnp.zeros((B,), jnp.int32))
+    assert calls["n"] == 1
+    calls["n"] = 0
+
+    jax.clear_caches()                       # force hot-path retraces
+    cfg, params = _smoke()
+    work = _work(cfg, seed=2, n=3)
+    for policy in (None, ExecPolicy(paged_attn_impl="interpret")):
+        _, out = _run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25,
+                      policy=policy)
+        assert out                           # the serve actually decoded
+    assert calls["n"] == 0

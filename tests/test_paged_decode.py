@@ -27,6 +27,7 @@ except ImportError:                          # CI installs it; the bare
                                              # sweeps below instead
 
 from repro.kernels import ops
+from repro.models import kvcache
 from repro.models.attention import combine_partials
 
 
@@ -57,13 +58,15 @@ def _gqa_case(rng, B, MB, bt, Hkv, G, D, Dv, int8=False, trash_nan=False):
     pos = rng.integers(0, W, (B,)).astype(np.int32)
     q = rng.normal(size=(B, Hkv * G, D)).astype(np.float32)
     cache = {"page_table": jnp.asarray(pt)}
+    # built token-major (NB, bt, Hkv, D*) for readability, then retiled to
+    # the head-major arena layout the kernels read natively
     if int8:
         k = rng.integers(-127, 128, (NB, bt, Hkv, D)).astype(np.int8)
         v = rng.integers(-127, 128, (NB, bt, Hkv, Dv)).astype(np.int8)
-        cache["k_scale"] = jnp.asarray(
-            (rng.random((NB, bt, Hkv)) * 0.02 + 1e-3).astype(np.float32))
-        cache["v_scale"] = jnp.asarray(
-            (rng.random((NB, bt, Hkv)) * 0.02 + 1e-3).astype(np.float32))
+        cache["k_scale"] = kvcache.retile_arena_leaf("k_scale", jnp.asarray(
+            (rng.random((NB, bt, Hkv)) * 0.02 + 1e-3).astype(np.float32)))
+        cache["v_scale"] = kvcache.retile_arena_leaf("v_scale", jnp.asarray(
+            (rng.random((NB, bt, Hkv)) * 0.02 + 1e-3).astype(np.float32)))
     else:
         k = rng.normal(size=(NB, bt, Hkv, D)).astype(np.float32)
         v = rng.normal(size=(NB, bt, Hkv, Dv)).astype(np.float32)
@@ -71,7 +74,8 @@ def _gqa_case(rng, B, MB, bt, Hkv, G, D, Dv, int8=False, trash_nan=False):
             k[-1], v[-1] = np.nan, np.nan
             sp[-1] = rng.integers(0, W, (bt,))   # plausible-looking ring
     cache["slot_pos"] = jnp.asarray(sp)
-    cache["k"], cache["v"] = jnp.asarray(k), jnp.asarray(v)
+    cache["k"] = kvcache.retile_arena_leaf("k", jnp.asarray(k))
+    cache["v"] = kvcache.retile_arena_leaf("v", jnp.asarray(v))
     return jnp.asarray(q), cache, jnp.asarray(pos)
 
 
@@ -120,7 +124,7 @@ if HAS_HYPOTHESIS:
         _assert_kernel_is_oracle(q, cache, pos, scale=16 ** -0.5)
 
 
-@pytest.mark.parametrize("bt", [8, 16, 32])
+@pytest.mark.parametrize("bt", [4, 8, 16, 32])
 @pytest.mark.parametrize("heads", [(1, 1), (2, 4), (1, 8)])
 def test_paged_gqa_kernel_bit_identical_seeded(bt, heads):
     """Seeded sweep (hypothesis-free containers): random page tables ×
@@ -173,8 +177,8 @@ def test_paged_gqa_trash_block_never_read():
     q, cache, pos = _gqa_case(rng, B=2, MB=3, bt=8, Hkv=2, G=2, D=16,
                               Dv=16, trash_nan=True)
     clean = dict(cache)
-    clean["k"] = cache["k"].at[-1].set(0.0)
-    clean["v"] = cache["v"].at[-1].set(0.0)
+    clean["k"] = cache["k"].at[:, -1].set(0.0)    # block axis 1 (head-major)
+    clean["v"] = cache["v"].at[:, -1].set(0.0)
     a = ops.paged_gqa_decode(q, cache, pos, scale=0.25, impl="interpret")
     b = ops.paged_gqa_decode(q, clean, pos, scale=0.25, impl="ref")
     assert np.isfinite(np.asarray(a[0])).all()
@@ -336,8 +340,12 @@ def test_engine_paged_kernel_every_mode():
                                kv_gpu_ratio=0.25, policy=pol),
         "kernel_ewma": dict(reserve_mode="ewma", cache_tokens=100,
                             kv_paged=True, kv_gpu_ratio=0.25, policy=pol),
+        "kernel_bt4": dict(kv_paged=True, block_tokens=4,
+                           kv_gpu_ratio=0.25, policy=pol),
         "kernel_bt8": dict(kv_paged=True, block_tokens=8,
                            kv_gpu_ratio=0.25, policy=pol),
+        "kernel_bt32": dict(kv_paged=True, block_tokens=32,
+                            kv_gpu_ratio=0.25, policy=pol),
         "kernel_noprefetch": dict(kv_paged=True, kv_gpu_ratio=0.25,
                                   kv_prefetch=False, policy=pol),
     }
