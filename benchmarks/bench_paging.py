@@ -26,6 +26,18 @@ module_groups ∈ {1, 2, 4, 8} over an 8-group rotation, reporting the
 measured bytes/token amortization curve (one expert-span stream serves
 G groups' staged tokens per accumulation window).
 
+``--predict`` / ``--replicate`` sweep the intra-pass prediction +
+replication layer on a skewed workload (two prompt templates, 95% of
+requests on the first — the production-realistic regime the ROADMAP
+names): the PR 3 router-ahead lockstep baseline (frozen-snapshot
+accounting, no predictor) vs intra-pass accounting vs gate-predictor
+prefetch vs hot-expert replication, all at the tight budget.  Reports
+hit rate, expert-phase H2D bytes/token, the demand/router/predicted/
+replicated hit split, prefetch accuracy, and per-layer miss-stall
+bytes; ``accept_hit_and_bytes`` guards the acceptance bar (hit ≥ 0.7
+and ≥ 1.5× fewer expert-phase bytes/token than the PR 3 baseline —
+smoke runs get a small slack on the byte ratio).
+
 ``--smoke`` shrinks the workload for the nightly CI job, which uploads
 the emitted ``BENCH_paging.json`` as a workflow artifact.
 """
@@ -116,8 +128,119 @@ def run_module_sweep(cfg, params, smoke: bool) -> dict:
     }
 
 
+GUARD_MIN_HIT = 0.70        # acceptance: skewed hit rate at TIGHT_RW
+GUARD_MIN_RATIO = 1.5       # acceptance: expert-phase bytes/token vs PR 3
+GUARD_MIN_RATIO_SMOKE = 1.35  # slack for the shrunk nightly workload
+
+
+def run_predict_sweep(cfg, params, smoke: bool,
+                      predict: bool = True, replicate: bool = True) -> dict:
+    """Intra-pass prediction + replication sweep on a skewed workload:
+    16 requests drawn from two prompt templates with 95% of the mass on
+    the first — decode-heavy (gen ≫ prompt) so the expert weight stream
+    dominates and the popularity EWMA has a head worth pinning.
+
+    ``pr3_baseline`` reproduces PR 3's router-ahead lockstep exactly
+    (frozen-snapshot accounting, predictor off); ``intra`` turns on
+    intra-pass accounting (a demand-missed span streams once per chunk
+    and stays staged for the remaining passes); ``predict`` adds the
+    cross-layer gate predictor's prioritized prefetch; ``replicate``
+    pins popularity-top spans persistently; ``predict_replicate`` runs
+    both.  Transcripts must be bit-identical across all variants — the
+    mechanisms change *when* spans move, never *what* is computed."""
+    rng = np.random.default_rng(7)
+    n_req, gen = (8, 32) if smoke else (16, 48)
+    temps = [rng.integers(2, cfg.vocab_size, 6) for _ in range(2)]
+    requests = []
+    for _ in range(n_req):
+        t = temps[0] if rng.random() < 0.95 else temps[int(rng.integers(0, 2))]
+        requests.append((t, gen))
+
+    variants = {
+        "pr3_baseline": dict(predict=False, intra_pass=False),
+        "intra": dict(predict=False),
+    }
+    if predict:
+        variants["predict"] = dict()
+    if replicate:
+        variants["replicate"] = dict(predict=False, replicate_frac=0.5)
+    if predict and replicate:
+        variants["predict_replicate"] = dict(replicate_frac=0.5)
+
+    tok_key = ("tokens_per_s" if not backend_info()["interpret"]
+               else "wall_tokens_per_s_not_device_rate")
+    rows = {}
+    outs = {}
+    base = None
+    for name, kw in variants.items():
+        eng, out, toks, dt = _serve(
+            cfg, params, requests, decode_chunk=8,
+            expert_paged=True, w_gpu_ratio=TIGHT_RW, **kw)
+        outs[name] = out
+        t = eng.weight_traffic()
+        row = {
+            "tokens": toks,
+            tok_key: toks / dt,
+            "hit_rate": t["hit_rate"],
+            "h2d_bytes_per_token": t["h2d_bytes"] / max(1, toks),
+            "expert_phase_bytes_per_token":
+                t["expert_phase_bytes"] / max(1, toks),
+            "demand_hits": t["demand_hits"],
+            "router_hits": t["router_hits"],
+            "predicted_hits": t["predicted_hits"],
+            "replicated_hits": t["replicated_hits"],
+            "predicted_prefetches": t["predicted_prefetches"],
+            "predicted_used": t["predicted_used"],
+            "prefetch_accuracy": t["prefetch_accuracy"],
+            "predictor_accuracy": t["predictor_accuracy"],
+            "replications": t["replications"],
+            "replica_spans": t["replica_spans"],
+            "hidden_misses": t["hidden_misses"],
+            "stall_misses": t["stall_misses"],
+            "miss_stall_bytes": t["miss_stall_bytes"],
+            "miss_stall_bytes_per_layer": t["miss_stall_bytes_per_layer"],
+        }
+        if base is None:
+            base = row
+        row["expert_bytes_ratio_vs_pr3"] = (
+            base["expert_phase_bytes_per_token"]
+            / max(1.0, row["expert_phase_bytes_per_token"]))
+        rows[name] = row
+        emit(f"paging_predict_{name}", dt * 1e6,
+             f"hit_rate={row['hit_rate']:.3f},"
+             f"expert_bytes_per_tok={row['expert_phase_bytes_per_token']:.0f},"
+             f"ratio_vs_pr3={row['expert_bytes_ratio_vs_pr3']:.2f}x,"
+             f"pf_acc={row['prefetch_accuracy']:.2f}")
+
+    identical = all(outs[n] == outs["pr3_baseline"] for n in outs)
+    full = ("predict_replicate" if "predict_replicate" in rows
+            else "predict" if "predict" in rows
+            else "replicate" if "replicate" in rows else "intra")
+    min_ratio = GUARD_MIN_RATIO_SMOKE if smoke else GUARD_MIN_RATIO
+    accept = (rows[full]["hit_rate"] >= GUARD_MIN_HIT
+              and rows[full]["expert_bytes_ratio_vs_pr3"] >= min_ratio
+              and identical)
+    emit("paging_predict_accept", 0.0,
+         f"variant={full},hit={rows[full]['hit_rate']:.3f}"
+         f">={GUARD_MIN_HIT},"
+         f"ratio={rows[full]['expert_bytes_ratio_vs_pr3']:.2f}x"
+         f">={min_ratio},identical={identical},accept={accept}")
+    return {
+        "tight_w_gpu_ratio": TIGHT_RW,
+        "decode_chunk": 8,
+        "workload": {"n_req": n_req, "gen": gen, "templates": 2,
+                     "dominant_frac": 0.95, "seed": 7},
+        "greedy_identical": identical,
+        "guard": {"min_hit_rate": GUARD_MIN_HIT, "min_bytes_ratio": min_ratio,
+                  "variant": full},
+        "accept_hit_and_bytes": accept,
+        "variants": rows,
+    }
+
+
 def run(smoke: bool = False, out_path: str = "BENCH_paging.json",
-        module_batch: bool = False):
+        module_batch: bool = False, predict: bool = False,
+        replicate: bool = False):
     cfg = get_config("mixtral-8x7b").smoke()
     import dataclasses
     cfg = dataclasses.replace(cfg, dtype="float32")
@@ -175,6 +298,9 @@ def run(smoke: bool = False, out_path: str = "BENCH_paging.json",
          f"greedy_identical={report['greedy_identical']}")
     if module_batch:
         report["module_batch"] = run_module_sweep(cfg, params, smoke)
+    if predict or replicate:
+        report["predict"] = run_predict_sweep(
+            cfg, params, smoke, predict=predict, replicate=replicate)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     return report
@@ -188,7 +314,15 @@ if __name__ == "__main__":
                     help="also sweep module_groups in "
                          f"{MODULE_GROUPS_SWEEP} (8-group rotation) and "
                          "report the bytes/token amortization curve")
+    ap.add_argument("--predict", action="store_true",
+                    help="sweep the intra-pass gate-predictor prefetch on "
+                         "the skewed workload (predict section + "
+                         "hit-rate/bytes acceptance guard)")
+    ap.add_argument("--replicate", action="store_true",
+                    help="sweep hot-expert replication on the skewed "
+                         "workload (combines with --predict)")
     ap.add_argument("--out", default="BENCH_paging.json")
     args = ap.parse_args()
     run(smoke=args.smoke, out_path=args.out,
-        module_batch=args.module_batch)
+        module_batch=args.module_batch, predict=args.predict,
+        replicate=args.replicate)

@@ -3,6 +3,16 @@ per-(arch × shape × mesh) roofline table (terms in seconds, dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, roofline fraction).
 
   PYTHONPATH=src python -m benchmarks.roofline_report [--md] [--mesh ...]
+
+``--paging BENCH_paging.json`` instead reports per-layer expert
+miss-stall time from the paging bench's predict sweep: the stalled
+miss bytes each layer streamed synchronously (hidden misses excluded —
+their transfer overlapped the consuming dispatch's compute) divided by
+the HRM's cpu→gpu link bandwidth (the measured H2D rate when a
+BENCH_transfer.json artifact is present, else the preset).  This is
+the ROADMAP's "miss-stall time per layer on the roofline report":
+where expert I/O still bounds the pipeline after prediction +
+replication.
 """
 from __future__ import annotations
 
@@ -11,6 +21,48 @@ import json
 from pathlib import Path
 
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def paging_stall_table(paging_path, hw_name="l4", md=False,
+                       transfer_path="BENCH_transfer.json"):
+    """Per-(variant × layer) expert miss-stall time for the predict
+    sweep recorded in a BENCH_paging.json artifact."""
+    from repro.core import hrm as H
+    hw = H.with_measured_links(H.preset(hw_name), transfer_path)
+    bw = hw.link_bw("cpu", "gpu")
+    report = json.loads(Path(paging_path).read_text())
+    sweep = report.get("predict")
+    if not sweep:
+        print(f"{paging_path}: no predict sweep section "
+              "(rerun bench_paging with --predict/--replicate)")
+        return []
+    rows = []
+    for name, row in sweep["variants"].items():
+        per_layer = row.get("miss_stall_bytes_per_layer", {})
+        toks = max(1, row.get("tokens", 1))
+        for key, layers in per_layer.items():
+            for li, b in enumerate(layers):
+                rows.append((name, key, li, int(b),
+                             b / bw * 1e3, b / toks / bw * 1e6))
+        total = row.get("miss_stall_bytes", 0)
+        rows.append((name, "total", "-", int(total),
+                     total / bw * 1e3, total / toks / bw * 1e6))
+    hdr = ("variant", "weights", "layer", "stall_bytes",
+           "stall_ms", "stall_us_per_tok")
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for r in rows:
+            print("| " + " | ".join(
+                f"{c:.3f}" if isinstance(c, float) else str(c)
+                for c in r) + " |")
+    else:
+        print(",".join(hdr))
+        for r in rows:
+            print(",".join(f"{c:.3f}" if isinstance(c, float) else str(c)
+                           for c in r))
+    print(f"# link_bw={bw / 1e9:.1f} GB/s ({hw.name})")
+    return rows
 
 
 def load_records(dryrun_dir=DRYRUN_DIR):
@@ -63,7 +115,16 @@ def main():
     ap.add_argument("--md", action="store_true")
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--dir", default=str(DRYRUN_DIR))
+    ap.add_argument("--paging", default=None, metavar="BENCH_paging.json",
+                    help="report per-layer expert miss-stall time from a "
+                         "paging bench artifact instead of the dry-run table")
+    ap.add_argument("--hw", default="l4",
+                    help="HRM hardware preset for the link bandwidth "
+                         "(--paging mode)")
     args = ap.parse_args()
+    if args.paging:
+        paging_stall_table(args.paging, hw_name=args.hw, md=args.md)
+        return
     recs = load_records(Path(args.dir))
     table(recs, mesh=args.mesh, md=args.md)
 

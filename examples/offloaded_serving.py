@@ -31,6 +31,14 @@ run for ``--module-groups`` rotation groups back-to-back and each
 paged weight span streams once per accumulation window instead of once
 per group — omitting the flag runs BOTH schedules and prints lockstep
 vs module-batched H2D weight bytes/token.
+
+``--predict`` / ``--no-predict`` and ``--replicate-frac`` drive the
+MoE expert-paging epilogue (the 110M LM is dense, so this serves the
+mixtral smoke config with expert-granular paged weights at r_w=0.25 on
+a skewed two-template workload): intra-pass gate-predictor prefetch
+and hot-expert replication.  Omitting ``--predict`` runs BOTH the
+PR 3-style router-ahead baseline and the predict+replicate engine and
+prints the hit-rate and expert H2D bytes/token deltas.
 """
 import argparse
 import time
@@ -95,6 +103,17 @@ def main():
     ap.add_argument("--module-groups", type=int, default=None,
                     help="rotation groups per accumulation window "
                          "(default: num_ubs)")
+    # --predict / --no-predict; omit to run both and print the deltas
+    ap.add_argument("--predict", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="intra-pass gate-predictor prefetch in the MoE "
+                         "expert-paging epilogue; omit to run both the "
+                         "router-ahead baseline and predict+replicate "
+                         "and compare hit rate + bytes/token")
+    ap.add_argument("--replicate-frac", type=float, default=0.5,
+                    help="fraction of the residency pool pinned to the "
+                         "popularity-top experts in the MoE epilogue "
+                         "(0 disables replication)")
     args = ap.parse_args()
 
     print(f"params: {count_params(LM_110M) / 1e6:.1f}M")
@@ -190,6 +209,61 @@ def main():
         print(f"greedy transcripts identical across all "
               f"{len(outs)} weight/KV layouts: "
               f"{all(o == base for o in outs.values())}")
+
+    # 5. MoE expert-paging epilogue: intra-pass prediction + replication
+    #    (needs routed experts — LM_110M is dense, so this serves the
+    #    mixtral smoke config on a skewed two-template workload)
+    import dataclasses
+    from repro.configs import get_config
+    mcfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
+                               dtype="float32")
+    mparams = init_params(mcfg, jax.random.key(1))
+    mrng = np.random.default_rng(7)
+    temps = [mrng.integers(2, mcfg.vocab_size, 6) for _ in range(2)]
+    mreqs = []
+    for _ in range(16):
+        t = (temps[0] if mrng.random() < 0.95
+             else temps[int(mrng.integers(0, 2))])
+        mreqs.append((t, max(8, 2 * args.gen_len)))
+    if args.predict is None:
+        moe_variants = [("router-ahead baseline",
+                         dict(predict=False, intra_pass=False)),
+                        ("predict+replicate",
+                         dict(predict=True,
+                              replicate_frac=args.replicate_frac))]
+    else:
+        moe_variants = [("predict" if args.predict else "no-predict",
+                         dict(predict=args.predict,
+                              replicate_frac=args.replicate_frac))]
+    moe_rows = {}
+    moe_outs = {}
+    for name, kw in moe_variants:
+        eng = Engine(mcfg, mparams,
+                     EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                  decode_chunk=8, page_elems=4096,
+                                  expert_paged=True, w_gpu_ratio=0.25,
+                                  **kw))
+        for prompt, gen in mreqs:
+            eng.submit(prompt, gen)
+        out = eng.run_until_idle()
+        toks = sum(len(v) for v in out.values())
+        t = eng.weight_traffic()
+        moe_rows[name] = (t["hit_rate"],
+                          t["expert_phase_bytes"] / max(1, toks))
+        moe_outs[name] = out
+        print(f"MoE expert paging [{name}]: hit_rate={t['hit_rate']:.3f}, "
+              f"expert H2D bytes/tok="
+              f"{t['expert_phase_bytes'] / max(1, toks):.0f}, "
+              f"prefetch_accuracy={t['prefetch_accuracy']:.2f}, "
+              f"replica_spans={t['replica_spans']}")
+    if len(moe_rows) == 2:
+        (bh, bb), (ph, pb) = (moe_rows[n] for n, _ in moe_variants)
+        ident = (moe_outs[moe_variants[0][0]]
+                 == moe_outs[moe_variants[1][0]])
+        print(f"predict+replicate vs baseline: hit rate {bh:.3f} -> "
+              f"{ph:.3f} (+{ph - bh:.3f}), expert bytes/token "
+              f"{bb:.0f} -> {pb:.0f} ({bb / max(1.0, pb):.2f}x fewer), "
+              f"transcripts identical: {ident}")
 
 
 if __name__ == "__main__":

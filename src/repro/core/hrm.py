@@ -203,12 +203,16 @@ class LayerWorkload:
     kv_hit: Optional[float] = None  # measured device-hit fraction of KV
     # block touches (core.blockpool counters); None -> the r_c-linear
     # placement assumption (resident fraction == hit fraction)
+    predictor_accuracy: float = 0.0  # measured GatePredictor.acc (engine's
+    # weight_traffic()['predictor_accuracy']); feeds the intra-pass
+    # prefetch term of expert_hit_rate when the policy predicts
 
     @classmethod
     def decode(cls, cfg, batch: int, ctx: float, dtype_bytes: int = 2,
                experts_hit: Optional[float] = None, popularity=None,
                kv_hit: Optional[float] = None,
-               block_tokens: Optional[int] = None):
+               block_tokens: Optional[int] = None,
+               predictor_accuracy: float = 0.0):
         """``block_tokens``: set for the block-granular paged pool — the
         page-table-native decode kernels gather whole blocks, so the KV
         bytes touched per step round ``ctx`` up to the mapped-block
@@ -253,7 +257,7 @@ class LayerWorkload:
                    bytes_w_shared=bytes_w - w_expert * dtype_bytes,
                    bytes_w_expert=w_expert * dtype_bytes,
                    num_experts=num_experts, popularity=popularity,
-                   kv_hit=kv_hit)
+                   kv_hit=kv_hit, predictor_accuracy=predictor_accuracy)
 
     # Operational intensities (paper Definition 3.1)
     def intensity_attn_vs_kv(self) -> float:
@@ -286,35 +290,76 @@ def kv_block_hit_rate(kv_gpu_ratio: float, num_ubs: int = 1) -> float:
     return float(min(1.0, r * max(1, num_ubs)))
 
 
+def _top_mass(p, slots: float, num_experts: int) -> float:
+    """Retained routing mass when the hottest ``slots`` experts (fractional
+    slots prorated) of a normalized (rows, E) popularity matrix are
+    resident; averaged over rows."""
+    import numpy as np
+    k = int(slots)
+    frac = slots - k
+    srt = np.sort(p, axis=1)[:, ::-1]
+    hit = srt[:, :k].sum(axis=1)
+    if k < num_experts:
+        hit = hit + frac * srt[:, k]
+    return float(np.clip(hit.mean(), 0.0, 1.0))
+
+
 def expert_hit_rate(w_gpu_ratio: float, num_experts: int,
-                    popularity=None) -> float:
-    """Expected P(activated expert is device-resident) when the residency
-    cache (core.residency) pins the hottest ``⌊r_w·E⌋`` expert spans per
-    layer out of a pool sized by the policy's ``r_w``.
+                    popularity=None, predictor_accuracy: float = 0.0,
+                    predict_lookahead: int = 0,
+                    replicate_frac: Optional[float] = None) -> float:
+    """Expected P(activated expert span is on-device when its layer
+    dispatches) under the residency cache (core.residency) with a pool
+    sized by the policy's ``r_w``.
 
     Uniform routing → exactly ``r_w`` (the whole-layer model's implicit
     assumption).  A measured popularity vector — (E,) or per-layer
     (L, E), e.g. the residency EWMA table — → the retained top mass,
     which is ≥ r_w: skewed routing makes a small cache disproportionately
     effective, and this is precisely what lets the policy search trade
-    ``r_w`` against hit rate instead of against raw resident bytes."""
+    ``r_w`` against hit rate instead of against raw resident bytes.
+
+    ``replicate_frac`` (None = no replication, legacy model): a fraction
+    of the ``r_w·E`` slots is pinned persistently to the popularity-top
+    experts (hysteresis keeps them through window turnover), whose mass
+    always hits; the remaining non-pinned slots are modeled
+    conservatively as a uniform share of the residual mass — pinning
+    guarantees the head of the distribution at the cost of popularity
+    targeting in the tail, which is the trade ``policy.search`` sweeps.
+
+    ``predictor_accuracy`` (GatePredictor.acc) with
+    ``predict_lookahead ≥ 1``: intra-pass predicted prefetch converts a
+    would-be miss into a hit when the predictor called the expert and the
+    span landed in time — modeled as acc discounted by ℓ/(ℓ+1) (a
+    1-layer lookahead hides only spans whose transfer fits one layer's
+    compute; deeper lookahead approaches full overlap)."""
     import numpy as np
     r = min(max(w_gpu_ratio, 0.0), 1.0)
     if num_experts <= 0:
         return r
     if popularity is None:
-        return r
-    p = np.atleast_2d(np.asarray(popularity, float))
-    sums = p.sum(axis=1, keepdims=True)
-    uniform = np.full_like(p, 1.0 / num_experts)
-    p = np.where(sums > 0, p / np.maximum(sums, 1e-30), uniform)
-    k = int(r * num_experts)
-    frac = r * num_experts - k
-    srt = np.sort(p, axis=1)[:, ::-1]
-    hit = srt[:, :k].sum(axis=1)
-    if k < num_experts:
-        hit = hit + frac * srt[:, k]
-    return float(np.clip(hit.mean(), 0.0, 1.0))
+        p = np.full((1, num_experts), 1.0 / num_experts)
+    else:
+        p = np.atleast_2d(np.asarray(popularity, float))
+        sums = p.sum(axis=1, keepdims=True)
+        uniform = np.full_like(p, 1.0 / num_experts)
+        p = np.where(sums > 0, p / np.maximum(sums, 1e-30), uniform)
+    slots = r * num_experts
+    if replicate_frac is None:
+        hit = r if popularity is None else _top_mass(p, slots, num_experts)
+    else:
+        rf = min(max(float(replicate_frac), 0.0), 1.0)
+        rep_slots = rf * slots
+        m_rep = _top_mass(p, rep_slots, num_experts)
+        rest_experts = max(num_experts - rep_slots, 1e-9)
+        hit_rest = (1.0 - m_rep) * min(1.0, (slots - rep_slots)
+                                       / rest_experts)
+        hit = min(1.0, m_rep + hit_rest)
+    acc = min(max(float(predictor_accuracy), 0.0), 1.0)
+    la = max(int(predict_lookahead), 0)
+    if acc > 0.0 and la > 0:
+        hit = hit + (1.0 - hit) * acc * (la / (la + 1.0))
+    return float(np.clip(hit, 0.0, 1.0))
 
 
 # ---------------------------------------------------------------------------
@@ -375,8 +420,11 @@ def layer_latency(hw: Hardware, wl: LayerWorkload, policy) -> Dict[str, float]:
             # as before, but the routed-expert traffic is *expected
             # activated bytes × miss rate* — the residency cache absorbs
             # the hits, so r_w buys hit rate, not just resident bytes
-            hit = expert_hit_rate(policy.w_gpu_ratio, wl.num_experts,
-                                  wl.popularity)
+            hit = expert_hit_rate(
+                policy.w_gpu_ratio, wl.num_experts, wl.popularity,
+                predictor_accuracy=wl.predictor_accuracy,
+                predict_lookahead=getattr(policy, "predict_lookahead", 0),
+                replicate_frac=getattr(policy, "replicate_frac", None))
             w_from_cpu = (wl.bytes_w_shared * (1 - policy.w_gpu_ratio)
                           + wl.bytes_w_expert * (1 - hit)) / mg
         else:

@@ -356,6 +356,21 @@ def window_plan(n_items: int, n_ubs: int,
     return sorted({i for p in positions for i in plan[p % n_ubs]})
 
 
+def predicted_drain_order(pairs: Sequence[Tuple[int, int]],
+                          scores: Sequence[float]) -> List[int]:
+    """Earliest-deadline-first enqueue order for gate-predicted expert
+    spans: a span predicted for layer l is only useful if it lands
+    before the scan's layer-l step consumes it, so shallow layers
+    enqueue first (ties broken toward higher predicted probability).
+    The engine feeds the ordered entries into the same pending queue the
+    router-ahead prefetch drains through ``transfer_plan`` slices — the
+    slices interleave the H2D work between the rotation's compute steps,
+    and deadline order maximizes the spans that complete before their
+    consuming layer.  Returns indices into ``pairs``."""
+    return sorted(range(len(pairs)),
+                  key=lambda i: (pairs[i][0], -scores[i], pairs[i][1]))
+
+
 @dataclass
 class DoubleBuffer:
     """The 2×W_L weight buffer of Appendix A.1 (logical model; the JAX

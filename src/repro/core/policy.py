@@ -32,6 +32,15 @@ class Policy:
     # the HRM weight-traffic term amortizes by 1/G at the cost of a
     # G-deep routed-token staging buffer (memory_usage charges it).
     module_groups: int = 1
+    # intra-pass predictive prefetch: layers of gate-predictor lookahead
+    # (0 = off).  ℓ ≥ 1 lets predicted spans stream while earlier layers
+    # compute (expert_hit_rate's predictor term), at the cost of an
+    # ℓ-deep in-flight span staging charge (memory_usage).
+    predict_lookahead: int = 0
+    # hot-expert replication: fraction of the r_w·E residency slots
+    # pinned persistently to the popularity-top experts (None = no
+    # replication — the legacy pure-LRU/EWMA model).
+    replicate_frac: Optional[float] = None
 
     @property
     def num_ubs(self) -> int:
@@ -84,6 +93,13 @@ def memory_usage(cfg: ModelConfig, wl: Workload, pol: Policy,
         # executed (gather input + scatter output, hence the 2×)
         gpu += 2 * mg * pol.ubatch * max(cfg.top_k, 1) * cfg.d_model \
             * dtype_bytes
+    la = max(0, int(getattr(pol, "predict_lookahead", 0) or 0))
+    if la > 0 and cfg.is_moe:
+        # predicted spans stream ahead of their layer: up to ℓ layers ×
+        # top-k expert spans are in flight (pinned, not yet chargeable to
+        # the resident pool) at any point of the pass
+        gpu += la * max(cfg.top_k, 1) * 3 * cfg.d_model * (cfg.d_ff or 0) \
+            * dtype_bytes
     if pol.attn_on_gpu:
         gpu += (1 - pol.kv_gpu_ratio) * kv_total / max(cfg.num_layers, 1) * 2
     cpu = ((1 - pol.w_gpu_ratio) * W_total
@@ -101,7 +117,8 @@ def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
              dtype_bytes: int = 2, expert_popularity=None,
              kv_hit_rate: Optional[float] = None,
              kv_paged: bool = False,
-             block_tokens: Optional[int] = None) -> Dict[str, float]:
+             block_tokens: Optional[int] = None,
+             predictor_accuracy: float = 0.0) -> Dict[str, float]:
     """Per-layer decode latency (Eq. 12) and end-to-end generation
     throughput (tokens/s) including prefill amortization.
 
@@ -121,13 +138,19 @@ def estimate(cfg: ModelConfig, hw: H.Hardware, wl: Workload, pol: Policy,
     block_tokens: block size of the paged pool — the page-table-native
     decode kernels gather whole blocks, so the touched-KV term rounds
     the context up to the mapped-block footprint (matching the engine's
-    gathered-bytes counters)."""
+    gathered-bytes counters).
+
+    predictor_accuracy: measured GatePredictor accuracy (the engine's
+    weight_traffic()['predictor_accuracy']) — with
+    pol.predict_lookahead ≥ 1 the expert-traffic term credits intra-pass
+    predicted prefetch (H.expert_hit_rate's predictor term)."""
     kv_hit = kv_hit_rate
     if kv_hit is None and kv_paged:
         kv_hit = H.kv_block_hit_rate(pol.kv_gpu_ratio, pol.num_ubs)
     lw = H.LayerWorkload.decode(cfg, pol.batch, wl.avg_ctx, dtype_bytes,
                                 popularity=expert_popularity,
-                                kv_hit=kv_hit, block_tokens=block_tokens)
+                                kv_hit=kv_hit, block_tokens=block_tokens,
+                                predictor_accuracy=predictor_accuracy)
     lat = H.layer_latency(hw, lw, pol)
     t_layer = lat["t_layer"]
     # prefill: compute-bound on the accelerator, overlapped with weight
@@ -157,6 +180,8 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
            expert_popularity=None, kv_paged: bool = False,
            block_tokens: Optional[int] = None,
            module_groups_grid=(1,),
+           predict_grid=(0,), replicate_grid=(None,),
+           predictor_accuracy: float = 0.0,
            bench_path: Optional[str] = None) -> Dict:
     """Exact enumeration over the 6-tuple.  Returns the best feasible
     policy and its estimate; also the best with attention forced to each
@@ -179,7 +204,17 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
     amortizes the weight-traffic term by 1/G at the cost of a staging
     buffer (memory_usage).  The default grid (1,) keeps the classic
     lockstep search — opt in with e.g. ``module_groups_grid=(1, 2, 4)``;
-    G is capped at num_ubs (there must be G groups to accumulate)."""
+    G is capped at num_ubs (there must be G groups to accumulate).
+
+    ``predict_grid`` / ``replicate_grid`` widen the search over the
+    intra-pass prediction + replication layer: lookahead ℓ credits the
+    expert-traffic term with predicted-prefetch hits (discounted by the
+    measured ``predictor_accuracy``) but charges an ℓ-deep in-flight
+    span staging buffer; replicate_frac pins top-mass persistently at
+    the cost of popularity targeting in the tail — the search trades
+    both against r_w/r_c on the same memory budget.  Defaults keep the
+    legacy search; opt in with e.g. ``predict_grid=(0, 1, 2),
+    replicate_grid=(None, 0.25, 0.5)``."""
     if bench_path is not None:
         # swap the spec-sheet cpu↔gpu link for the measured H2D bandwidth
         # (benchmarks/bench_transfer.py artifact) before enumerating — the
@@ -195,17 +230,22 @@ def search(cfg: ModelConfig, hw: H.Hardware, wl: Workload,
         N = ub * mult
         for rw in (ratio_grid if fg else (0.0,)):
             for rc in (ratio_grid if ag else (0.0,)):
-                for mg in (module_groups_grid if fg else (1,)):
+                for mg, la, rf in itertools.product(
+                        module_groups_grid if fg else (1,),
+                        predict_grid if fg else (0,),
+                        replicate_grid if fg else (None,)):
                     if mg > max(1, N // ub):
                         continue
-                    pol = Policy(N, ub, ag, fg, rw, rc, module_groups=mg)
+                    pol = Policy(N, ub, ag, fg, rw, rc, module_groups=mg,
+                                 predict_lookahead=la, replicate_frac=rf)
                     mem = memory_usage(cfg, wl, pol, dtype_bytes)
                     if mem["gpu"] > gpu_cap or mem["cpu"] > cpu_cap:
                         continue
                     est = estimate(cfg, hw, wl, pol, dtype_bytes,
                                    expert_popularity=expert_popularity,
                                    kv_paged=kv_paged,
-                                   block_tokens=block_tokens)
+                                   block_tokens=block_tokens,
+                                   predictor_accuracy=predictor_accuracy)
                     cand = {"policy": pol, **est, "mem_gpu": mem["gpu"],
                             "mem_cpu": mem["cpu"]}
                     if best is None or cand["throughput"] > best["throughput"]:

@@ -127,6 +127,32 @@ class EngineConfig:
     residency_alpha: float = 0.25     # expert-popularity EWMA step
     residency_victim_quota: int = 1   # demand misses may evict this many
                                       # victims per chunk (cold-start aid)
+    # intra-pass predictive prefetch: a per-layer-transition logistic
+    # gate predictor (core.residency.GatePredictor, fit online on the
+    # scan's activation counts) scores the experts the dispatching
+    # group's NEXT chunk will activate at layers i+1..i+lookahead, and
+    # enqueues the non-resident ones into the same transfer_plan-sliced
+    # pending queue as the router-ahead prefetch (first-come dedupe).
+    # Gated under the master `prefetch` switch: prefetch=False disables
+    # every lookahead path.
+    predict: bool = True
+    predict_lookahead: int = 2        # layer shifts predicted per dispatch
+    predict_topk: Optional[int] = None  # experts kept per predicted layer
+                                      # (default: source activation breadth)
+    # intra-pass transfer draining: the pending queue's transfer_plan
+    # slices drain BETWEEN the forward passes of one dispatched chunk,
+    # so (a) a span the in-flight drain admitted is resident from the
+    # chunk's second pass onward, and (b) a demand-missed span streams
+    # once and stays staged for the rest of the chunk (later passes hit
+    # instead of re-streaming it every step — the PR 3 lockstep model).
+    # False restores the frozen-snapshot accounting (the router-ahead
+    # baseline the predict/replicate bench sweep compares against).
+    intra_pass: bool = True
+    # hot-expert replication: this fraction of the residency pool may be
+    # pinned persistently to the popularity-EWMA top spans (hysteresis
+    # exit at replica_exit × the enter bar) — see ExpertResidency
+    replicate_frac: float = 0.0
+    replica_exit: float = 0.5
     # ---------------------------------------- block-granular paged KV (r_c)
     kv_paged: bool = False            # shared block arena + page tables
     block_tokens: int = 16            # ring positions per KV block
@@ -195,8 +221,16 @@ class Engine:
         # -------------------------------- expert-granular paged weights
         self.residency: Dict[str, residency.ExpertResidency] = {}
         self._expert_pool: Dict[str, jax.Array] = {}
-        self._pending: List[Tuple[str, int, int]] = []   # prefetch queue
+        # prefetch queue entries are (key, layer, expert, cause,
+        # priority) with cause ∈ {"router", "predicted"}; the dedupe set
+        # keys on (key, layer, expert) so the two lookahead paths never
+        # enqueue (hence never fetch) the same span twice — router-ahead
+        # enqueues first and wins ties.  priority (predicted score ×
+        # predictor accuracy; None for router entries) feeds the
+        # residency victim test — see ExpertResidency.admit
+        self._pending: List[Tuple[str, int, int, str, Optional[float]]] = []
         self._pending_set: set = set()
+        self._predictors: Dict[str, residency.GatePredictor] = {}
         self._fwd_passes = 0          # forward passes dispatched (traffic)
         if ecfg.expert_paged:
             pw = paging.pack_block_groups_split(params["blocks"],
@@ -213,7 +247,13 @@ class Engine:
                 self.residency[key] = residency.ExpertResidency(
                     em.num_layers, em.num_experts, capacity=slots,
                     span_bytes=em.span_bytes, alpha=ecfg.residency_alpha,
-                    victim_quota=ecfg.residency_victim_quota)
+                    victim_quota=ecfg.residency_victim_quota,
+                    replicate_frac=ecfg.replicate_frac,
+                    replica_exit=ecfg.replica_exit,
+                    protect_ttl=max(2, ecfg.num_ubs))
+                if ecfg.predict and ecfg.prefetch:
+                    self._predictors[key] = residency.GatePredictor(
+                        em.num_layers, em.num_experts)
                 self._expert_pool[key] = jnp.zeros(
                     (max(1, slots), em.pages_per_expert, em.page_elems),
                     pw.expert_pages[key].dtype)
@@ -469,13 +509,35 @@ class Engine:
                 for k, r in self.residency.items()}
 
     def _account_counts(self, counts, holder=None, snap=None,
-                        holders=None) -> None:
+                        holders=None, hidden=None) -> None:
         """Book a call's expert activation counts ({key: (..., P, E)}):
         per forward pass, hits/misses against the residency snapshot the
         pass actually read, then demand-admit the missed spans — hottest
         first, so the miss stream doubles as cache fill.  Updates
         `holder.pred` with the last pass's gating (the router-ahead
         prediction for that group's next chunk).
+
+        ``hidden`` ({key: (L, E) bool}) marks the spans whose prefetch
+        landed *while this call was in flight* (captured right after the
+        sync, before the post-landing drain): a miss on such a span paid
+        its bytes but its stream overlapped the dispatched compute, so
+        it books as a hidden (stall-free) miss — the per-layer residue
+        is the miss-stall estimate ``weight_traffic()`` reports.
+
+        Each booked forward pass also takes one online SGD step of the
+        cross-layer gate predictor (host numpy — no retrace), and, when
+        replication is on, the replica set is reconciled against the
+        refreshed popularity EWMA (promotions copy their spans in).
+
+        With ``intra_pass`` the working resident mask evolves ACROSS the
+        chunk's passes instead of staying the frozen dispatch snapshot:
+        a demand-missed span streams once and stays staged for the rest
+        of the chunk (later passes hit it — the pending queue's
+        transfer_plan slices drain between the scan's passes, and the
+        pass-local staging buffer holds what already streamed), and the
+        spans the in-flight drain admitted count resident from the
+        second pass onward.  This changes only WHEN bytes are charged —
+        the computation reads identical weights either way.
 
         With ``holders`` (a module-batched window) the count arrays carry
         a group axis ({key: (..., P, G, E)}): each forward pass books ONE
@@ -488,26 +550,47 @@ class Engine:
             r.begin_chunk()          # refresh the demand-evict victim quota
             a = np.asarray(arr)
             mask = snap[key] if snap is not None else None
+            hid = hidden.get(key) if hidden is not None else None
+            gp = self._predictors.get(key)
+            intra = self.ecfg.intra_pass and mask is not None
+            cur = mask.copy() if intra else mask
             want: Dict[Tuple[int, int], bool] = {}
+
+            def book(si, observe_fn, activated, token_counts):
+                nonlocal cur
+                if intra and si == 1 and hid is not None:
+                    # in-flight admissions have landed by the second pass
+                    cur = cur | hid
+                missed = observe_fn(activated, token_counts=token_counts,
+                                    resident_mask=cur, hidden_mask=hid)
+                for pair in missed:
+                    want[pair] = True
+                    if intra:
+                        # streamed once, staged for the rest of the chunk
+                        cur[pair] = True
+
             if holders is not None:
                 steps = a.reshape(-1, *a.shape[-3:])      # (n_fwd, P, G, E)
-                for s in steps:
+                for si, s in enumerate(steps):
                     per_g = np.moveaxis(s, 1, 0)          # (G, P, E)
-                    for pair in r.observe_window(per_g > 0,
-                                                 token_counts=per_g,
-                                                 resident_mask=mask):
-                        want[pair] = True
+                    book(si, r.observe_window, per_g > 0, per_g)
+                    if gp is not None:
+                        for g_counts in per_g:            # fit per group
+                            gp.fit_step(g_counts)
             else:
                 steps = a.reshape(-1, *a.shape[-2:])      # (n_fwd, P, E)
-                for s in steps:
-                    for pair in r.observe(s > 0, token_counts=s,
-                                          resident_mask=mask):
-                        want[pair] = True
+                for si, s in enumerate(steps):
+                    book(si, r.observe, s > 0, s)
+                    if gp is not None:
+                        gp.fit_step(s)
             for l, e in want:
                 # misses fill free slots only; popularity-driven
                 # replacement is the router-ahead prefetch path's job
                 slot = r.admit(l, e, demand=True, allow_evict=False)
                 if slot is not None:
+                    self._copy_span(key, l, e, slot)
+            if r.replicate_frac > 0.0:
+                for l, e, slot in r.update_replicas():
                     self._copy_span(key, l, e, slot)
             if holder is not None:
                 holder.pred[key] = steps[-1] > 0
@@ -540,7 +623,42 @@ class Engine:
                 for p in pairs:
                     t = (key, *p)
                     if t not in self._pending_set:
-                        self._pending.append(t)
+                        self._pending.append((*t, "router", None))
+                        self._pending_set.add(t)
+
+    def _enqueue_gate_predictions(self, holders) -> None:
+        """Intra-pass lookahead: from each dispatching holder's last
+        observed gating, the cross-layer GatePredictor scores the experts
+        layers i+1..i+lookahead will activate in that holder's NEXT chunk
+        and queues the non-resident ones earliest-deadline-first
+        (``paging.predicted_drain_order`` — a span must land before the
+        scan's consuming layer step).  The entries join the SAME pending
+        queue as the router-ahead group-j+1 prefetch and dedupe against
+        it first-come (router-ahead enqueues first), so a span predicted
+        by both paths is fetched exactly once.  Predicted admissions are
+        eviction-protected until first use (residency ``protect_ttl``)."""
+        for h in holders:
+            for key, act in h.pred.items():
+                gp = self._predictors.get(key)
+                if gp is None:
+                    continue
+                r = self.residency[key]
+                preds = gp.predict(act,
+                                   lookahead=self.ecfg.predict_lookahead,
+                                   topk=self.ecfg.predict_topk)
+                pairs = [(l, e) for l, e, _ in preds]
+                scores = [s for _, _, s in preds]
+                for i in paging.predicted_drain_order(pairs, scores):
+                    l, e = pairs[i]
+                    if r.is_resident(l, e):
+                        continue
+                    t = (key, l, e)
+                    if t not in self._pending_set:
+                        # short-horizon priority: the predicted
+                        # activation probability discounted by the
+                        # predictor's measured accuracy
+                        self._pending.append(
+                            (*t, "predicted", scores[i] * gp.acc))
                         self._pending_set.add(t)
 
     def _plan_slice(self, pending: List, gid) -> Tuple[List, List]:
@@ -567,17 +685,18 @@ class Engine:
             return
         chosen, keep = self._plan_slice(self._pending, gid)
         requeued = []
-        for key, l, e in chosen:
+        for key, l, e, cause, pri in chosen:
             r = self.residency[key]
             if r.is_resident(l, e):
                 self._pending_set.discard((key, l, e))
                 continue
-            slot = r.admit(l, e)      # prefetch: charges span bytes
+            # prefetch: charges span bytes
+            slot = r.admit(l, e, cause=cause, priority=pri)
             if slot is not None:
                 self._copy_span(key, l, e, slot)
                 self._pending_set.discard((key, l, e))
             elif retry_refused:
-                requeued.append((key, l, e))
+                requeued.append((key, l, e, cause, pri))
             else:
                 self._pending_set.discard((key, l, e))
         self._pending = keep + requeued
@@ -612,6 +731,7 @@ class Engine:
             c = [r.counters for r in self.residency.values()]
             misses = sum(x.misses for x in c)
             lockstep = sum(x.lockstep_misses for x in c)
+            pred_pf = sum(x.predicted_prefetches for x in c)
             out.update(
                 mode="expert_paged",
                 shared_bytes=shared * self._fwd_passes,
@@ -622,6 +742,34 @@ class Engine:
                 evictions=sum(x.evictions for x in c),
                 hit_rate=(sum(x.hits for x in c)
                           / max(1, sum(x.fetches for x in c))),
+                # hit attribution by staging cause (sums to hits) and the
+                # predictor/replication observability the policy consumes
+                demand_hits=sum(x.demand_hits for x in c),
+                router_hits=sum(x.router_hits for x in c),
+                predicted_hits=sum(x.predicted_hits for x in c),
+                replicated_hits=sum(x.replicated_hits for x in c),
+                predicted_prefetches=pred_pf,
+                predicted_used=sum(x.predicted_used for x in c),
+                prefetch_accuracy=(sum(x.predicted_used for x in c)
+                                   / max(1, pred_pf)),
+                predictor_accuracy=(
+                    float(np.mean([gp.acc
+                                   for gp in self._predictors.values()]))
+                    if self._predictors else 0.0),
+                replications=sum(x.replications for x in c),
+                replica_spans=sum(len(r.replicas)
+                                  for r in self.residency.values()),
+                # stall split: misses whose stream hid behind the
+                # consuming dispatch's compute vs those that stalled it,
+                # with the stalled bytes resolved per layer (the roofline
+                # report divides by link bandwidth for stall time)
+                hidden_misses=sum(x.hidden_misses for x in c),
+                stall_misses=sum(x.stall_misses for x in c),
+                miss_stall_bytes=int(sum(r.miss_stall_bytes.sum()
+                                         for r in self.residency.values())),
+                miss_stall_bytes_per_layer={
+                    k: [int(b) for b in r.miss_stall_bytes]
+                    for k, r in self.residency.items()},
                 # what whole-layer streaming would have moved for the
                 # same passes (shared + every expert span every layer)
                 whole_layer_bytes=(shared + expert_full) * self._fwd_passes,
@@ -898,17 +1046,27 @@ class Engine:
                            and self.groups)
             if prefetching:
                 # in flight: fill free slots for group gid+1's predicted
-                # set (H2D overlaps the dispatched compute)
+                # set (H2D overlaps the dispatched compute), then the
+                # gate predictor's intra-pass lookahead for THIS group's
+                # next chunk (deduped against the router-ahead entries)
                 self._enqueue_prediction(gid)
+                if self._predictors and holder is not None:
+                    self._enqueue_gate_predictions([holder])
                 self._drain_prefetch(gid, retry_refused=True)
             res = (cache, np.array(tok)[:, 0], np.asarray(act2),
                    np.asarray(toks), np.asarray(emitted))   # sync
+            # spans that became resident between dispatch and landing:
+            # their H2D stream overlapped this chunk's compute, so a
+            # miss on them is a hidden (stall-free) miss
+            hidden = {k: ((r.slot_of >= 0) & ~snap[k])
+                      for k, r in self.residency.items()}
             for r in self.residency.values():
                 r.unpin_all()
             if prefetching:
                 # landed: retry the refused slice, evictions now allowed
                 self._drain_prefetch(gid, retry_refused=False)
-            self._account_counts(counts, holder=holder, snap=snap)
+            self._account_counts(counts, holder=holder, snap=snap,
+                                 hidden=hidden)
             return res
         cache, tok, act2, _, toks, emitted = self._decode_chunk(*args)
         return (cache, np.array(tok)[:, 0], np.asarray(act2),
@@ -941,14 +1099,19 @@ class Engine:
             prefetching = bool(self.ecfg.prefetch and self.groups)
             if prefetching:
                 self._enqueue_prediction(gids)
+                if self._predictors:
+                    self._enqueue_gate_predictions(holders)
                 self._drain_prefetch(gids, retry_refused=True)
             res = (cache, np.array(tok)[:, 0], np.asarray(act2),
                    np.asarray(toks), np.asarray(emitted))   # sync
+            hidden = {k: ((r.slot_of >= 0) & ~snap[k])
+                      for k, r in self.residency.items()}
             for r in self.residency.values():
                 r.unpin_all()
             if prefetching:
                 self._drain_prefetch(gids, retry_refused=False)
-            self._account_counts(counts, holders=holders, snap=snap)
+            self._account_counts(counts, holders=holders, snap=snap,
+                                 hidden=hidden)
             return res
         cache, tok, act2, _, toks, emitted = self._decode_window_fn(*args)
         return (cache, np.array(tok)[:, 0], np.asarray(act2),

@@ -6,10 +6,13 @@ admission at several prefill-chunk widths, EOS-aware (EWMA)
 reservations with recompute preemption under a tight budget, and (on
 the MoE config) the paged weight layouts: whole-layer streaming and
 expert-granular residency in hit-heavy / miss-heavy / prefetch-off
-regimes, plus module-based batching (decoupled attention/expert phases
-accumulating num_ubs rotation groups per expert-weight stream) in every
-combination — continuous, static, overlap, kv-paged, expert-paged, and
-the staging-capacity fallback.  A small instance runs in the fast CI subset; the wide sweep
+regimes, module-based batching (decoupled attention/expert phases
+accumulating num_ubs rotation groups per expert-weight stream), and the
+intra-pass prediction + replication layer (gate-predictor prefetch,
+intra-pass accounting, hot-expert replication — on × off × module-batch
+× kv-paged × overlap × static) in every combination — continuous,
+static, overlap, kv-paged, expert-paged, and the staging-capacity
+fallback.  A small instance runs in the fast CI subset; the wide sweep
 (more seeds, chunk sizes 1/4/8, early-EOS round, paged sweeps) carries
 the `slow` marker."""
 import dataclasses
@@ -103,6 +106,12 @@ def test_paged_expert_transcripts_identical_fast(moe_setup):
         "expert_module": dict(decode_chunk=4, expert_paged=True,
                               page_elems=4096, w_gpu_ratio=0.25,
                               module_batch=True),
+        "expert_nopredict": dict(decode_chunk=4, expert_paged=True,
+                                 page_elems=4096, w_gpu_ratio=0.25,
+                                 predict=False, intra_pass=False),
+        "expert_replicate": dict(decode_chunk=4, expert_paged=True,
+                                 page_elems=4096, w_gpu_ratio=0.25,
+                                 replicate_frac=0.5),
     })
 
 
@@ -141,6 +150,36 @@ def test_paged_expert_transcripts_identical_sweep(moe_setup, seed):
         "expert_module_noprefetch": dict(decode_chunk=4, expert_paged=True,
                                          page_elems=4096, w_gpu_ratio=0.25,
                                          prefetch=False, module_batch=True),
+        # intra-pass prediction + replication: on x off x module-batch x
+        # kv-paged x overlap x static — WHEN spans move must never change
+        # WHAT is computed
+        "expert_nopredict": dict(decode_chunk=4, expert_paged=True,
+                                 page_elems=4096, w_gpu_ratio=0.25,
+                                 predict=False),
+        "expert_pr3_accounting": dict(decode_chunk=4, expert_paged=True,
+                                      page_elems=4096, w_gpu_ratio=0.25,
+                                      predict=False, intra_pass=False),
+        "expert_replicate": dict(decode_chunk=4, expert_paged=True,
+                                 page_elems=4096, w_gpu_ratio=0.25,
+                                 predict=False, replicate_frac=0.5),
+        "expert_predict_replicate": dict(decode_chunk=4, expert_paged=True,
+                                         page_elems=4096, w_gpu_ratio=0.25,
+                                         replicate_frac=0.5),
+        "expert_predict_module": dict(decode_chunk=4, expert_paged=True,
+                                      page_elems=4096, w_gpu_ratio=0.25,
+                                      replicate_frac=0.5,
+                                      module_batch=True),
+        "expert_predict_kv": dict(decode_chunk=4, expert_paged=True,
+                                  page_elems=4096, w_gpu_ratio=0.25,
+                                  replicate_frac=0.5, kv_paged=True,
+                                  kv_gpu_ratio=0.25),
+        "expert_predict_overlap": dict(overlap=True, prefill_chunk=8,
+                                       decode_chunk=4, expert_paged=True,
+                                       page_elems=4096, w_gpu_ratio=0.25,
+                                       replicate_frac=0.5),
+        "expert_predict_static": dict(mode="static", expert_paged=True,
+                                      page_elems=4096, w_gpu_ratio=0.25,
+                                      replicate_frac=0.5),
     })
 
 

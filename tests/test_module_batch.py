@@ -191,7 +191,11 @@ def test_module_batch_halves_expert_traffic(moe_cfg):
     cfg, params = moe_cfg
     work = _decode_heavy_workload(cfg, seed=0, n=16)
     kw = dict(ubatch=4, num_ubs=4, max_seq=64, decode_chunk=4,
-              expert_paged=True, page_elems=4096, w_gpu_ratio=0.25)
+              expert_paged=True, page_elems=4096, w_gpu_ratio=0.25,
+              # pin the PR 3 comparator: intra-pass accounting and the
+              # gate predictor (PR 8, default-on) shrink the lockstep
+              # side's traffic and would understate the amortization
+              predict=False, intra_pass=False)
     base, eng_l = _serve(cfg, params, work, **kw)
     windowed, eng_w = _serve(cfg, params, work, module_batch=True,
                              module_groups=4, **kw)

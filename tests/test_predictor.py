@@ -1,0 +1,235 @@
+"""Intra-pass prediction + replication properties: GatePredictor
+online-fit convergence on a synthetic permutation-structured gate
+(hypothesis + seeded fallback), replica pinning/hysteresis under
+admission pressure, EDF ordering of predicted transfers, and the
+engine-level guarantee that predicted prefetch dedupes against the
+router-ahead queue — a span wanted by both paths is fetched once."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.core import paging, residency
+
+
+# ---------------------------------------------------------------------------
+# GatePredictor: online-fit convergence on a permutation gate
+# ---------------------------------------------------------------------------
+
+def _run_permutation_trajectory(seed, n_steps=80):
+    """Synthetic skewed gate with exact cross-layer structure: expert e
+    active at layer i ⇒ expert perm[e] active at layer i+1, cyclically
+    across passes (layer L-1 of pass t seeds layer 0 of pass t+1) — the
+    deterministic analogue of an aligned decode trajectory.  The
+    predictor must learn every head, including the wrap head, to score
+    well."""
+    rng = np.random.default_rng(seed)
+    L, E = 3, 8
+    perm = rng.permutation(E)
+    gp = residency.GatePredictor(L, E)
+
+    def step_fwd(vec):
+        nxt = np.zeros_like(vec)
+        nxt[perm[vec > 0]] = 1.0
+        return nxt
+
+    cur0 = np.zeros(E)
+    cur0[rng.choice(E, 2, replace=False)] = 1.0
+    counts = None
+    for _ in range(n_steps):
+        counts = np.zeros((L, E))
+        counts[0] = cur0
+        for i in range(1, L):
+            counts[i] = step_fwd(counts[i - 1])
+        gp.fit_step(counts)
+        cur0 = step_fwd(counts[L - 1])      # next pass re-enters layer 0
+    return gp, perm, counts
+
+
+def _check_convergence(seed):
+    gp, perm, counts = _run_permutation_trajectory(seed)
+    assert gp.acc >= 0.9, f"predictor failed to converge: acc={gp.acc:.3f}"
+    # shift-1 predictions reproduce the permutation for every layer,
+    # wrap included: active experts at layer i predict perm[e] at
+    # (i+1) % L
+    preds = gp.predict(counts, lookahead=1)
+    by_layer = {}
+    for l, e, _ in preds:
+        by_layer.setdefault(l, set()).add(e)
+    L = counts.shape[0]
+    for i in range(L):
+        expected = {int(perm[e]) for e in np.flatnonzero(counts[i] > 0)}
+        assert by_layer.get((i + 1) % L, set()) == expected
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_predictor_converges_on_permutation_gate(seed):
+        _check_convergence(seed)
+
+
+def test_predictor_converges_on_permutation_gate_seeded():
+    for seed in range(8):
+        _check_convergence(seed)
+
+
+def test_predictor_lookahead_chains_permutation():
+    """Shift-2 scores must cover the two-steps-ahead experts — the
+    "stream layer i+2 while layer i computes" claim."""
+    gp, perm, counts = _run_permutation_trajectory(11)
+    L = counts.shape[0]
+    preds = gp.predict(counts, lookahead=2)
+    by_layer = {}
+    for l, e, _ in preds:
+        by_layer.setdefault(l, set()).add(e)
+    for i in range(L):
+        two_ahead = {int(perm[perm[e]])
+                     for e in np.flatnonzero(counts[i] > 0)}
+        assert two_ahead <= by_layer.get((i + 2) % L, set())
+
+
+def test_predictor_accuracy_is_pre_update():
+    """The first fit_step scores an untrained head — accuracy must
+    reflect chance, not the post-update weights."""
+    gp = residency.GatePredictor(2, 8)
+    counts = np.zeros((2, 8))
+    counts[0, 0] = counts[1, 3] = 1.0
+    gp.fit_step(counts)
+    assert gp.acc <= 0.5
+
+
+# ---------------------------------------------------------------------------
+# EDF ordering of predicted transfers
+# ---------------------------------------------------------------------------
+
+def test_predicted_drain_order_is_edf():
+    """Earliest consuming layer first (the deadline), higher score first
+    within a layer, expert index as the deterministic tiebreak."""
+    pairs = [(2, 1), (0, 5), (1, 2), (0, 3), (1, 7)]
+    scores = [0.9, 0.2, 0.8, 0.7, 0.8]
+    order = paging.predicted_drain_order(pairs, scores)
+    assert [pairs[i] for i in order] == [
+        (0, 3), (0, 5), (1, 2), (1, 7), (2, 1)]
+
+
+# ---------------------------------------------------------------------------
+# Replication: pinning, budget, hysteresis
+# ---------------------------------------------------------------------------
+
+def _hot(E, *idx):
+    m = np.zeros((1, E), bool)
+    for i in idx:
+        m[0, i] = True
+    return m
+
+
+def test_replicas_pin_top_experts_and_survive_pressure():
+    r = residency.ExpertResidency(1, 8, capacity=4, span_bytes=8,
+                                  replicate_frac=0.5, replica_warmup=0)
+    assert r.replica_budget == 2
+    for _ in range(10):
+        r.begin_chunk()
+        r.observe(_hot(8, 0, 1))
+        r.update_replicas()
+    assert {int(p) for p in r.replicas} == {0, 1}
+    assert r.is_resident(0, 0) and r.is_resident(0, 1)
+    # admission pressure fills the rest of the pool and then tries to
+    # evict — replicas must never be the victim
+    for e in (2, 3, 4, 5):
+        r.admit(0, e, demand=True)
+    assert r.is_resident(0, 0) and r.is_resident(0, 1)
+    assert {int(p) for p in r.replicas} == {0, 1}
+
+
+def test_replica_hysteresis_demotes_cooled_expert():
+    """A replica whose popularity falls below replica_exit × the entry
+    threshold loses its pin (stays resident, demand-evictable) and the
+    newly-hot expert takes the slot."""
+    r = residency.ExpertResidency(1, 8, capacity=4, span_bytes=8,
+                                  replicate_frac=0.5, replica_warmup=0,
+                                  replica_exit=0.5)
+    for _ in range(10):
+        r.begin_chunk()
+        r.observe(_hot(8, 0, 1))
+        r.update_replicas()
+    assert {int(p) for p in r.replicas} == {0, 1}
+    # expert 1 cools, expert 2 heats: hysteresis swaps the pin
+    for _ in range(40):
+        r.begin_chunk()
+        r.observe(_hot(8, 0, 2))
+        r.update_replicas()
+    assert {int(p) for p in r.replicas} == {0, 2}
+
+
+def test_replica_warmup_defers_pinning():
+    r = residency.ExpertResidency(1, 8, capacity=4, span_bytes=8,
+                                  replicate_frac=0.5, replica_warmup=5)
+    for _ in range(3):
+        r.begin_chunk()
+        r.observe(_hot(8, 0, 1))
+        assert r.update_replicas() == [] and not r.replicas
+    for _ in range(4):
+        r.begin_chunk()
+        r.observe(_hot(8, 0, 1))
+        r.update_replicas()
+    assert {int(p) for p in r.replicas} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: predicted prefetch dedupes against router-ahead
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixtral_setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models.params import init_params
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
+                              dtype="float32")
+    return cfg, init_params(cfg, jax.random.key(1))
+
+
+def test_predicted_dedupe_never_double_fetches(mixtral_setup, monkeypatch):
+    """The predicted queue shares _pending with router-ahead: at every
+    drain the pending queue must hold each (weights, layer, expert) span
+    at most once, and the cause-split counters must partition the
+    hits."""
+    from repro.serving import engine as E
+    cfg, params = mixtral_setup
+    orig = E.Engine._drain_prefetch
+
+    def spy(self, gid, *, retry_refused):
+        pend = [(key, l, e) for key, l, e, _, _ in self._pending]
+        assert len(pend) == len(set(pend)), "span double-queued"
+        return orig(self, gid, retry_refused=retry_refused)
+
+    monkeypatch.setattr(E.Engine, "_drain_prefetch", spy)
+    # skewed two-template workload: aligned enough that the predictor
+    # scores well, divergent enough that predicted spans are sometimes
+    # non-resident (a fully aligned stream leaves nothing to prefetch)
+    rng = np.random.default_rng(7)
+    temps = [rng.integers(2, cfg.vocab_size, 6) for _ in range(2)]
+    eng = E.Engine(cfg, params,
+                   E.EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                  decode_chunk=8, page_elems=4096,
+                                  expert_paged=True, w_gpu_ratio=0.25,
+                                  replicate_frac=0.5))
+    for _ in range(16):
+        t = (temps[0] if rng.random() < 0.95
+             else temps[int(rng.integers(0, 2))])
+        eng.submit(t, 16)
+    eng.run_until_idle()
+    t = eng.weight_traffic()
+    # the predicted path actually ran and the split partitions the hits
+    assert t["predicted_prefetches"] > 0
+    assert (t["demand_hits"] + t["router_hits"] + t["predicted_hits"]
+            + t["replicated_hits"] == t["hits"])
+    assert 0.0 <= t["prefetch_accuracy"] <= 1.0
+    assert t["predictor_accuracy"] > 0.0

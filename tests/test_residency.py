@@ -24,6 +24,8 @@ from repro.core import residency
 # Property suite on the manager itself
 # ---------------------------------------------------------------------------
 
+_CAUSES = ("demand", "router", "predicted", "replica")
+
 if HAS_HYPOTHESIS:
     @st.composite
     def _trace(draw):
@@ -35,13 +37,15 @@ if HAS_HYPOTHESIS:
         for _ in range(n_steps):
             activated = draw(st.lists(st.booleans(), min_size=L * E,
                                       max_size=L * E))
+            hidden = draw(st.lists(st.booleans(), min_size=L * E,
+                                   max_size=L * E))
             pin = draw(st.booleans())
             n_admit = draw(st.integers(0, 4))
             admits = [(draw(st.integers(0, L - 1)),
                        draw(st.integers(0, E - 1)),
-                       draw(st.booleans()))
+                       draw(st.sampled_from(_CAUSES)))
                       for _ in range(n_admit)]
-            steps.append((activated, pin, admits))
+            steps.append((activated, hidden, pin, admits))
         return L, E, cap, steps
 
 
@@ -53,11 +57,12 @@ def _random_trace(rng):
     steps = []
     for _ in range(int(rng.integers(1, 13))):
         activated = rng.random(L * E) < 0.4
+        hidden = rng.random(L * E) < 0.3
         pin = bool(rng.integers(0, 2))
         admits = [(int(rng.integers(0, L)), int(rng.integers(0, E)),
-                   bool(rng.integers(0, 2)))
+                   _CAUSES[int(rng.integers(0, len(_CAUSES)))])
                   for _ in range(int(rng.integers(0, 5)))]
-        steps.append((activated.tolist(), pin, admits))
+        steps.append((activated.tolist(), hidden.tolist(), pin, admits))
     return L, E, cap, steps
 
 
@@ -78,20 +83,22 @@ def _run_invariant_trace(trace):
     L, E, cap, steps = trace
     r = residency.ExpertResidency(L, E, capacity=cap, span_bytes=1000)
     total_activated = 0
-    for activated, pin, admits in steps:
+    for activated, hidden, pin, admits in steps:
         act = np.asarray(activated, bool).reshape(L, E)
+        hid = np.asarray(hidden, bool).reshape(L, E)
         total_activated += int(act.sum())
         if pin:
             r.pin_resident()
             pinned_before = {divmod(int(p), E) for p in r.pinned}
-        missed = r.observe(act)
+        missed = r.observe(act, hidden_mask=hid)
         # missed = exactly the activated non-resident pairs
         assert set(missed) == {(int(l), int(e))
                                for l, e in zip(*np.nonzero(act))
                                if not r.is_resident(l, e)}
-        for l, e, demand in admits:
-            slot = r.admit(l, e, demand=demand,
-                           allow_evict=not demand)
+        for l, e, cause in admits:
+            demand = cause == "demand"
+            slot = r.admit(l, e, demand=demand, allow_evict=not demand,
+                           cause=None if demand else cause)
             if slot is not None:
                 assert r.slot_of[l, e] == slot
         if pin:
@@ -99,15 +106,29 @@ def _run_invariant_trace(trace):
             for l, e in pinned_before:
                 assert r.is_resident(l, e)
             r.unpin_all()
+        # replica-pinned spans are never displaced, pin or no pin
+        for pid in r.replicas:
+            assert r.is_resident(*divmod(int(pid), E))
         assert r.occupancy() <= r.capacity
         _check_bijection(r)
+    c = r.counters
     # counters sum to total fetches: every activated expert observation
     # was booked exactly once as a hit or a miss
-    assert r.counters.fetches == r.counters.hits + r.counters.misses
-    assert r.counters.fetches == total_activated
+    assert c.fetches == c.hits + c.misses
+    assert c.fetches == total_activated
+    # the cause split partitions the hits ...
+    assert (c.demand_hits + c.router_hits + c.predicted_hits
+            + c.replicated_hits == c.hits)
+    # ... and the stall split partitions the misses
+    assert 0 <= c.hidden_misses <= c.misses
+    assert c.stall_misses == c.misses - c.hidden_misses
+    assert int(r.miss_stall_bytes.sum()) == 1000 * c.stall_misses
+    # predicted accounting is consistent
+    assert 0 <= c.predicted_used <= c.predicted_prefetches
+    assert 0.0 <= c.prefetch_accuracy <= 1.0
+    assert c.predicted_prefetches + c.replications <= c.prefetches
     # every byte booked is a miss stream or a prefetch transfer
-    assert r.counters.h2d_bytes == 1000 * (r.counters.misses
-                                           + r.counters.prefetches)
+    assert c.h2d_bytes == 1000 * (c.misses + c.prefetches)
 
 
 if HAS_HYPOTHESIS:
