@@ -1,0 +1,157 @@
+"""Chaos-robustness report: seeded fault schedules against the serving
+engine's offload plane (DESIGN.md §10).
+
+Serves the seeded smoke workload under injected fault schedules — the
+same probabilistic-plus-scripted-burst shape as tests/test_chaos.py —
+across the two fullest serving modes (kv-paged, and expert-paged ×
+module-batch × kv-paged), and reports per (mode, seed):
+
+  * the transcript-identity verdict vs the fault-free run (the north
+    star: faults may cost throughput, never tokens),
+  * injected fault counts by site/kind, retry / abort / stall totals,
+  * degradation-ladder events and the final rung,
+  * wall-clock tokens/s under chaos vs fault-free (labeled a wall rate
+    off-TPU, never device throughput).
+
+Asserting nothing (the acceptance gate is tests/test_chaos.py); the
+nightly CI job runs three fixed seeds plus one random seed — printed so
+a failing schedule can be replayed exactly — and uploads the emitted
+``BENCH_faults.json`` as a workflow artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import backend_info, emit
+from repro.configs import get_config
+from repro.models.params import init_params
+from repro.runtime.faults import FaultEvent, FaultPlan
+from repro.serving.engine import Engine, EngineConfig
+
+SITES = ("kv_spill", "kv_fetch", "kv_pool", "expert_copy", "plan_drain",
+         "host_alloc", "dispatch")
+
+MODES = {
+    "kv_paged": dict(kv_paged=True, kv_gpu_ratio=0.25, kv_prefetch=True),
+    "expert_module_kv": dict(expert_paged=True, w_gpu_ratio=0.5,
+                             prefetch=True, predict=True, module_batch=True,
+                             kv_paged=True, kv_gpu_ratio=0.25,
+                             kv_prefetch=True),
+}
+
+
+def _work(cfg, seed=0, n=8):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(2, cfg.vocab_size, int(rng.integers(4, 20))),
+             4 if i % 2 == 0 else 12) for i in range(n)]
+
+
+def _schedule(seed: int) -> FaultPlan:
+    """One seeded chaos schedule (mirrors tests/test_chaos.py): scattered
+    probabilistic faults over every site plus a scripted burst drawn from
+    the seed, so each run sees at least one concentrated fault window."""
+    rng = np.random.default_rng(seed)
+    site = SITES[int(rng.integers(0, len(SITES)))]
+    kind = ("fail", "stall", "partial", "exhaust")[int(rng.integers(0, 4))]
+    return FaultPlan(
+        seed=seed,
+        probs={"*": {"fail": 0.06, "stall": 0.04, "partial": 0.04,
+                     "exhaust": 0.03, "hostmem": 0.01}},
+        trace=[FaultEvent(site, kind, after=int(rng.integers(0, 10)),
+                          count=int(rng.integers(1, 6)))],
+        stall_ms=float(rng.integers(50, 5000)),
+        max_faults=int(rng.integers(40, 200)))
+
+
+def _serve(cfg, params, requests, **kw):
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           decode_chunk=4, **kw))
+    for prompt, gen in requests:
+        eng.submit(prompt, gen)
+    t0 = time.perf_counter()
+    out = eng.run_until_idle()
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    return eng, out, toks, dt
+
+
+def run(seeds=(0, 1, 2), random_seed: bool = False, smoke: bool = False,
+        out_path: str = "BENCH_faults.json"):
+    seeds = list(seeds)
+    if random_seed:
+        extra = int(np.random.default_rng().integers(0, 2**31 - 1))
+        print(f"bench_faults: random chaos seed {extra} "
+              f"(replay: --seeds {extra})")
+        seeds.append(extra)
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.key(1))
+    work = _work(cfg, n=6 if smoke else 8)
+
+    info = backend_info()
+    tok_key = ("tokens_per_s" if not info["interpret"]
+               else "wall_tokens_per_s_not_device_rate")
+    report = {"config": cfg.name, "seeds": seeds, **info, "modes": {}}
+    all_identical = True
+    for mode, kw in MODES.items():
+        _, baseline, toks0, dt0 = _serve(cfg, params, work, **kw)
+        rows = {"fault_free": {"tokens": toks0, tok_key: toks0 / dt0},
+                "chaos": {}}
+        for seed in seeds:
+            eng, out, toks, dt = _serve(cfg, params, work,
+                                        fault_plan=_schedule(seed),
+                                        degrade_down_after=2,
+                                        degrade_up_after=5, **kw)
+            ft = eng.fault_traffic()
+            identical = out == baseline
+            all_identical &= identical
+            rows["chaos"][str(seed)] = {
+                "transcripts_identical": identical,
+                "tokens": toks,
+                tok_key: toks / dt,
+                "slowdown_vs_fault_free": dt / max(dt0, 1e-9),
+                "injected": ft["injected"],
+                "injected_total": ft["injected_total"],
+                "retries": ft["retries"],
+                "aborts": ft["aborts"],
+                "stalls": ft["stalls"],
+                "hostmem_faults": ft["hostmem_faults"],
+                "shed_requests": ft["shed_requests"],
+                "final_level": ft["level_name"],
+                "demotions": ft["demotions"],
+                "promotions": ft["promotions"],
+                "degradation_events": ft["degradation_events"],
+            }
+            emit(f"chaos_{mode}_s{seed}", dt * 1e6,
+                 f"identical={identical},injected={ft['injected_total']},"
+                 f"retries={ft['retries']},level={ft['level_name']},"
+                 f"slowdown={dt / max(dt0, 1e-9):.2f}x")
+        report["modes"][mode] = rows
+
+    report["all_transcripts_identical"] = all_identical
+    emit("chaos_verdict", 0.0,
+         f"seeds={len(seeds)},modes={len(MODES)},"
+         f"all_transcripts_identical={all_identical}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", default="0,1,2",
+                    help="comma-separated fixed chaos seeds")
+    ap.add_argument("--random-seed", action="store_true",
+                    help="add one random seed (printed, for replay)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk workload for the nightly CI job")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    run(seeds=[int(s) for s in args.seeds.split(",") if s != ""],
+        random_seed=args.random_seed, smoke=args.smoke, out_path=args.out)

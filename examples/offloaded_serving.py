@@ -114,6 +114,11 @@ def main():
                     help="fraction of the residency pool pinned to the "
                          "popularity-top experts in the MoE epilogue "
                          "(0 disables replication)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="chaos epilogue: replay the seeded fault "
+                         "schedule against the offload plane and print "
+                         "degradation events, retry counts, and the "
+                         "transcript-identity verdict")
     args = ap.parse_args()
 
     print(f"params: {count_params(LM_110M) / 1e6:.1f}M")
@@ -264,6 +269,63 @@ def main():
               f"{ph:.3f} (+{ph - bh:.3f}), expert bytes/token "
               f"{bb:.0f} -> {pb:.0f} ({bb / max(1.0, pb):.2f}x fewer), "
               f"transcripts identical: {ident}")
+
+    # 6. chaos epilogue (--chaos SEED): the same skewed MoE smoke served
+    #    twice — fault-free, then under the seeded fault schedule — with
+    #    the degradation ladder walking rungs live (DESIGN.md §10)
+    if args.chaos is not None:
+        from repro.runtime.faults import FaultEvent, FaultPlan
+        crng = np.random.default_rng(args.chaos)
+        sites = ("kv_spill", "kv_fetch", "kv_pool", "expert_copy",
+                 "plan_drain", "host_alloc", "dispatch")
+        plan = FaultPlan(
+            seed=args.chaos,
+            probs={"*": {"fail": 0.06, "stall": 0.04, "partial": 0.04,
+                         "exhaust": 0.03, "hostmem": 0.01}},
+            trace=[FaultEvent(sites[int(crng.integers(0, len(sites)))],
+                              ("fail", "stall", "partial",
+                               "exhaust")[int(crng.integers(0, 4))],
+                              after=int(crng.integers(0, 10)),
+                              count=int(crng.integers(1, 6)))],
+            stall_ms=float(crng.integers(50, 5000)),
+            max_faults=int(crng.integers(40, 200)))
+        ckw = dict(ubatch=2, num_ubs=2, max_seq=64, decode_chunk=4,
+                   expert_paged=True, w_gpu_ratio=0.5, prefetch=True,
+                   predict=True, module_batch=True, kv_paged=True,
+                   kv_gpu_ratio=0.25, kv_prefetch=True)
+        cwork = [(mrng.integers(2, mcfg.vocab_size,
+                                int(mrng.integers(4, 20))),
+                  4 if i % 2 == 0 else 12) for i in range(8)]
+        runs = {}
+        for label, extra in (("fault-free", {}),
+                             ("chaos", dict(fault_plan=plan,
+                                            degrade_down_after=2,
+                                            degrade_up_after=5))):
+            eng = Engine(mcfg, mparams, EngineConfig(**ckw, **extra))
+            for prompt, gen in cwork:
+                eng.submit(prompt, gen)
+            runs[label] = (eng, eng.run_until_idle())
+        eng, out = runs["chaos"]
+        ft = eng.fault_traffic()
+        print(f"\nchaos epilogue (seed {args.chaos}):")
+        print(f"  injected {ft['injected_total']} faults: "
+              + (", ".join(f"{k}x{v}"
+                           for k, v in sorted(ft["injected"].items()))
+                 or "none"))
+        print(f"  retries={ft['retries']} aborts={ft['aborts']} "
+              f"stalls={ft['stalls']} hostmem={ft['hostmem_faults']} "
+              f"shed={ft['shed_requests']}")
+        for ev in ft["degradation_events"]:
+            arrow = "↓" if ev["direction"] == "down" else "↑"
+            print(f"  ladder {arrow} {ev['from']} -> {ev['to']} "
+                  f"(reason: {ev['reason']})")
+        if not ft["degradation_events"]:
+            print("  ladder: no transitions (faults absorbed by retries)")
+        print(f"  final rung: {ft['level_name']} "
+              f"(demotions={ft['demotions']}, "
+              f"promotions={ft['promotions']})")
+        ident = out == runs["fault-free"][1]
+        print(f"  transcripts identical to fault-free run: {ident}")
 
 
 if __name__ == "__main__":

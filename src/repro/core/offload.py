@@ -41,6 +41,15 @@ class HostOffloadFallbackWarning(UserWarning):
 _warned_no_pinned = False
 
 
+def reset_host_probe() -> None:
+    """Clear the process-wide fall-back warning latch.  The degradation
+    ladder's re-promotion path calls this before re-probing, so the
+    pinned→pageable fall-back is observable each time it recurs instead
+    of once per process (and a recovered backend probes clean)."""
+    global _warned_no_pinned
+    _warned_no_pinned = False
+
+
 def _make_pinned_sharding() -> jax.sharding.Sharding:
     """Single-device sharding in the pinned_host memory space (split out
     so tests can monkeypatch it with a plain CPU sharding and drive the
@@ -49,11 +58,17 @@ def _make_pinned_sharding() -> jax.sharding.Sharding:
                                              memory_kind="pinned_host")
 
 
-def pinned_host_sharding(*, warn: bool = True
+def pinned_host_sharding(*, warn: bool = True, faults=None
                          ) -> Optional[jax.sharding.Sharding]:
     """Sharding for host-tier staging buffers, or None when the backend
-    has no pinned_host space (one structured warning per process)."""
+    has no pinned_host space (one structured warning per process, until
+    ``reset_host_probe``).  ``faults`` is an optional
+    runtime.faults.FaultInjector: the "host_alloc" site models a failed
+    pinned-host allocation (raises HostMemoryError) — the caller falls
+    back to the pageable tier and may re-probe on ladder promotion."""
     global _warned_no_pinned
+    if faults is not None:
+        faults.raise_for("host_alloc")
     if supports_host_offload():
         return _make_pinned_sharding()
     if warn and not _warned_no_pinned:

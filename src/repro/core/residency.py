@@ -175,6 +175,11 @@ class ExpertResidency:
         self.replica_warmup = int(max(0, replica_warmup))
         self.protect_ttl = int(max(1, protect_ttl))
         self._chunks = 0              # accounting rounds seen (warmup gate)
+        # degraded-mode occupancy cap (None = full capacity): set by the
+        # engine's degradation ladder to shrink the pool reversibly —
+        # admissions above the limit behave as if no slot were free, and
+        # ``shrink_to_limit`` evicts cold spans down to it
+        self.limit: Optional[int] = None
         self.slot_of = np.full((num_layers, num_experts), -1, np.int32)
         self.owner = np.full((self.capacity,), -1, np.int64)  # flat pair id
         self.free: List[int] = list(range(self.capacity))
@@ -390,17 +395,24 @@ class ExpertResidency:
             cause = "demand" if demand else "router"
         if self.capacity == 0 or self.is_resident(layer, expert):
             return None
-        use_quota = (not allow_evict and demand and not self.free
+        # degraded-mode cap: at the limit a free slot is off-budget, so
+        # admission must displace a victim (occupancy never grows)
+        at_limit = (self.limit is not None
+                    and self.occupancy() >= self.limit)
+        use_quota = (not allow_evict and demand
+                     and (not self.free or at_limit)
                      and self._victims_left > 0)
-        if self.free:
+        if self.free and not at_limit:
             slot = self.free.pop()
         elif not allow_evict and not use_quota:
             self.counters.refusals += 1
             return None
         else:
+            # o >= 0: with the degraded-mode cap the eviction branch can
+            # run while free slots exist (they are off-budget, not victims)
             cands = [(self.popularity[self._pair(o)], s)
                      for s, o in enumerate(self.owner)
-                     if int(o) not in self.pinned
+                     if o >= 0 and int(o) not in self.pinned
                      and int(o) not in self.replicas
                      and int(o) not in self.protected]
             if not cands:
@@ -448,6 +460,44 @@ class ExpertResidency:
         self._pred_unused.discard(pid)
         self.counters.evictions += 1
 
+    # ----------------------------------------------- degraded-mode shrink
+    def drop_replicas(self) -> int:
+        """Release every persistent replica pin (the spans stay resident
+        — they just become ordinary eviction candidates).  First step of
+        the ladder's residency_shrunk rung."""
+        n = len(self.replicas)
+        self.replicas.clear()
+        return n
+
+    def set_limit(self, limit: Optional[int]) -> int:
+        """Cap (or, with None, restore) the pool's usable occupancy.
+        Returns the number of spans evicted to honor the new cap.
+        Reversible by construction: residency only decides where bytes
+        stream from, so shrinking never changes tokens."""
+        self.limit = None if limit is None else int(max(1, limit))
+        return self.shrink_to_limit()
+
+    def shrink_to_limit(self) -> int:
+        """Evict coldest-first down to ``limit``, skipping pinned
+        (in-flight), replicated and still-protected spans — best effort:
+        if pins block the full shrink, admission's at-limit rule keeps
+        occupancy from growing and a later call finishes the job."""
+        if self.limit is None:
+            return 0
+        evicted = 0
+        while self.occupancy() > self.limit:
+            cands = [(self.popularity[self._pair(o)], s)
+                     for s, o in enumerate(self.owner)
+                     if o >= 0 and int(o) not in self.pinned
+                     and int(o) not in self.replicas
+                     and int(o) not in self.protected]
+            if not cands:
+                break
+            _, slot = min(cands)
+            self.evict(slot)
+            evicted += 1
+        return evicted
+
     # ------------------------------------------------------- replication
     def update_replicas(self) -> List[Tuple[int, int, int]]:
         """Reconcile the replica set with the popularity EWMA, with
@@ -463,6 +513,10 @@ class ExpertResidency:
         No-op for the first ``replica_warmup`` accounting rounds: the
         EWMA is still cold-start noise, and pinning the wrong spans
         early slows demand convergence more than replication helps."""
+        if self.limit is not None:
+            # degraded (residency_shrunk): replica pins stay dropped so
+            # the shrunken pool keeps every slot evictable
+            return []
         budget = self.replica_budget
         if budget <= 0:
             self.replicas.clear()

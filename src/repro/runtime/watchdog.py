@@ -35,27 +35,45 @@ class Watchdog:
     ewma: float = 0.0
     alpha: float = 0.1
     slow_steps: int = 0
+    steps_seen: int = 0
     _t0: float = field(default=0.0, repr=False)
+
+    def deadline(self) -> float:
+        return max(self.min_deadline_s, self.deadline_factor * self.ewma)
 
     def step_start(self):
         self._t0 = time.monotonic()
         self.beat()
 
-    def step_end(self) -> bool:
-        """Returns True if the step was within deadline."""
-        dt = time.monotonic() - self._t0
-        if self.ewma == 0.0:
+    def step_end(self, extra_s: float = 0.0) -> bool:
+        """Returns True if the step was within deadline.  ``extra_s``
+        adds virtual latency (injected stalls) so fault schedules stay
+        deterministic without real sleeps."""
+        return self.observe(time.monotonic() - self._t0 + extra_s)
+
+    def observe(self, dt: float) -> bool:
+        """Score one step/op duration against the EWMA deadline.  Split
+        from step_end so callers that measure their own durations (the
+        transfer engine's per-site deadlines) share the policy logic.
+
+        The EWMA is seeded by the first observed sample (by step count,
+        not by value — a 0.0-duration first step must not re-seed
+        forever) and updated on EVERY step with a deadline-clipped
+        sample, *including* steps that violate the deadline — before the
+        abort policy raises — so one straggler neither poisons nor
+        freezes the deadline estimate."""
+        if self.steps_seen == 0:
             self.ewma = dt
-        deadline = max(self.min_deadline_s, self.deadline_factor * self.ewma)
+        deadline = self.deadline()
         ok = dt <= deadline
+        self.ewma = (1 - self.alpha) * self.ewma \
+            + self.alpha * min(dt, deadline)
+        self.steps_seen += 1
         if not ok:
             self.slow_steps += 1
             if self.policy == "abort":
                 raise StragglerError(
                     f"step took {dt:.2f}s > deadline {deadline:.2f}s")
-        # EWMA updated with a clipped sample so one straggler doesn't
-        # poison the deadline
-        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * min(dt, deadline)
         return ok
 
     def beat(self):

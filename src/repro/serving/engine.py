@@ -94,6 +94,9 @@ from repro.core.batching import blocks_for_tokens
 from repro.kernels import ops as kernel_ops
 from repro.models import kvcache
 from repro.models.model import ExecPolicy
+from repro.runtime import faults as faults_mod
+from repro.runtime.transfer import TransferEngine
+from repro.runtime.watchdog import Watchdog
 from repro.serving import steps as serve_steps
 from repro.serving.sampling import sample
 from repro.serving.scheduler import Scheduler, ServeRequest, Slot, SlotState
@@ -173,6 +176,27 @@ class EngineConfig:
     module_stage_tokens: Optional[int] = None  # staging-buffer row budget:
     # when G·ubatch would exceed it the window shrinks toward lockstep
     # (capacity overflow never drops tokens)
+    # ------------------------------------ fault plane / degradation ladder
+    # (runtime.faults / runtime.transfer — see DESIGN.md §10).  Faults may
+    # cost throughput but never change tokens: every knob below only moves
+    # where bytes stream from and when, never what the jitted step computes
+    fault_plan: Optional[object] = None   # runtime.faults.FaultPlan — the
+    # injected fault schedule (None = nothing fires; the chokepoints stay
+    # wired through the same always-present injector)
+    degrade: bool = True                  # degradation ladder armed
+    degrade_down_after: int = 3           # consecutive faults per rung down
+    degrade_up_after: int = 16            # healthy-op streak per rung up
+                                          # (> down_after: hysteresis)
+    shed_priority: int = 1                # bottom rung sheds new admissions
+                                          # with priority >= this
+    max_retries: int = 4                  # bounded-retry budget per cycle
+    backoff_s: float = 0.0                # real backoff sleep base (0: none)
+    watchdog: bool = True                 # per-dispatch EWMA deadline
+    watchdog_policy: str = "log"          # log | skip | abort — "skip" ≡
+    # "log" on the serving path (the chunk has already landed when the
+    # deadline is scored; the violation still feeds the ladder)
+    watchdog_factor: float = 8.0
+    watchdog_min_s: float = 0.25
 
 
 class _SlotGroup:
@@ -204,10 +228,24 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  policy: Optional[ExecPolicy] = None):
         assert ecfg.mode in ("continuous", "static")
+        assert ecfg.watchdog_policy in ("log", "skip", "abort")
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.policy = policy
+        # ---------------------------- fault plane (runtime.faults, §10)
+        self.faults = faults_mod.FaultInjector(ecfg.fault_plan)
+        self._ladder = (faults_mod.DegradationLadder(
+            down_after=ecfg.degrade_down_after,
+            up_after=ecfg.degrade_up_after) if ecfg.degrade else None)
+        self._xfer = TransferEngine(
+            self.faults, max_retries=ecfg.max_retries,
+            backoff_s=ecfg.backoff_s, ladder=self._ladder)
+        self._watchdog = (Watchdog(
+            deadline_factor=ecfg.watchdog_factor,
+            min_deadline_s=ecfg.watchdog_min_s,
+            policy=ecfg.watchdog_policy) if ecfg.watchdog else None)
+        self._degraded_no_predict = False
         self.scheduler = Scheduler(
             ubatch=ecfg.ubatch, num_ubs=ecfg.num_ubs,
             cache_tokens=ecfg.cache_tokens or ecfg.max_seq * ecfg.ubatch,
@@ -301,7 +339,7 @@ class Engine:
                     name, stacked=True)]
                 for g in self._kv_arena.values() for name, a in g.items())
             self._kv = blockpool.BlockPool(n_slots, mb, device_blocks,
-                                           block_bytes)
+                                           block_bytes, faults=self.faults)
 
             def _host_shape(name, a):
                 ax = kvcache.arena_block_axis(name, stacked=True)
@@ -312,7 +350,16 @@ class Engine:
             # as jax arrays (spills/fetches lower to async DMA against
             # pinned pages); otherwise it falls back to pageable numpy
             # (offload emits one structured warning the first time).
-            self._kv_pinned_shd = offload.pinned_host_sharding()
+            try:
+                self._kv_pinned_shd = offload.pinned_host_sharding(
+                    faults=self.faults)
+            except faults_mod.HostMemoryError:
+                # injected placement failure: fall back to the pageable
+                # tier now; the ladder's re-promotion path re-probes
+                self._kv_pinned_shd = None
+                if self._ladder is not None:
+                    self._ladder.force_at_least("pageable_host",
+                                                site="host_alloc")
             self._kv_pinned = self._kv_pinned_shd is not None
             if self._kv_pinned:
                 self._kv_host = {
@@ -321,11 +368,7 @@ class Engine:
                         self._kv_pinned_shd)
                         for name, a in g.items()}
                     for key, g in self._kv_arena.items()}
-                self._kv_host_write = jax.jit(
-                    lambda h, i, v, ax: h.at[(slice(None),) * ax + (i,)
-                                             ].set(v),
-                    static_argnums=(3,), donate_argnums=(0,),
-                    out_shardings=self._kv_pinned_shd)
+                self._build_host_write(self._kv_pinned_shd)
             else:
                 self._kv_host = {
                     key: {name: np.zeros(_host_shape(name, a), a.dtype)
@@ -405,6 +448,9 @@ class Engine:
         # the remainder groups fall back to lockstep individually
         self._windows = [list(range(i, min(i + self._mg, ecfg.num_ubs)))
                          for i in range(0, ecfg.num_ubs, self._mg)]
+        # configured window width: the degradation ladder's lockstep rung
+        # clamps self._mg toward 1 and re-promotion restores this
+        self._mg_base = self._mg
         self._insert = jax.jit(kvcache.insert_slot, donate_argnums=(0,))
         # the persistent slot pool: allocated once, recycled per slot
         self.groups: List[_SlotGroup] = []
@@ -449,9 +495,10 @@ class Engine:
         self.tokens_out = 0
 
     # ----------------------------------------------------------- public
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt, max_new_tokens: int = 16,
+               priority: int = 0) -> int:
         return self.scheduler.submit(np.asarray(prompt, np.int32),
-                                     max_new_tokens)
+                                     max_new_tokens, priority=priority)
 
     def step(self) -> bool:
         """One engine tick: admit new work, then decode every rotation
@@ -462,6 +509,7 @@ class Engine:
         decode chunks.  Static mode decodes one token per active
         micro-batch and retires whole groups.  Returns True if any work
         was done."""
+        self._ladder_tick()       # safe point: no dispatch in flight
         if self.ecfg.mode == "static":
             return self._step_static()
         return self._step_continuous()
@@ -497,9 +545,18 @@ class Engine:
                 for k in self.residency}
 
     def _copy_span(self, key: str, l: int, e: int, slot: int) -> None:
+        # mandatory once residency assigned the slot: the dispatch
+        # snapshot says the span is resident, so its bytes must land —
+        # injected faults are retried by the transfer engine
         span = self.paged_blocks.expert_pages[key][l, e]
-        self._expert_pool[key] = self._pool_write(
-            self._expert_pool[key], span, jnp.int32(slot))
+
+        def _fill():
+            self._expert_pool[key] = self._pool_write(
+                self._expert_pool[key], span, jnp.int32(slot))
+
+        self._xfer.run_mandatory("expert_copy", _fill,
+                                 nbytes=self.residency[key].span_bytes,
+                                 on_hostmem=self._demote_host_tier)
 
     def _resident_snap(self) -> Dict[str, np.ndarray]:
         """Residency mask at dispatch time — what the jitted call's map
@@ -636,7 +693,12 @@ class Engine:
         queue as the router-ahead group-j+1 prefetch and dedupe against
         it first-come (router-ahead enqueues first), so a span predicted
         by both paths is fetched exactly once.  Predicted admissions are
-        eviction-protected until first use (residency ``protect_ttl``)."""
+        eviction-protected until first use (residency ``protect_ttl``).
+
+        Suspended (``predict=False`` semantics) while the degradation
+        ladder sits at or below its no_predict rung."""
+        if self._degraded_no_predict:
+            return
         for h in holders:
             for key, act in h.pred.items():
                 gp = self._predictors.get(key)
@@ -667,12 +729,31 @@ class Engine:
         drains); returns (chosen, keep).  A module-batched window passes
         its gid list and drains the union of its positions' slices
         (``paging.window_plan``) — the window spans those interleave
-        slots, so its in-flight compute covers all of them."""
+        slots, so its in-flight compute covers all of them.
+
+        Fault chokepoint ("plan_drain"): an injected *partial* completes
+        only a prefix of the slice (the rest re-queues), a *fail* defers
+        the whole slice, a *stall* books a deadline violation — all three
+        only delay advisory prefetch work, so tokens are untouched."""
         positions = [gid] if isinstance(gid, int) else list(gid)
         take = set(paging.window_plan(len(pending), self.ecfg.num_ubs,
                                       positions))
-        return ([t for i, t in enumerate(pending) if i in take],
-                [t for i, t in enumerate(pending) if i not in take])
+        chosen = [t for i, t in enumerate(pending) if i in take]
+        keep = [t for i, t in enumerate(pending) if i not in take]
+        ev = self.faults.fire("plan_drain")
+        if ev is not None and chosen:
+            if ev.kind == "partial":
+                k = int(len(chosen) * ev.frac)
+                chosen, deferred = chosen[:k], chosen[k:]
+                keep = deferred + keep
+                self._xfer.book_retry("plan_drain")
+            elif ev.kind in ("fail", "exhaust", "hostmem"):
+                keep = chosen + keep
+                chosen = []
+                self._xfer.book_retry("plan_drain")
+            elif ev.kind == "stall":
+                self._xfer.book_stall("plan_drain")
+        return chosen, keep
 
     def _drain_prefetch(self, gid, *, retry_refused: bool) -> None:
         """Transfer this rotation position's ``paging.transfer_plan``
@@ -829,38 +910,52 @@ class Engine:
             self._kv_arena[key] = g
         return out
 
+    def _kv_spill_op(self, pb: int, hb: int) -> None:
+        for key, g in self._kv_arena.items():
+            h = self._kv_host[key]
+            for name in g:
+                ax = kvcache.arena_block_axis(name, stacked=True)
+                blk = self._kv_read(g[name], jnp.int32(pb), ax)
+                if self._kv_pinned:             # D2H into the pinned tier
+                    h[name] = self._kv_host_write(
+                        h[name], jnp.int32(hb), blk, ax)
+                else:
+                    h[name][(slice(None),) * ax + (hb,)] = np.asarray(blk)
+
+    def _kv_fetch_op(self, hb: int, pb: int) -> None:
+        for key, g in self._kv_arena.items():
+            h = self._kv_host[key]
+            for name in list(g):
+                ax = kvcache.arena_block_axis(name, stacked=True)
+                blk = (self._kv_read(h[name], jnp.int32(hb), ax)
+                       if self._kv_pinned else jnp.asarray(
+                           h[name][(slice(None),) * ax + (hb,)]))
+                g[name] = self._kv_write(g[name], jnp.int32(pb), blk, ax)
+
     def _kv_exec(self, ops) -> None:
         """Execute a BlockPool plan in order: ``spill`` copies an arena
         block out to the host store (D2H), ``fetch`` copies a host block
         back in (H2D), ``alloc`` marks a fresh block (its slot_pos plane
         is cleared in one batched scatter at the end — stale positions
-        from the previous owner must never satisfy a validity mask)."""
+        from the previous owner must never satisfy a validity mask).
+
+        Spill/fetch ops run through the retrying transfer engine: a plan
+        already committed to the pool's map, so its bytes MUST land
+        (mandatory, not advisory).  Faults fire before the copy closure
+        runs, so a retried op never re-executes a donated-buffer write."""
         fresh = []
+        nb = self._kv.block_bytes
         for op in ops:
             if op[0] == "spill":
                 _, _s, _lb, pb, hb = op
-                for key, g in self._kv_arena.items():
-                    h = self._kv_host[key]
-                    for name in g:
-                        ax = kvcache.arena_block_axis(name, stacked=True)
-                        blk = self._kv_read(g[name], jnp.int32(pb), ax)
-                        if self._kv_pinned:     # D2H into the pinned tier
-                            h[name] = self._kv_host_write(
-                                h[name], jnp.int32(hb), blk, ax)
-                        else:
-                            h[name][(slice(None),) * ax + (hb,)] = \
-                                np.asarray(blk)
+                self._xfer.run_mandatory(
+                    "kv_spill", lambda pb=pb, hb=hb: self._kv_spill_op(pb, hb),
+                    nbytes=nb, on_hostmem=self._demote_host_tier)
             elif op[0] == "fetch":
                 _, _s, _lb, hb, pb = op
-                for key, g in self._kv_arena.items():
-                    h = self._kv_host[key]
-                    for name in list(g):
-                        ax = kvcache.arena_block_axis(name, stacked=True)
-                        blk = (self._kv_read(h[name], jnp.int32(hb), ax)
-                               if self._kv_pinned else jnp.asarray(
-                                   h[name][(slice(None),) * ax + (hb,)]))
-                        g[name] = self._kv_write(g[name], jnp.int32(pb),
-                                                 blk, ax)
+                self._xfer.run_mandatory(
+                    "kv_fetch", lambda hb=hb, pb=pb: self._kv_fetch_op(hb, pb),
+                    nbytes=nb, on_hostmem=self._demote_host_tier)
             else:                                       # ("alloc", s, lb, pb)
                 fresh.append(op[3])
         if fresh:
@@ -875,6 +970,19 @@ class Engine:
             idxj = jnp.asarray(idx)
             for key, g in self._kv_arena.items():
                 g["slot_pos"] = self._kv_clear(g["slot_pos"], idxj)
+
+    def _kv_ensure(self, fn):
+        """Run a BlockPool ensure closure on a path whose refusal is
+        fatal or mode-changing (arena-floor asserts / lockstep
+        fallbacks follow the call): injected pool exhaustions are
+        retried until a genuine answer comes back, so a chaos schedule
+        can never trip a floor assert or force a spurious fallback."""
+        while True:
+            ops, ok, nxt = fn()
+            self._kv_exec(ops)
+            if ok or not self._kv.last_refusal_injected:
+                return ops, ok, nxt
+            self._xfer.book_retry("kv_pool")
 
     def _kv_sweep(self) -> None:
         """Release arena/host blocks of any slot that fell back to FREE
@@ -905,6 +1013,7 @@ class Engine:
         gids = [gid] if isinstance(gid, int) else list(gid)
         slots = [s for g in gids for s in self.scheduler.slots[g]]
         booked: Dict[int, int] = {}          # slot idx -> blocks satisfied
+        inj_retries = 0
         while True:
             decoding = [s for s in slots if s.state == SlotState.DECODE]
             protect = [self._slot_of(s) for s in decoding]
@@ -924,12 +1033,26 @@ class Engine:
                     break
             if ok:
                 return
+            if self._kv.last_refusal_injected:
+                # an injected pool-exhaustion refusal, not a real one:
+                # retry the draw before paying a preemption.  With a lone
+                # decoding slot retries are unbounded (there is no victim
+                # to preempt, and the plan's faults are transient by
+                # construction); otherwise an exhausted budget books an
+                # abort and falls through to genuine recompute preemption.
+                inj_retries += 1
+                self._xfer.book_retry("kv_pool")
+                if inj_retries <= self.ecfg.max_retries \
+                        or len(decoding) <= 1:
+                    continue
+                self._xfer.book_abort("kv_pool")
             assert len(decoding) > 1, \
                 "single request exceeds the KV arena (device_blocks floor)"
             victim = max(decoding, key=lambda s: s.req.rid)   # youngest
             self.scheduler.preempt(victim)
             self._kv.free_slot(self._slot_of(victim))
             booked.pop(self._slot_of(victim), None)
+            inj_retries = 0
 
     def _kv_enqueue_prefetch(self, gid) -> None:
         """Queue the next rotation group's spilled blocks (the KV
@@ -1022,6 +1145,135 @@ class Engine:
         )
         return out
 
+    # ------------------- fault plane: host tier / ladder / watchdog (§10)
+    def _build_host_write(self, shd) -> None:
+        # (re)built whenever the pinned tier (re)appears: the donated
+        # scatter must carry the tier's sharding so D2H spills land in
+        # pinned pages, not wherever the donation was last placed
+        self._kv_host_write = jax.jit(
+            lambda h, i, v, ax: h.at[(slice(None),) * ax + (i,)].set(v),
+            static_argnums=(3,), donate_argnums=(0,), out_shardings=shd)
+
+    def _demote_host_tier(self) -> None:
+        """Reversible fall-back of the KV host tier from pinned jax
+        arrays to pageable numpy — the HostMemoryError handler and the
+        ladder's pageable_host rung.  Idempotent; block bytes are
+        preserved, so spilled histories survive the demotion."""
+        if self._ladder is not None:
+            self._ladder.force_at_least("pageable_host", site="host_alloc")
+        if self._kv is None or not self._kv_pinned:
+            return
+        self._kv_host = {
+            key: {name: np.asarray(a) for name, a in g.items()}
+            for key, g in self._kv_host.items()}
+        self._kv_pinned = False
+
+    def _repromote_host_tier(self) -> None:
+        """Ladder re-promotion out of pageable_host: clear the offload
+        module's one-shot warning latch, re-probe the pinned memory
+        space and — if the probe succeeds — lift the host tier back into
+        pinned jax arrays.  Stays pageable when the probe still fails
+        (the rung flips back healthy; bytes keep flowing either way)."""
+        if self._kv is None or self._kv_pinned:
+            return
+        offload.reset_host_probe()
+        try:
+            shd = offload.pinned_host_sharding(warn=False,
+                                               faults=self.faults)
+        except faults_mod.HostMemoryError:
+            shd = None
+        if shd is None:
+            return                        # probe still failing: stay pageable
+        self._kv_host = {
+            key: {name: jax.device_put(jnp.asarray(a), shd)
+                  for name, a in g.items()}
+            for key, g in self._kv_host.items()}
+        self._build_host_write(shd)
+        self._kv_pinned = True
+        self._kv_pinned_shd = shd
+
+    def _set_module_groups(self, mg: int) -> None:
+        """Clamp/restore the module-batch window width (the ladder's
+        lockstep rung).  PR 6's transcript guarantee — windowed ≡
+        lockstep bit-for-bit — is what makes this rung token-safe."""
+        mg = max(1, min(int(mg), self._mg_base))
+        if mg == self._mg:
+            return
+        self._mg = mg
+        self._windows = [
+            list(range(i, min(i + mg, self.ecfg.num_ubs)))
+            for i in range(0, self.ecfg.num_ubs, mg)]
+
+    def _ladder_tick(self) -> None:
+        if self._ladder is not None and self._ladder.pending():
+            self._ladder.apply(self._enact_rung, tick=self.steps)
+
+    def _enact_rung(self, old: int, new: int, direction: str) -> None:
+        """Apply ONE ladder rung's side effect (called from apply() at
+        the step() safe point — no dispatch in flight).  Every rung is
+        reversible, and none can change sampled tokens: each only moves
+        where bytes stream from and when — except admission_shed, which
+        by design drops work the submitter marked sheddable."""
+        rung = faults_mod.LADDER_LEVELS[max(old, new)]
+        down = direction == "down"
+        if rung == "pageable_host":
+            if down:
+                self._demote_host_tier()
+            else:
+                self._repromote_host_tier()
+        elif rung == "no_predict":
+            self._degraded_no_predict = down
+        elif rung == "lockstep":
+            self._set_module_groups(1 if down else self._mg_base)
+        elif rung == "residency_shrunk":
+            for r in self.residency.values():
+                if down:
+                    r.drop_replicas()
+                    r.set_limit(max(1, r.capacity // 2))
+                else:
+                    r.set_limit(None)
+        elif rung == "admission_shed":
+            self.scheduler.shed_priority = (
+                self.ecfg.shed_priority if down else None)
+
+    def _watchdog_end(self) -> None:
+        """Close one dispatch's deadline window: injected 'dispatch'
+        stalls charge virtual seconds (deterministic chaos, no real
+        sleeps); a violation feeds the ladder like any other fault."""
+        if self._watchdog is None:
+            return
+        virt = self.faults.stall_s("dispatch")
+        ok = self._watchdog.step_end(extra_s=virt)
+        if not ok and self._ladder is not None:
+            self._ladder.note_fault("dispatch")
+
+    def fault_traffic(self) -> Dict[str, object]:
+        """Fault-plane observability, weight_traffic()-style: injected
+        fault counts, transfer retry/abort/stall counters, dispatch
+        deadline violations, shed admissions, and the degradation
+        ladder's current level + transition history."""
+        out: Dict[str, object] = {
+            "injected": dict(self.faults.counts),
+            "injected_total": self.faults.total(),
+            "shed_requests": self.scheduler.shed_count,
+            "host_tier_pinned": bool(getattr(self, "_kv_pinned", False)),
+            "module_groups_now": self._mg,
+            "predict_suspended": self._degraded_no_predict,
+            "dispatch_slow_steps": (self._watchdog.slow_steps
+                                    if self._watchdog is not None else 0),
+        }
+        out.update(self._xfer.stats())
+        if self._ladder is not None:
+            out.update(level=self._ladder.level,
+                       level_name=self._ladder.level_name,
+                       demotions=self._ladder.demotions,
+                       promotions=self._ladder.promotions,
+                       degradation_events=list(self._ladder.events))
+        else:
+            out.update(level=0, level_name="healthy", demotions=0,
+                       promotions=0, degradation_events=[])
+        return out
+
     def _decode_group(self, cache, last_tok, active, rem, *, holder=None,
                       gid: Optional[int] = None):
         """Run one masked decode chunk; returns (cache, new_last_tok,
@@ -1036,6 +1288,8 @@ class Engine:
                 jnp.asarray(active), jnp.asarray(rem), k)
         chunk = self.ecfg.decode_chunk if self.ecfg.mode == "continuous" else 1
         self._fwd_passes += chunk
+        if self._watchdog is not None:
+            self._watchdog.step_start()
         if self.residency:
             snap = self._resident_snap()
             for r in self.residency.values():
@@ -1055,6 +1309,7 @@ class Engine:
                 self._drain_prefetch(gid, retry_refused=True)
             res = (cache, np.array(tok)[:, 0], np.asarray(act2),
                    np.asarray(toks), np.asarray(emitted))   # sync
+            self._watchdog_end()
             # spans that became resident between dispatch and landing:
             # their H2D stream overlapped this chunk's compute, so a
             # miss on them is a hidden (stall-free) miss
@@ -1069,8 +1324,10 @@ class Engine:
                                  hidden=hidden)
             return res
         cache, tok, act2, _, toks, emitted = self._decode_chunk(*args)
-        return (cache, np.array(tok)[:, 0], np.asarray(act2),
-                np.asarray(toks), np.asarray(emitted))
+        res = (cache, np.array(tok)[:, 0], np.asarray(act2),
+               np.asarray(toks), np.asarray(emitted))   # sync
+        self._watchdog_end()
+        return res
 
     def _decode_window(self, cache, last_tok, active, rem, *, holders, gids):
         """Module-batched analogue of ``_decode_group``: ONE combined
@@ -1090,6 +1347,8 @@ class Engine:
                 jnp.asarray(active), jnp.asarray(rem), k)
         chunk = self.ecfg.decode_chunk if self.ecfg.mode == "continuous" else 1
         self._fwd_passes += chunk
+        if self._watchdog is not None:
+            self._watchdog.step_start()
         if self.residency:
             snap = self._resident_snap()
             for r in self.residency.values():
@@ -1104,6 +1363,7 @@ class Engine:
                 self._drain_prefetch(gids, retry_refused=True)
             res = (cache, np.array(tok)[:, 0], np.asarray(act2),
                    np.asarray(toks), np.asarray(emitted))   # sync
+            self._watchdog_end()
             hidden = {k: ((r.slot_of >= 0) & ~snap[k])
                       for k, r in self.residency.items()}
             for r in self.residency.values():
@@ -1114,8 +1374,10 @@ class Engine:
                                  hidden=hidden)
             return res
         cache, tok, act2, _, toks, emitted = self._decode_window_fn(*args)
-        return (cache, np.array(tok)[:, 0], np.asarray(act2),
-                np.asarray(toks), np.asarray(emitted))
+        res = (cache, np.array(tok)[:, 0], np.asarray(act2),
+               np.asarray(toks), np.asarray(emitted))   # sync
+        self._watchdog_end()
+        return res
 
     @staticmethod
     def _emit(toks, emitted, row_req):
@@ -1169,9 +1431,8 @@ class Engine:
                 # book the prompt's blocks (alloc/fetch/spill-to-make-room)
                 # before the slot-insert scatters through the page table
                 idx = self._slot_of(slot)
-                ops, ok, _ = self._kv.ensure_tokens(
-                    idx, len(eff), self.ecfg.block_tokens, (idx,))
-                self._kv_exec(ops)
+                _, ok, _ = self._kv_ensure(lambda: self._kv.ensure_tokens(
+                    idx, len(eff), self.ecfg.block_tokens, (idx,)))
                 assert ok, "admission exceeds the KV arena floor"
                 pooled = self._insert(self._compose_kv(group.cache, slot.gid),
                                       single, slot.row)
@@ -1217,11 +1478,10 @@ class Engine:
             # the slot flips to DECODE (the chunk attends to the scratch
             # ring, never to the pool row)
             idx = self._slot_of(slot)
-            ops, ok, _ = self._kv.ensure_range(
+            _, ok, _ = self._kv_ensure(lambda: self._kv.ensure_range(
                 idx, t // self.ecfg.block_tokens,
                 blocks_for_tokens(t + width, self.ecfg.block_tokens),
-                (idx,))
-            self._kv_exec(ops)
+                (idx,)))
             assert ok, "staged prefill chunk exceeds the KV arena floor"
             pooled = self._insert_span(
                 self._compose_kv(group.cache, slot.gid), self._stage_scratch,
@@ -1416,9 +1676,10 @@ class Engine:
                 gid = self._static_gids.pop(0)
                 rows = list(range(gid * mu, (gid + 1) * mu))
                 for i, r in enumerate(group):
-                    ops, ok, _ = self._kv.ensure_tokens(
-                        rows[i], r.input_len, self.ecfg.block_tokens, rows)
-                    self._kv_exec(ops)
+                    _, ok, _ = self._kv_ensure(
+                        lambda i=i, r=r: self._kv.ensure_tokens(
+                            rows[i], r.input_len, self.ecfg.block_tokens,
+                            rows))
                     assert ok, "static micro-batch exceeds the KV arena"
                 pooled = self._compose_kv(
                     kvcache.init_cache(self.cfg, mu, self.ecfg.max_seq,
@@ -1449,9 +1710,10 @@ class Engine:
         for i, r in enumerate(ab.requests):
             if not active[i]:
                 continue
-            ops, ok, _ = self._kv.ensure_tokens(
-                rows[i], r.footprint + 1, self.ecfg.block_tokens, protect)
-            self._kv_exec(ops)
+            _, ok, _ = self._kv_ensure(
+                lambda i=i, r=r: self._kv.ensure_tokens(
+                    rows[i], r.footprint + 1, self.ecfg.block_tokens,
+                    protect))
             assert ok, "static micro-batch exceeds the KV arena"
 
     def _kv_prepare_window_static(self, window) -> bool:
@@ -1468,10 +1730,10 @@ class Engine:
             for i, r in enumerate(ab.requests):
                 if not active[i]:
                     continue
-                ops, ok, _ = self._kv.ensure_tokens(
-                    ab.gid * mu + i, r.footprint + 1,
-                    self.ecfg.block_tokens, protect)
-                self._kv_exec(ops)
+                _, ok, _ = self._kv_ensure(
+                    lambda ab=ab, i=i, r=r: self._kv.ensure_tokens(
+                        ab.gid * mu + i, r.footprint + 1,
+                        self.ecfg.block_tokens, protect))
                 if not ok:
                     return False
         return True

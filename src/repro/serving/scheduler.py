@@ -56,6 +56,8 @@ class ServeRequest:
     done: bool = False
     aborted: bool = False
     preemptions: int = 0             # times evicted + re-queued (ewma mode)
+    priority: int = 0                # 0 = most important; higher = shed first
+    shed: bool = False               # aborted by degraded-mode backpressure
 
     @property
     def input_len(self) -> int:
@@ -120,6 +122,12 @@ class Scheduler:
         assert reserve_mode in ("worst", "ewma")
         self.reserve_mode = reserve_mode
         self.gen_ewma = GenLenEWMA(ewma_alpha)
+        # SLO-shed backpressure (degradation ladder's bottom rung): when
+        # set, NEW work with priority >= shed_priority is rejected at
+        # admission — load already admitted keeps its slots, so shedding
+        # never perturbs in-flight transcripts
+        self.shed_priority: Optional[int] = None
+        self.shed_count = 0
         self._rid = itertools.count()
         self.queue: List[ServeRequest] = []
         self.requests: Dict[int, ServeRequest] = {}
@@ -127,11 +135,25 @@ class Scheduler:
             [Slot(g, r) for r in range(ubatch)] for g in range(num_ubs)]
 
     # ------------------------------------------------------------- submit
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def _shed(self, req: ServeRequest) -> bool:
+        """Degraded-mode backpressure: reject the lowest-priority new
+        work while the ladder sits at admission_shed."""
+        if self.shed_priority is None or req.priority < self.shed_priority:
+            return False
+        req.aborted = True
+        req.done = True
+        req.shed = True
+        self.shed_count += 1
+        return True
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               priority: int = 0) -> int:
         rid = next(self._rid)
         prompt = np.asarray(prompt, np.int32)
-        req = ServeRequest(rid, prompt, max_new_tokens)
+        req = ServeRequest(rid, prompt, max_new_tokens, priority=priority)
         self.requests[rid] = req
+        if self._shed(req):
+            return rid
         if self.max_input_len is not None and \
                 len(prompt) + max_new_tokens > self.max_input_len:
             # prompt + generation must fit the per-slot ring width: a longer
@@ -156,6 +178,11 @@ class Scheduler:
         it actually has free, keeping the KV pool at its fixed budget."""
         cap = self.num_ubs if max_groups is None \
             else min(max_groups, self.num_ubs)
+        if self.shed_priority is not None:
+            # degraded-mode shed (same rule as admit_to_slots): only new
+            # work that has not generated anything is sheddable
+            self.queue = [r for r in self.queue
+                          if r.generated or not self._shed(r)]
         if not self.queue or cap <= 0:
             return []
         algo_reqs = [Request(r.rid, r.input_len, r.max_new_tokens)
@@ -222,6 +249,13 @@ class Scheduler:
         assigned: List[Slot] = []
         while self.queue:
             req = self.queue[0]
+            # degraded-mode shed: reject queued low-priority work that
+            # has not started (never a preempted request — its partial
+            # transcript must survive re-admission untouched)
+            if self.shed_priority is not None and not req.generated \
+                    and self._shed(req):
+                self.queue.pop(0)
+                continue
             # would it fit an *empty* partition — at worst case?  If not
             # it never will (preemption cannot shrink a solo request):
             # abort instead of livelocking at the queue head, and do it

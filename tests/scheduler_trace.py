@@ -16,7 +16,7 @@ and checks the lifecycle invariants after every tick:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.serving.scheduler import Scheduler, SlotState
 
@@ -25,6 +25,7 @@ from repro.serving.scheduler import Scheduler, SlotState
 class TraceResult:
     served: List[int] = field(default_factory=list)     # rids finished
     aborted: List[int] = field(default_factory=list)
+    shed: List[int] = field(default_factory=list)       # degraded-mode drops
     preemptions: int = 0
     ticks: int = 0
     max_group_footprint: int = 0
@@ -55,23 +56,37 @@ def check_invariants(sched: Scheduler, res: TraceResult) -> None:
         for s in grp:
             if s.state in (SlotState.FREE, SlotState.DRAINED):
                 assert s.req is None or s.state is SlotState.DRAINED
+    # degraded-mode shedding may only drop NEW work: a request with any
+    # transcript (admitted once, possibly preempted since) is never shed,
+    # and protected priorities are never shed at any rung
+    for r in sched.requests.values():
+        if r.shed:
+            assert not r.generated, "shed a request with a transcript"
+            assert r.aborted and r.done
 
 
 def run_trace(*, ubatch: int, num_ubs: int, cache_tokens: int,
               reserve_mode: str, requests: List[Tuple[int, int]],
               arrivals: List[int], chunk: int, prefill_chunk: int,
-              eos_draw, max_ticks: int = 2000) -> TraceResult:
+              eos_draw, priorities: Optional[List[int]] = None,
+              shed_window: Optional[Tuple[int, int]] = None,
+              shed_priority: int = 1,
+              max_ticks: int = 2000) -> TraceResult:
     """Drive a Scheduler through a full serving trace.
 
     requests: (prompt_len, max_new_tokens) pairs; arrivals[i] is the tick
     request i is submitted on.  eos_draw(rid, k) -> bool decides whether
-    the request hits EOS at its k-th generated token (1-based).  Returns
-    the TraceResult after the system fully drains."""
+    the request hits EOS at its k-th generated token (1-based).
+    shed_window=(a, b) turns degraded-mode admission shedding on for
+    ticks a <= t < b (the ladder's admission_shed rung), dropping new
+    work with priority >= shed_priority.  Returns the TraceResult after
+    the system fully drains."""
     sched = Scheduler(ubatch=ubatch, num_ubs=num_ubs,
                       cache_tokens=cache_tokens, gen_len=8,
                       max_input_len=None, reserve_mode=reserve_mode)
     res = TraceResult()
     pending = sorted(range(len(requests)), key=lambda i: arrivals[i])
+    prio = priorities or [0] * len(requests)
     rid_of = {}
 
     def finish(slot):
@@ -80,10 +95,14 @@ def run_trace(*, ubatch: int, num_ubs: int, cache_tokens: int,
 
     for tick in range(max_ticks):
         res.ticks = tick
+        if shed_window is not None:
+            sched.shed_priority = (shed_priority if shed_window[0] <= tick
+                                   < shed_window[1] else None)
         while pending and arrivals[pending[0]] <= tick:
             i = pending.pop(0)
             n, q = requests[i]
-            rid_of[i] = sched.submit(list(range(2, 2 + n)), q)
+            rid_of[i] = sched.submit(list(range(2, 2 + n)), q,
+                                     priority=prio[i])
 
         queue_before = [r.rid for r in sched.queue]
         admitted = sched.admit_to_slots()
@@ -136,10 +155,16 @@ def run_trace(*, ubatch: int, num_ubs: int, cache_tokens: int,
         raise AssertionError("trace did not drain (livelock?)")
 
     res.aborted = [r.rid for r in sched.requests.values() if r.aborted]
+    res.shed = [r.rid for r in sched.requests.values() if r.shed]
     # abort-or-admit: every request ended served or aborted, exactly once
+    # (shed requests are a flavour of abort — counted there, flagged here)
     assert sorted(res.served + res.aborted) == sorted(rid_of.values())
+    prio_of = {rid_of[i]: prio[i] for i in rid_of}
     for r in sched.requests.values():
         assert r.done
         if not r.aborted:
             assert 1 <= len(r.generated) <= r.max_new_tokens
+        if r.shed:
+            assert prio_of[r.rid] >= shed_priority, \
+                "shed a protected-priority request"
     return res

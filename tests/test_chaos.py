@@ -1,0 +1,208 @@
+"""Chaos verification for the fault-injected offload plane (DESIGN.md
+§10's acceptance gate).  North-star invariant: an injected fault
+schedule may cost throughput — retries, stalls, degradation rungs —
+but must NEVER change tokens.  Every schedule here sheds no request
+(priority-0 workload), so greedy transcripts must stay bit-identical
+to the fault-free run across kv-paged × expert-paged × module-batch ×
+overlap serving modes.
+
+The fuzzer is hypothesis-driven when hypothesis is installed (CI);
+the bare container runs the same property over seeded schedules, so
+tier-1 always exercises it.  benchmarks/bench_faults.py reports the
+same sweep as BENCH_faults.json."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.runtime.faults import FaultEvent, FaultPlan, LADDER_LEVELS
+
+# fault sites wired into the engine (tested below to stay in sync)
+SITES = ("kv_spill", "kv_fetch", "kv_pool", "expert_copy", "plan_drain",
+         "host_alloc", "dispatch")
+
+MODES = {
+    "plain": {},
+    "kv_paged": dict(kv_paged=True, kv_gpu_ratio=0.25, kv_prefetch=True),
+    "expert_paged": dict(expert_paged=True, w_gpu_ratio=0.5, prefetch=True,
+                         predict=True),
+    "expert_module_kv": dict(expert_paged=True, w_gpu_ratio=0.5,
+                             prefetch=True, predict=True, module_batch=True,
+                             kv_paged=True, kv_gpu_ratio=0.25,
+                             kv_prefetch=True),
+    "overlap_kv": dict(overlap=True, prefill_chunk=16, kv_paged=True,
+                       kv_gpu_ratio=0.25),
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models.params import init_params
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").smoke(),
+                              dtype="float32")
+    return cfg, init_params(cfg, jax.random.key(1))
+
+
+def _work(cfg, seed=0, n=8):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(2, cfg.vocab_size, int(rng.integers(4, 20))),
+             4 if i % 2 == 0 else 12) for i in range(n)]
+
+
+def _serve(cfg, params, work, **kw):
+    from repro.serving.engine import Engine, EngineConfig
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           decode_chunk=4, **kw))
+    for p, q in work:
+        eng.submit(p, q)                       # priority 0: nothing shed
+    return eng, eng.run_until_idle()
+
+
+def _schedule(seed):
+    """One seeded chaos schedule: probabilistic faults over every site
+    plus a scripted burst drawn from the seed (so every run sees at
+    least one concentrated fault window, not just scattered draws)."""
+    rng = np.random.default_rng(seed)
+    site = SITES[int(rng.integers(0, len(SITES)))]
+    kind = ("fail", "stall", "partial", "exhaust")[int(rng.integers(0, 4))]
+    return FaultPlan(
+        seed=seed,
+        probs={"*": {"fail": 0.06, "stall": 0.04, "partial": 0.04,
+                     "exhaust": 0.03, "hostmem": 0.01}},
+        trace=[FaultEvent(site, kind, after=int(rng.integers(0, 10)),
+                          count=int(rng.integers(1, 6)))],
+        stall_ms=float(rng.integers(50, 5000)),
+        max_faults=int(rng.integers(40, 200)))
+
+
+def _check_chaos(cfg, params, mode_kw, seed, baseline, work):
+    eng, out = _serve(cfg, params, work, fault_plan=_schedule(seed),
+                      degrade_down_after=2, degrade_up_after=5, **mode_kw)
+    assert out == baseline, f"tokens changed under fault seed {seed}"
+    ft = eng.fault_traffic()
+    assert ft["injected_total"] > 0, "schedule injected nothing"
+    assert ft["retries"] + ft["stalls"] + ft["injected_total"] > 0
+    if eng._kv is not None:
+        eng._kv.check_invariants()
+    for r in eng.residency.values():
+        # shrink/replica bookkeeping stayed coherent under faults
+        assert r.occupancy() <= r.capacity
+    return ft
+
+
+# ---------------------------------------------------------------------------
+# Fast tier-1 subset: every mode, a couple of seeds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_chaos_transcripts_stable_fast(setup, mode):
+    cfg, params = setup
+    work = _work(cfg)
+    _, baseline = _serve(cfg, params, work, **MODES[mode])
+    for seed in (0, 1):
+        _check_chaos(cfg, params, MODES[mode], seed, baseline, work)
+
+
+# ---------------------------------------------------------------------------
+# Ladder descent + full recovery, end to end
+# ---------------------------------------------------------------------------
+
+def test_ladder_full_round_trip_under_burst(setup):
+    """A sustained failure burst walks the ladder to its bottom rung;
+    a second fault-free wave of work walks it all the way back to
+    healthy.  Every step-down has a tested re-promotion, the engine's
+    degraded-mode flags all revert, and tokens never change — the
+    degraded second wave matches a fresh healthy engine bit-for-bit
+    (priority-0 work is never shed even at admission_shed)."""
+    cfg, params = setup
+    kw = dict(MODES["expert_module_kv"], watchdog=False)
+    work = _work(cfg, n=10)
+    _, baseline = _serve(cfg, params, work, **kw)
+    # p=0.9 expert-copy failures until the budget runs dry: the fault
+    # streak outlives many safe points, so the descent is enacted
+    plan = FaultPlan(seed=0, probs={"expert_copy": 0.9}, max_faults=150)
+    eng, out = _serve(cfg, params, work, fault_plan=plan,
+                      degrade_down_after=1, degrade_up_after=8, **kw)
+    assert out == baseline
+    ft = eng.fault_traffic()
+    downs = [e for e in ft["degradation_events"] if e["direction"] == "down"]
+    assert {e["to"] for e in downs} == set(LADDER_LEVELS[1:]), \
+        "burst never reached the bottom rung"
+    assert ft["retries"] > 0 and ft["injected_total"] > 0
+    assert ft["shed_requests"] == 0          # priority-0: nothing shed
+    # second wave, fault budget exhausted: abundant healthy ops walk
+    # the ladder back while serving — and still match a fresh engine
+    work2 = _work(cfg, seed=5, n=8)
+    _, base2 = _serve(cfg, params, work2, **kw)
+    rids = [eng.submit(p, q) for p, q in work2]
+    out2 = eng.run_until_idle()
+    assert [out2[r] for r in rids] == [base2[r] for r in sorted(base2)]
+    ft = eng.fault_traffic()
+    ups = [e for e in ft["degradation_events"] if e["direction"] == "up"]
+    downs = [e for e in ft["degradation_events"] if e["direction"] == "down"]
+    assert len(downs) == len(ups), "a step-down never re-promoted"
+    assert ft["level_name"] == "healthy"
+    # degraded-mode side effects all reverted
+    assert eng._mg == eng._mg_base
+    assert not eng._degraded_no_predict
+    assert eng.scheduler.shed_priority is None
+    for r in eng.residency.values():
+        assert r.limit is None
+
+
+def test_admission_shed_drops_only_sheddable_work(setup):
+    """With the ladder pinned at admission_shed, priority-1 submissions
+    are rejected at admission while priority-0 transcripts match the
+    healthy run of the same priority-0 subset."""
+    cfg, params = setup
+    kw = MODES["kv_paged"]
+    work = _work(cfg, n=6)
+    _, baseline = _serve(cfg, params, work, **kw)
+    from repro.serving.engine import Engine, EngineConfig
+    eng = Engine(cfg, params, EngineConfig(ubatch=2, num_ubs=2, max_seq=64,
+                                           decode_chunk=4, **kw))
+    eng._ladder.force_at_least("admission_shed", site="test")
+    rids0 = [eng.submit(p, q) for p, q in work]
+    rids1 = [eng.submit(p, q, priority=1) for p, q in work[:3]]
+    out = eng.run_until_idle()
+    assert {rid: out[rid] for rid in rids0} == baseline
+    for rid in rids1:
+        r = eng.scheduler.requests[rid]
+        assert r.shed and r.generated == []
+    assert eng.fault_traffic()["shed_requests"] == len(rids1)
+
+
+# ---------------------------------------------------------------------------
+# The fuzzer: hypothesis-driven when available, seeded sweep otherwise
+# ---------------------------------------------------------------------------
+
+_FUZZ_MODES = ("kv_paged", "expert_module_kv")
+
+
+def _fuzz_one(setup, mode, seed):
+    cfg, params = setup
+    work = _work(cfg, seed=1 + seed % 3)
+    _, baseline = _serve(cfg, params, work, **MODES[mode])
+    _check_chaos(cfg, params, MODES[mode], seed, baseline, work)
+
+
+if HAS_HYPOTHESIS:
+    @pytest.mark.slow
+    @given(mode=st.sampled_from(_FUZZ_MODES), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def test_chaos_fuzz(setup, mode, seed):
+        _fuzz_one(setup, mode, seed)
+else:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("mode", _FUZZ_MODES)
+    def test_chaos_fuzz(setup, mode):
+        for seed in range(2, 8):
+            _fuzz_one(setup, mode, seed)

@@ -1,0 +1,397 @@
+"""Unit suite for the fault-injected offload plane (DESIGN.md §10):
+FaultPlan determinism and scripted traces, TransferEngine retry /
+backoff / abort / stall accounting, the Watchdog EWMA fix (deadline
+updates on every step, including before an abort-policy raise), the
+DegradationLadder state machine with hysteresis, and scheduler
+SLO-shedding semantics.  The end-to-end chaos fuzz lives in
+tests/test_chaos.py."""
+import numpy as np
+import pytest
+
+from repro.runtime.faults import (FAULT_KINDS, LADDER_LEVELS,
+                                  DegradationLadder, FaultEvent,
+                                  FaultInjector, FaultPlan,
+                                  HostMemoryError, OffloadFaultError,
+                                  StallTimeout, TransientTransferError)
+from repro.runtime.transfer import TransferEngine
+from repro.runtime.watchdog import StragglerError, Watchdog
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def _draw_seq(plan, site, n=200):
+    return [(ev.kind if ev else None) for ev in
+            (plan.draw(site) for _ in range(n))]
+
+
+def test_plan_deterministic_per_seed():
+    """Same seed → identical draw sequence (the chaos fuzzer's premise);
+    different seed → different sequence."""
+    probs = {"*": {"fail": 0.1, "stall": 0.1, "exhaust": 0.05}}
+    a = _draw_seq(FaultPlan(seed=3, probs=probs), "kv_fetch")
+    b = _draw_seq(FaultPlan(seed=3, probs=probs), "kv_fetch")
+    c = _draw_seq(FaultPlan(seed=4, probs=probs), "kv_fetch")
+    assert a == b
+    assert a != c
+    assert any(k is not None for k in a)
+
+
+def test_scripted_trace_window():
+    """A scripted event fires exactly on ops [after, after+count) of its
+    own site and nowhere else."""
+    plan = FaultPlan(trace=[FaultEvent("kv_fetch", "fail", after=2,
+                                       count=3)])
+    kinds = _draw_seq(plan, "kv_fetch", n=8)
+    assert kinds == [None, None, "fail", "fail", "fail", None, None, None]
+    assert _draw_seq(plan, "kv_spill", n=8) == [None] * 8
+
+
+def test_scripted_wins_over_probabilistic():
+    plan = FaultPlan(seed=0, probs={"x": 1.0},
+                     trace=[FaultEvent("x", "stall", after=0, count=1,
+                                       stall_ms=99.0)])
+    ev = plan.draw("x")
+    assert ev.kind == "stall" and ev.stall_ms == 99.0
+
+
+def test_max_faults_bounds_injections():
+    plan = FaultPlan(seed=0, probs={"*": 1.0}, max_faults=5)
+    kinds = _draw_seq(plan, "s", n=50)
+    assert sum(k is not None for k in kinds) == 5
+    assert plan.injected == 5
+
+
+def test_per_site_probability_isolation():
+    """A site-specific prob only fires at that site; '*' covers the
+    rest."""
+    plan = FaultPlan(seed=0, probs={"only_here": 1.0})
+    assert all(k == "fail" for k in _draw_seq(plan, "only_here", 10))
+    assert all(k is None for k in _draw_seq(plan, "elsewhere", 10))
+
+
+def test_injector_counts_and_raise_for():
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("host_alloc", "hostmem", after=0, count=1),
+               FaultEvent("host_alloc", "fail", after=1, count=1)]))
+    with pytest.raises(HostMemoryError) as ei:
+        inj.raise_for("host_alloc")
+    assert ei.value.site == "host_alloc"
+    with pytest.raises(HostMemoryError):       # probe site: every hard
+        inj.raise_for("host_alloc")            # kind is an alloc failure
+    inj.raise_for("host_alloc")                    # past the window: no-op
+    assert inj.counts == {"host_alloc/hostmem": 1, "host_alloc/fail": 1}
+    assert inj.total() == 2
+    assert isinstance(ei.value, OffloadFaultError)
+
+
+def test_unarmed_injector_is_noop():
+    inj = FaultInjector()
+    assert not inj.armed
+    assert inj.fire("x") is None
+    assert inj.stall_s("x") == 0.0
+    inj.raise_for("x")
+    assert inj.total() == 0
+
+
+def test_fault_kinds_closed():
+    with pytest.raises(AssertionError):
+        FaultEvent("s", "meteor_strike")
+    assert set(FAULT_KINDS) == {"fail", "stall", "partial", "hostmem",
+                                "exhaust"}
+
+
+# ---------------------------------------------------------------------------
+# TransferEngine
+# ---------------------------------------------------------------------------
+
+def test_transfer_retries_then_succeeds():
+    """N injected fails within budget cost N retries, zero aborts, and
+    the op's side effect runs exactly once (injection fires before the
+    closure, so a retried donated-buffer write never re-executes)."""
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("t", "fail", after=0, count=3)]))
+    eng = TransferEngine(inj, max_retries=4)
+    ran = []
+    out = eng.run("t", lambda: ran.append(1) or "ok", nbytes=128)
+    assert out == "ok" and ran == [1]
+    assert eng.retries == 3 and eng.aborts == 0 and eng.ok_ops == 1
+    assert eng.bytes_moved == 128
+
+
+def test_transfer_abort_after_budget():
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("t", "fail", after=0, count=10)]))
+    eng = TransferEngine(inj, max_retries=2)
+    with pytest.raises(TransientTransferError):
+        eng.run("t", lambda: "never")
+    assert eng.retries == 2 and eng.aborts == 1 and eng.ok_ops == 0
+
+
+def test_run_mandatory_survives_exhausted_cycles():
+    """A mandatory op outlives its retry budget: exhausted cycles book
+    aborts but the op still lands once the burst passes."""
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("t", "fail", after=0, count=7)]))
+    eng = TransferEngine(inj, max_retries=2)
+    assert eng.run_mandatory("t", lambda: "landed") == "landed"
+    assert eng.retries + eng.aborts * 0 >= 1
+    assert eng.aborts >= 1 and eng.ok_ops == 1
+
+
+def test_run_mandatory_hostmem_hook_then_reissue():
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("t", "hostmem", after=0, count=1)]))
+    eng = TransferEngine(inj)
+    demoted = []
+    out = eng.run_mandatory("t", lambda: "ok",
+                            on_hostmem=lambda: demoted.append(1))
+    assert out == "ok" and demoted == [1]
+    assert eng.hostmem_faults == 1
+
+
+def test_hostmem_without_hook_propagates():
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("t", "hostmem", after=0, count=1)]))
+    eng = TransferEngine(inj)
+    with pytest.raises(HostMemoryError):
+        eng.run_mandatory("t", lambda: "ok")
+
+
+def test_injected_stall_books_and_aborts_by_policy():
+    """A virtual stall far beyond the EWMA deadline books a stall (log
+    policy) or raises StallTimeout (abort policy) — deterministically,
+    with no real sleeping."""
+    def mk(policy):
+        inj = FaultInjector(FaultPlan(
+            trace=[FaultEvent("t", "stall", after=3, count=1,
+                              stall_ms=60_000.0)]))
+        return TransferEngine(inj, min_deadline_s=1e-4,
+                              deadline_factor=2.0, stall_policy=policy)
+    eng = mk("log")
+    for _ in range(4):
+        eng.run("t", lambda: None)
+    assert eng.stalls == 1 and eng.ok_ops == 4
+    eng = mk("abort")
+    for _ in range(3):
+        eng.run("t", lambda: None)
+    with pytest.raises(StallTimeout):
+        eng.run("t", lambda: None)
+
+
+def test_transfer_feeds_ladder():
+    ladder = DegradationLadder(down_after=2, up_after=3)
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("t", "fail", after=0, count=2)]))
+    eng = TransferEngine(inj, max_retries=4, ladder=ladder)
+    eng.run("t", lambda: None)
+    assert ladder.pending() and ladder.target == 1
+
+
+def test_stats_shape():
+    eng = TransferEngine()
+    eng.run("a", lambda: None, nbytes=10)
+    s = eng.stats()
+    assert s["ok_ops"] == 1 and s["bytes_moved"] == 10
+    assert "a" in s["deadline_s"]
+
+
+# ---------------------------------------------------------------------------
+# Watchdog (satellite: EWMA must update on EVERY step)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_ewma_updates_every_step():
+    """Regression: the EWMA used to seed only on the first step and then
+    never move; observe() must fold every in-deadline sample in."""
+    wd = Watchdog(deadline_factor=10.0, min_deadline_s=0.0)
+    wd.observe(1.0)
+    assert wd.ewma == pytest.approx(1.0)
+    wd.observe(2.0)
+    assert wd.ewma > 1.0                     # moved — not frozen at the seed
+    assert wd.steps_seen == 2
+
+
+def test_watchdog_zero_first_step_does_not_reseed():
+    """Seeding is by step count, not by value: a 0.0-duration first step
+    must not leave the EWMA permanently re-seedable."""
+    wd = Watchdog(deadline_factor=10.0, min_deadline_s=1.0)
+    wd.observe(0.0)
+    wd.observe(5.0)
+    e1 = wd.ewma
+    assert e1 > 0.0
+    wd.observe(5.0)
+    assert wd.ewma > e1
+
+
+def test_watchdog_updates_before_abort_raise():
+    """The violating sample (deadline-clipped) must reach the EWMA even
+    when the abort policy raises — one straggler neither poisons nor
+    freezes the estimate."""
+    wd = Watchdog(deadline_factor=2.0, min_deadline_s=0.0, policy="abort")
+    wd.observe(1.0)
+    before = wd.ewma
+    with pytest.raises(StragglerError):
+        wd.observe(100.0)
+    assert wd.steps_seen == 2 and wd.slow_steps == 1
+    assert before < wd.ewma <= before + wd.alpha * 2.0 * before + 1e-9
+
+
+def test_watchdog_step_end_virtual_seconds():
+    wd = Watchdog(deadline_factor=1.5, min_deadline_s=1e-4)
+    wd.step_start()
+    assert wd.step_end()                           # real dt ~ 0: fine
+    wd.step_start()
+    assert not wd.step_end(extra_s=10.0)           # injected stall violates
+    assert wd.slow_steps == 1
+
+
+# ---------------------------------------------------------------------------
+# DegradationLadder
+# ---------------------------------------------------------------------------
+
+def test_ladder_down_after_threshold_and_one_rung_per_apply_loop():
+    lad = DegradationLadder(down_after=3, up_after=5)
+    for _ in range(2):
+        lad.note_fault("kv_fetch")
+    assert not lad.pending()
+    lad.note_fault("kv_fetch")
+    assert lad.pending() and lad.target == 1
+    steps = []
+    evs = lad.apply(lambda o, n, d: steps.append((o, n, d)), tick=7)
+    assert steps == [(0, 1, "down")]
+    assert lad.level == 1 and lad.level_name == "pageable_host"
+    assert evs[0]["reason"] == "kv_fetch" and evs[0]["tick"] == 7
+
+
+def test_ladder_hysteresis_up_slower_than_down():
+    lad = DegradationLadder(down_after=2, up_after=6)
+    for _ in range(2):
+        lad.note_fault("x")
+    lad.apply()
+    for _ in range(5):
+        lad.note_ok()
+    assert not lad.pending()                 # 5 < up_after: stays degraded
+    lad.note_ok()
+    assert lad.pending() and lad.target == 0
+    lad.apply()
+    assert lad.level == 0
+    assert lad.demotions == 1 and lad.promotions == 1
+    with pytest.raises(AssertionError):
+        DegradationLadder(down_after=3, up_after=3)   # no hysteresis band
+
+
+def test_ladder_ok_resets_fault_streak():
+    lad = DegradationLadder(down_after=3, up_after=4)
+    lad.note_fault("x")
+    lad.note_fault("x")
+    lad.note_ok()
+    lad.note_fault("x")
+    lad.note_fault("x")
+    assert not lad.pending()                 # streak broken by the ok
+
+
+def test_ladder_force_at_least_and_multi_rung_apply():
+    lad = DegradationLadder(down_after=2, up_after=3)
+    lad.force_at_least("lockstep", site="host_alloc")
+    assert lad.target == LADDER_LEVELS.index("lockstep")
+    crossings = []
+    lad.apply(lambda o, n, d: crossings.append((LADDER_LEVELS[n], d)))
+    assert crossings == [("pageable_host", "down"), ("no_predict", "down"),
+                         ("lockstep", "down")]
+    # force never promotes
+    lad.force_at_least("pageable_host")
+    assert not lad.pending()
+
+
+def test_ladder_full_descent_and_recovery_events_pair_up():
+    """Every rung stepped down has a matching re-promotion, and the
+    event log records the whole round trip in order."""
+    lad = DegradationLadder(down_after=1, up_after=2)
+    for _ in range(len(LADDER_LEVELS) + 3):     # clamped at the bottom
+        lad.note_fault("s")
+    lad.apply(tick=1)
+    assert lad.level == len(LADDER_LEVELS) - 1
+    assert lad.level_name == "admission_shed"
+    for _ in range(2 * len(LADDER_LEVELS)):
+        lad.note_ok()
+        lad.apply(tick=2)
+    assert lad.level == 0 and lad.level_name == "healthy"
+    downs = [e for e in lad.events if e["direction"] == "down"]
+    ups = [e for e in lad.events if e["direction"] == "up"]
+    assert len(downs) == len(ups) == len(LADDER_LEVELS) - 1
+    assert [e["to"] for e in downs] == list(LADDER_LEVELS[1:])
+    assert [e["to"] for e in ups] == list(reversed(LADDER_LEVELS[:-1]))
+    assert [e["seq"] for e in lad.events] == list(range(len(lad.events)))
+
+
+def test_ladder_max_level_clamp():
+    lad = DegradationLadder(down_after=1, up_after=2, max_level=2)
+    for _ in range(50):
+        lad.note_fault("s")
+    lad.apply()
+    assert lad.level == 2
+    lad.force_at_least("admission_shed")
+    lad.apply()
+    assert lad.level == 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler SLO-shedding
+# ---------------------------------------------------------------------------
+
+def _sched(**kw):
+    from repro.serving.scheduler import Scheduler
+    return Scheduler(ubatch=2, num_ubs=2, cache_tokens=512, gen_len=8,
+                     max_input_len=64, **kw)
+
+
+def test_shed_disabled_by_default():
+    s = _sched()
+    rid = s.submit(np.arange(4), 4, priority=5)
+    assert not s.requests[rid].shed and s.queue
+
+
+def test_shed_priority_threshold_at_submit():
+    s = _sched()
+    s.shed_priority = 1
+    keep = s.submit(np.arange(4), 4, priority=0)
+    drop = s.submit(np.arange(4), 4, priority=1)
+    assert not s.requests[keep].shed
+    r = s.requests[drop]
+    assert r.shed and r.aborted and r.done and not r.generated
+    assert s.shed_count == 1
+    assert [q.rid for q in s.queue] == [keep]
+
+
+def test_shed_queued_but_never_preempted_requests():
+    """Turning shedding on shed-ls queued NEW work at admission, but a
+    preempted request (partial transcript) is never shed — its tokens
+    must survive."""
+    s = _sched()
+    a = s.submit(np.arange(4), 6, priority=1)
+    b = s.submit(np.arange(4), 6, priority=1)
+    slots = s.admit_to_slots()
+    assert [sl.req.rid for sl in slots] == [a, b]
+    for sl in slots:
+        s.start_decode(sl)
+    s.requests[a].generated.extend([7, 8])         # a has output
+    s.preempt(next(sl for sl in slots if sl.req.rid == a))
+    c = s.submit(np.arange(4), 6, priority=1)      # queued, no output
+    s.shed_priority = 1
+    admitted = s.admit_to_slots()
+    assert [sl.req.rid for sl in admitted] == [a]  # re-admitted, not shed
+    assert s.requests[a].generated == [7, 8]
+    assert s.requests[c].shed and not s.requests[a].shed
+    assert s.shed_count == 1
+
+
+def test_shed_static_admit_path():
+    s = _sched()
+    s.shed_priority = 2
+    s.submit(np.arange(4), 4, priority=0)
+    s.submit(np.arange(4), 4, priority=3)
+    mbs = s.admit()
+    admitted = {r.rid for mb in mbs for r in mb}
+    assert admitted == {0}
+    assert s.requests[1].shed and s.shed_count == 1

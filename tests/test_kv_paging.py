@@ -305,3 +305,82 @@ def test_int8_kv_paged_matches_dense():
     _, dense = _serve(cfg, params, work)
     _, paged = _serve(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25)
     assert paged == dense
+
+
+# ---------------------------------------------------------------------------
+# Concurrent faults: injected fetch/pool failures + budget preemption
+# ---------------------------------------------------------------------------
+
+def test_injected_pool_exhaustion_refusal_shape():
+    """An injected 'exhaust' makes ensure_range refuse exactly like a
+    real full arena — empty plan, resume point unchanged — and flags
+    the refusal as injected so the engine retries instead of
+    preempting; invariants hold throughout."""
+    from repro.runtime.faults import FaultEvent, FaultInjector, FaultPlan
+    inj = FaultInjector(FaultPlan(
+        trace=[FaultEvent("kv_pool", "exhaust", after=1, count=1)]))
+    pool = BlockPool(n_slots=2, blocks_per_slot=4, device_blocks=8,
+                     block_bytes=64, faults=inj)
+    _, ok, _ = pool.ensure_tokens(0, 8, 4, protect=(0,))
+    assert ok and not pool.last_refusal_injected
+    ops, ok, nxt = pool.ensure_range(0, 2, 4, protect=(0,))
+    assert not ok and pool.last_refusal_injected
+    assert ops == [] and nxt == 2
+    pool.check_invariants()
+    _, ok, _ = pool.ensure_range(0, 2, 4, protect=(0,))   # retry: lands
+    assert ok and not pool.last_refusal_injected
+    pool.check_invariants()
+
+
+def test_concurrent_faults_with_budget_preemption(mixtral_setup):
+    """The satellite acceptance: injected mid-dispatch fetch failures
+    AND arena-exhaustion recompute-preemption in the same rotation
+    groups (tight ewma budget forces real preemptions while the fault
+    plan fails fetches and fakes pool exhaustion).  Free-list
+    conservation, map invariants, and slot-state coherence must hold,
+    and transcripts stay bit-identical to the fault-free run of the
+    same tight-budget config."""
+    from repro.runtime.faults import FaultPlan
+    from repro.serving.scheduler import SlotState
+    cfg, params = mixtral_setup
+    # longer generations against a tight optimistic budget: enforce_budget
+    # must preempt mid-run (recompute preemption) in the same groups the
+    # fault plan is failing fetches in
+    work = [(p, q + 8) for p, q in _skewed_work(cfg, seed=11)]
+    # cache_tokens=64 = two 16-token blocks per row: a long row crossing
+    # its third block while sharing a group must evict its partner
+    tight = dict(kv_paged=True, kv_gpu_ratio=0.3, reserve_mode="ewma",
+                 cache_tokens=64)
+    base_eng, baseline = _serve(cfg, params, work, **tight)
+    base_preempts = sum(r.preemptions
+                       for r in base_eng.scheduler.requests.values())
+    plan = FaultPlan(seed=4,
+                     probs={"kv_fetch": {"fail": 0.4},
+                            "kv_pool": {"exhaust": 0.2},
+                            "kv_spill": {"fail": 0.25}},
+                     max_faults=120)
+    eng, out = _serve(cfg, params, work, fault_plan=plan, **tight)
+    assert out == baseline
+    preempts = sum(r.preemptions for r in eng.scheduler.requests.values())
+    assert base_preempts > 0 and preempts > 0, \
+        "budget never preempted: the concurrency this test exists for " \
+        "did not happen"
+    ft = eng.fault_traffic()
+    assert ft["injected"].get("kv_fetch/fail", 0) > 0
+    assert ft["injected"].get("kv_pool/exhaust", 0) > 0
+    assert ft["retries"] > 0
+    pool = eng._kv
+    pool.check_invariants()
+    # free-list conservation: every device/host block is free xor owned
+    assert len(pool.free_dev) + int((pool.dev >= 0).sum()) \
+        == pool.device_blocks
+    assert len(set(pool.free_dev)) == len(pool.free_dev)
+    assert len(set(pool.free_host)) == len(pool.free_host)
+    # slot-state coherence: drained requests hold no blocks; live rows
+    # only map blocks for slots the scheduler says are live
+    for grp in eng.scheduler.slots:
+        for s in grp:
+            idx = eng._slot_of(s)
+            if s.state == SlotState.FREE:
+                assert not pool.slot_in_use(idx), \
+                    f"FREE slot {idx} still owns blocks"

@@ -259,3 +259,84 @@ def test_write_decode_paged_not_on_hot_path(monkeypatch):
                       policy=policy)
         assert out                           # the serve actually decoded
     assert calls["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Recoverable fall-back: pinned → pageable → (re-probe) → pinned
+# ---------------------------------------------------------------------------
+
+def test_engine_demotes_to_pageable_on_injected_hostmem(fake_pinned):
+    """An injected pinned-allocation failure at init falls the engine
+    back to the pageable-numpy tier (recoverable: no process-wide
+    latch), forces the ladder's pageable_host rung, and transcripts
+    still match the dense ring."""
+    from repro.runtime.faults import FaultEvent, FaultPlan
+    cfg, params = _smoke()
+    work = _work(cfg)
+    _, dense = _run(cfg, params, work)
+    plan = FaultPlan(trace=[FaultEvent("host_alloc", "hostmem",
+                                       after=0, count=1)])
+    eng, paged = _run(cfg, params, work, kv_paged=True, kv_gpu_ratio=0.25,
+                      fault_plan=plan)
+    assert not eng._kv_pinned                  # fell back at the probe
+    assert all(isinstance(a, np.ndarray) for g in eng._kv_host.values()
+               for a in g.values())
+    assert paged == dense
+    ft = eng.fault_traffic()
+    assert ft["injected"].get("host_alloc/hostmem") == 1
+
+
+def test_host_tier_demote_then_repromote_round_trip(fake_pinned):
+    """The satellite acceptance: mid-run demotion to pageable AND the
+    ladder's re-promotion back to pinned, with block bytes preserved
+    across both transitions (transcripts identical to dense)."""
+    cfg, params = _smoke()
+    work = _work(cfg, seed=7, n=6)
+    _, dense = _run(cfg, params, work)
+    eng = Engine(cfg, params, EngineConfig(
+        ubatch=2, num_ubs=2, max_seq=64, decode_chunk=4,
+        kv_paged=True, kv_gpu_ratio=0.25))
+    assert eng._kv_pinned
+    for p, q in work:
+        eng.submit(p, q)
+    # run a few steps so the host tier holds real spilled blocks
+    for _ in range(3):
+        eng.step()
+    eng._demote_host_tier()
+    assert not eng._kv_pinned
+    assert all(isinstance(a, np.ndarray) for g in eng._kv_host.values()
+               for a in g.values())
+    assert eng._ladder.pending()               # rung recorded for next tick
+    for _ in range(2):
+        eng.step()                             # serves on the pageable tier
+    eng._repromote_host_tier()
+    assert eng._kv_pinned                      # probe succeeded: pinned again
+    assert all(isinstance(a, jax.Array) for g in eng._kv_host.values()
+               for a in g.values())
+    out = eng.run_until_idle()
+    assert out == dense
+
+
+def test_repromote_stays_pageable_when_probe_still_fails(no_pinned):
+    """Re-promotion is honest: when the re-probe still finds no pinned
+    space the tier stays pageable (and serving continues unharmed)."""
+    cfg, params = _smoke()
+    eng = Engine(cfg, params, EngineConfig(
+        ubatch=2, num_ubs=2, max_seq=64, decode_chunk=4,
+        kv_paged=True, kv_gpu_ratio=0.25))
+    assert not eng._kv_pinned
+    eng._repromote_host_tier()
+    assert not eng._kv_pinned
+    for p, q in _work(cfg, seed=9, n=2):
+        eng.submit(p, q)
+    assert eng.run_until_idle()
+
+
+def test_reset_host_probe_rearms_warning(no_pinned):
+    """reset_host_probe clears the warn-once latch, so a recurring
+    fall-back is observable per occurrence, not once per process."""
+    with pytest.warns(offload.HostOffloadFallbackWarning):
+        offload.pinned_host_sharding()
+    offload.reset_host_probe()
+    with pytest.warns(offload.HostOffloadFallbackWarning):
+        offload.pinned_host_sharding()

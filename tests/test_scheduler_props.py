@@ -40,7 +40,7 @@ trace_params = dict(
 
 
 def _run(reserve_mode, ubatch, num_ubs, cache_tokens, chunk, prefill_chunk,
-         requests, arrival_gaps, eos_salt, eos_mod):
+         requests, arrival_gaps, eos_salt, eos_mod, **shed_kw):
     arrivals, t = [], 0
     for i in range(len(requests)):
         t += arrival_gaps[i]
@@ -49,7 +49,7 @@ def _run(reserve_mode, ubatch, num_ubs, cache_tokens, chunk, prefill_chunk,
         ubatch=ubatch, num_ubs=num_ubs, cache_tokens=cache_tokens,
         reserve_mode=reserve_mode, requests=requests, arrivals=arrivals,
         chunk=chunk, prefill_chunk=prefill_chunk,
-        eos_draw=_eos_draw_from(eos_salt, eos_mod))
+        eos_draw=_eos_draw_from(eos_salt, eos_mod), **shed_kw)
 
 
 @settings(max_examples=150, deadline=None)
@@ -78,3 +78,22 @@ def test_ewma_never_serves_fewer_requests(**kw):
     b = _run("ewma", **kw)
     assert sorted(a.served) == sorted(b.served)
     assert sorted(a.aborted) == sorted(b.aborted)
+
+
+@settings(max_examples=100, deadline=None)
+@given(priorities=st.lists(st.integers(0, 2), min_size=24, max_size=24),
+       shed_a=st.integers(0, 12), shed_len=st.integers(0, 20),
+       reserve_mode=st.sampled_from(["worst", "ewma"]),
+       **trace_params)
+def test_admission_shed_drops_only_sheddable_work(priorities, shed_a,
+                                                  shed_len, reserve_mode,
+                                                  **kw):
+    """Degraded-mode shedding (the ladder's admission_shed rung) on any
+    trace and any shed window: only NEW priority>=1 work is dropped,
+    requests with transcripts (admitted, possibly preempted) and
+    priority-0 work always survive, and the trace still drains with
+    every rid accounted for — the per-tick driver asserts the rest."""
+    res = _run(reserve_mode, priorities=priorities[:len(kw["requests"])],
+               shed_window=(shed_a, shed_a + shed_len), shed_priority=1,
+               **kw)
+    assert not set(res.shed) & set(res.served)

@@ -39,6 +39,32 @@ def test_random_traces_uphold_invariants(seed, reserve_mode):
     assert len(res.served) + len(res.aborted) == n
 
 
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("reserve_mode", ["worst", "ewma"])
+def test_shed_traces_drop_only_sheddable_work(seed, reserve_mode):
+    """Seeded half of the admission-shed property (the hypothesis twin
+    lives in test_scheduler_props.py): a shed window over a mixed-priority
+    trace drops only new priority>=1 work, never anything with a
+    transcript, and the trace still drains fully accounted."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(6, 20))
+    requests = [(int(rng.integers(1, 24)), int(rng.integers(1, 12)))
+                for _ in range(n)]
+    arrivals = sorted(int(rng.integers(0, 12)) for _ in range(n))
+    priorities = [int(rng.integers(0, 3)) for _ in range(n)]
+    a = int(rng.integers(0, 8))
+    res = run_trace(
+        ubatch=int(rng.integers(1, 4)), num_ubs=int(rng.integers(1, 4)),
+        cache_tokens=int(rng.integers(8, 64)), reserve_mode=reserve_mode,
+        requests=requests, arrivals=arrivals,
+        chunk=int(rng.integers(1, 8)), prefill_chunk=int(rng.integers(1, 8)),
+        eos_draw=_eos_hash(seed, 5) if seed % 2 else _eos_none,
+        priorities=priorities, shed_window=(a, a + int(rng.integers(0, 16))),
+        shed_priority=1)
+    assert len(res.served) + len(res.aborted) == n
+    assert not set(res.shed) & set(res.served)
+
+
 def test_ewma_tracks_observations():
     e = GenLenEWMA(alpha=0.5)
     assert e.expected(40) == 40                    # no signal: worst case
